@@ -1,0 +1,72 @@
+"""Render the §Roofline markdown table from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.render_roofline \
+        [--glob 'artifacts/dryrun_final/*.json'] [--out artifacts/roofline_table.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def load(pattern: str):
+    seen = {}
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            for rec in json.load(f):
+                key = (rec["arch"], rec["shape"], rec.get("mesh", "?"))
+                seen[key] = rec
+    return seen
+
+
+def render(seen, mesh_filter=None) -> str:
+    lines = [
+        "| arch | shape | mesh | t_comp s | t_mem s | t_coll s | dominant "
+        "| useful | roofline_frac | GiB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), rec in sorted(seen.items()):
+        if mesh_filter and mesh != mesh_filter:
+            continue
+        if rec.get("status") == "skipped":
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | — | — | — | N/A (declared "
+                f"skip) | — | — | — | — |"
+            )
+            continue
+        if rec.get("status") != "ok":
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | FAILED | | | | | | | |"
+            )
+            continue
+        r = rec["roofline"]
+        mem = rec.get("memory", {})
+        gib = mem.get("peak_per_device", 0) / 2**30
+        lines.append(
+            f"| {arch} | {shape} | {mesh} "
+            f"| {r['t_compute']:.3f} | {r['t_memory']:.3f} "
+            f"| {r['t_collective']:.3f} | **{r['dominant']}** "
+            f"| {r['useful_flops_frac'] and round(r['useful_flops_frac'], 3)} "
+            f"| {r['roofline_frac'] and round(r['roofline_frac'], 4)} "
+            f"| {gib:.2f} | {mem.get('fits_v5e', '—')} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--glob", default="artifacts/dryrun_final/*.json")
+    ap.add_argument("--out", default="artifacts/roofline_table.md")
+    args = ap.parse_args()
+    seen = load(args.glob)
+    md = "# Roofline table (all meshes)\n\n" + render(seen) + "\n"
+    with open(args.out, "w") as f:
+        f.write(md)
+    print(md)
+    print(f"\nwrote {args.out} ({len(seen)} cells)")
+
+
+if __name__ == "__main__":
+    main()

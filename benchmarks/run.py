@@ -1,0 +1,234 @@
+"""Benchmark harness.  One function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``derived`` carries the
+figure-of-merit for the row (points/s, coarsening exponent, roofline
+fraction, ...).
+
+    PYTHONPATH=src python -m benchmarks.run            # standard set
+    PYTHONPATH=src python -m benchmarks.run --full     # + Fig-1 physics run
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.timing import time_call
+
+
+# ---------------------------------------------------------------------------
+# paper §IV.A — generic stencil application throughput
+# ---------------------------------------------------------------------------
+
+
+def bench_stencil_sweep():
+    from repro.core.stencil import central_difference_weights, stencil_create_2d
+
+    rows = []
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.standard_normal((1024, 1024)))
+    cases = [
+        ("x_order2", "x", central_difference_weights(2, 2)),
+        ("x_order8", "x", central_difference_weights(8, 2)),
+        ("y_order8", "y", central_difference_weights(8, 2)),
+        ("xy_biharmonic", "xy", None),
+    ]
+    from repro.core.cahn_hilliard import biharmonic_weights
+
+    for name, direction, w in cases:
+        if w is None:
+            w = biharmonic_weights()
+        for bc in ("periodic", "np"):
+            plan = stencil_create_2d(
+                direction, bc, weights=jnp.asarray(w), backend="jnp"
+            )
+            fn = jax.jit(plan.apply)
+            us = time_call(fn, data)
+            mpts = data.size / us  # points per microsecond
+            rows.append((f"stencil_{name}_{bc}_1024", us, f"{mpts:.1f}Mpt/s"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# paper ref [13] — batched pentadiagonal solves (cuPentBatch table)
+# ---------------------------------------------------------------------------
+
+
+def bench_penta_batch():
+    from repro.kernels.penta import (
+        cyclic_penta_factor,
+        cyclic_penta_solve_factored,
+        hyperdiffusion_diagonals,
+    )
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for m, n in [(256, 256), (1024, 1024), (2048, 512)]:
+        fac = cyclic_penta_factor(*hyperdiffusion_diagonals(m, 0.4))
+        rhs = jnp.asarray(rng.standard_normal((m, n)))
+        fn = jax.jit(lambda r, f=fac: cyclic_penta_solve_factored(f, r))
+        us = time_call(fn, rhs)
+        rows.append(
+            (f"penta_cyclic_{m}x{n}", us, f"{m*n/us:.1f}Munk/s")
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# paper §IV.C — WENO advection step
+# ---------------------------------------------------------------------------
+
+
+def bench_weno_step():
+    from repro.core.weno import (
+        AdvectionConfig,
+        WenoAdvection2D,
+        gaussian_blob,
+        solid_body_rotation,
+    )
+
+    rows = []
+    for n in (256, 512):
+        cfg = AdvectionConfig(nx=n, ny=n, backend="jnp")
+        solver = WenoAdvection2D(cfg)
+        q = gaussian_blob(cfg, x0=np.pi, y0=np.pi, sigma=0.5)
+        u, v = solid_body_rotation(cfg)
+        dt = float(solver.dt_cfl(u, v))
+        fn = jax.jit(lambda q: solver.step(q, u, v, dt))
+        us = time_call(fn, q)
+        rows.append((f"weno_rk3_step_{n}", us, f"{n*n/us:.1f}Mpt/s"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# paper §V — Cahn–Hilliard ADI step time (the cuCahnPentADI workload)
+# ---------------------------------------------------------------------------
+
+
+def bench_cahn_hilliard_step():
+    from repro.core.cahn_hilliard import (
+        CahnHilliardADI,
+        CHConfig,
+        deep_quench_ic,
+    )
+
+    rows = []
+    for n in (128, 256, 512):
+        for mode in ("stencil", "fused"):
+            cfg = CHConfig(nx=n, ny=n, dt=1e-3, rhs_mode=mode, backend="jnp")
+            solver = CahnHilliardADI(cfg)
+            c0 = deep_quench_ic(n, n, seed=0)
+            c1 = solver.initial_step(c0)
+            fn = jax.jit(lambda a, b: solver.step(a, b))
+            us = time_call(fn, c1, c0)
+            rows.append(
+                (f"ch_step_{mode}_{n}", us, f"{n*n/us:.1f}Mpt/s")
+            )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# paper Fig. 1 — coarsening physics (reduced resolution; --full only)
+# ---------------------------------------------------------------------------
+
+
+def bench_coarsening_fig1():
+    from repro.core.cahn_hilliard import (
+        CahnHilliardADI,
+        CHConfig,
+        coarsening_metrics,
+        deep_quench_ic,
+    )
+    from repro.core.metrics import fit_power_law
+
+    cfg = CHConfig(nx=256, ny=256, dt=2e-3, rhs_mode="fused", backend="jnp")
+    solver = CahnHilliardADI(cfg)
+    c0 = deep_quench_ic(256, 256, seed=0)
+    t0 = time.time()
+    _, hist = solver.run(
+        c0, 4000, save_every=250, metrics_fn=coarsening_metrics(cfg)
+    )
+    wall = time.time() - t0
+    t = np.array([h[0] for h in hist], float)[4:] * cfg.dt
+    s = np.array([float(h[1][0]) for h in hist])[4:]
+    invk1 = np.array([float(h[1][1]) for h in hist])[4:]
+    p_s = fit_power_law(t, s - 1.0)
+    p_k = fit_power_law(t, invk1)
+    return [
+        ("fig1_s_exponent_256", wall * 1e6, f"{p_s:.3f}"),
+        ("fig1_invk1_exponent_256", wall * 1e6, f"{p_k:.3f}"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# §Roofline — table from the dry-run artifacts
+# ---------------------------------------------------------------------------
+
+
+def bench_roofline_table():
+    paths = sorted(
+        glob.glob("artifacts/dryrun*/**/*.json", recursive=True)
+        + glob.glob("artifacts/dryrun*/*.json")
+    )
+    rows = []
+    seen = {}
+    for path in paths:
+        with open(path) as f:
+            for rec in json.load(f):
+                if rec.get("status") != "ok":
+                    continue
+                key = (rec["arch"], rec["shape"], rec["mesh"])
+                seen[key] = rec  # latest wins
+    for (arch, shape, mesh), rec in sorted(seen.items()):
+        r = rec["roofline"]
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        rows.append(
+            (
+                f"roofline_{arch}_{shape}_{mesh}",
+                bound * 1e6,
+                f"dom={r['dominant']};frac={r['roofline_frac']}",
+            )
+        )
+    return rows
+
+
+BENCHMARKS = [
+    ("stencil_sweep", bench_stencil_sweep, False),
+    ("penta_batch", bench_penta_batch, False),
+    ("weno_step", bench_weno_step, False),
+    ("cahn_hilliard_step", bench_cahn_hilliard_step, False),
+    ("coarsening_fig1", bench_coarsening_fig1, True),  # heavy: --full
+    ("roofline_table", bench_roofline_table, False),
+]
+
+
+def main(argv=None) -> None:
+    jax.config.update("jax_enable_x64", True)  # the paper's solvers are f64
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    for name, fn, heavy in BENCHMARKS:
+        if heavy and not args.full:
+            continue
+        if args.only and args.only != name:
+            continue
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row))
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

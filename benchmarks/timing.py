@@ -1,0 +1,23 @@
+"""Wall-clock micro-timing helpers (CPU host; TPU numbers come from the
+dry-run roofline, not from here)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
+    """Median microseconds per call of a jitted function."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]

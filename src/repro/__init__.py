@@ -1,0 +1,31 @@
+"""repro — a TPU-native finite-difference / stencil framework.
+
+JAX + Pallas reproduction (and extension) of:
+
+    cuSten — CUDA Finite Difference and Stencil Library
+    Gloster & Ó Náraigh, 2019.
+
+The package is organised as a production framework:
+
+- :mod:`repro.core`       — the paper's contribution: plan-based 2D stencil
+  engine, ADI time stepping, Cahn–Hilliard / WENO applications, distributed
+  domain decomposition with halo exchange.
+- :mod:`repro.kernels`    — Pallas TPU kernels (BlockSpec VMEM tiling) with
+  jnp oracles, for the compute hot spots the paper optimises.
+- :mod:`repro.models`     — LM substrate for the assigned architecture pool.
+- :mod:`repro.configs`    — architecture / problem configurations.
+- :mod:`repro.optim`, :mod:`repro.data`, :mod:`repro.checkpoint`,
+  :mod:`repro.runtime`    — training substrate (optimizers, pipelines,
+  fault-tolerant checkpointing, sharding rules).
+- :mod:`repro.launch`     — meshes, dry-run driver, train/serve entry points.
+"""
+
+__version__ = "2.0.0"  # tracks cuSten's published version
+
+from repro.core.stencil import (  # noqa: F401
+    Stencil2D,
+    stencil_create_2d,
+    stencil_compute_2d,
+    stencil_destroy_2d,
+    DoubleBuffer,
+)

@@ -1,0 +1,8 @@
+"""Fault-tolerant checkpointing: sharded, async, atomic, elastic."""
+
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    Checkpointer,
+    save_pytree,
+    restore_pytree,
+    latest_step,
+)

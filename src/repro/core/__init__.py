@@ -1,0 +1,12 @@
+"""The paper's primary contribution: the plan-based 2D stencil engine,
+its distributed domain decomposition, and the ADI / Cahn–Hilliard / WENO
+solver stack built on top of it."""
+
+from repro.core.stencil import (  # noqa: F401
+    Stencil2D,
+    stencil_create_2d,
+    stencil_compute_2d,
+    stencil_destroy_2d,
+    DoubleBuffer,
+    central_difference_weights,
+)

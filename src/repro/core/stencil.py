@@ -1,0 +1,242 @@
+"""The plan-based 2D stencil engine — cuSten's four-function API in JAX.
+
+cuSten exposes ``custen{Create,Compute,Swap,Destroy}2D{X,Y,XY}{p,np}{,Fun}``.
+The functional JAX equivalents:
+
+- :func:`stencil_create_2d`  — Create: validates geometry, captures weights /
+  function pointer / boundary mode / tiling, returns an immutable plan.
+- :meth:`Stencil2D.apply` (or :func:`stencil_compute_2d`) — Compute.
+- :class:`DoubleBuffer`      — Swap (functional pointer flip; under ``jit``
+  with donation this is zero-copy, recovering cuSten's pointer swap).
+- :func:`stencil_destroy_2d` — Destroy (a no-op kept for API parity; JAX
+  buffers are GC'd — recorded as an intentional non-feature).
+
+Direction is encoded by the halo extents: an X plan has ``left/right``, a Y
+plan ``top/bottom``, an XY plan all four (the library handles the corner
+halos, as in the paper).  ``bc='np'`` computes interior points only and
+passes the output buffer through untouched on the boundary — the caller
+applies their own boundary conditions afterwards, exactly the cuSten
+semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ref import weighted_point_fn
+
+_DIRECTIONS = ("x", "y", "xy")
+_BCS = ("periodic", "np")
+
+
+@dataclasses.dataclass(frozen=True)
+class Stencil2D:
+    """An immutable stencil plan (the ``cuSten_t`` analogue)."""
+
+    direction: str
+    bc: str
+    left: int
+    right: int
+    top: int
+    bottom: int
+    coeffs: jnp.ndarray  # stencil weights (weighted mode) or fn coefficients
+    point_fn: Callable = weighted_point_fn
+    tile: Optional[Tuple[int, int]] = None
+    backend: str = "auto"
+    interpret: Optional[bool] = None
+
+    # -- Compute ----------------------------------------------------------
+    def apply(
+        self, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        """Apply the stencil to ``data`` (the Compute call).
+
+        For ``bc='np'`` the cells within the halo of the domain edge are
+        copied from ``out_init`` (zeros if not given)."""
+        return ops.stencil_apply(
+            data,
+            self.coeffs,
+            out_init,
+            point_fn=self.point_fn,
+            left=self.left,
+            right=self.right,
+            top=self.top,
+            bottom=self.bottom,
+            bc=self.bc,
+            tile=self.tile,
+            backend=self.backend,
+            interpret=self.interpret,
+        )
+
+    __call__ = apply
+
+    @property
+    def num_sten(self) -> int:
+        return (self.left + self.right + 1) * (self.top + self.bottom + 1)
+
+    @property
+    def halo(self) -> Tuple[int, int, int, int]:
+        return (self.left, self.right, self.top, self.bottom)
+
+
+def stencil_create_2d(
+    direction: str,
+    bc: str,
+    *,
+    weights=None,
+    func: Optional[Callable] = None,
+    coeffs=None,
+    num_sten_left: Optional[int] = None,
+    num_sten_right: Optional[int] = None,
+    num_sten_top: Optional[int] = None,
+    num_sten_bottom: Optional[int] = None,
+    tile: Optional[Tuple[int, int]] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> Stencil2D:
+    """Create a stencil plan (the Create call).
+
+    Weighted mode: pass ``weights`` — 1D of length ``numSten`` for X/Y
+    (with ``num_sten_left/right`` or top/bottom; symmetric split inferred for
+    odd lengths), or 2D ``(sy, sx)`` for XY.
+
+    Function mode (the paper's ``Fun`` variants): pass ``func(windows,
+    coeffs)`` plus ``coeffs`` and the explicit extents.  ``windows`` is the
+    row-major list of shifted views from the top-left of the stencil — the
+    indexing convention of paper §V.B.
+    """
+    if direction not in _DIRECTIONS:
+        raise ValueError(f"direction must be one of {_DIRECTIONS}")
+    if bc not in _BCS:
+        raise ValueError(f"bc must be one of {_BCS}")
+    if (weights is None) == (func is None):
+        raise ValueError("exactly one of weights / func must be given")
+
+    def _split(n_points: int, lo: Optional[int], hi: Optional[int]):
+        if lo is None and hi is None:
+            if n_points % 2 == 0:
+                raise ValueError(
+                    "even stencil length needs explicit left/right split"
+                )
+            return n_points // 2, n_points // 2
+        if lo is None or hi is None:
+            raise ValueError("give both or neither of the extent pair")
+        if lo + hi + 1 != n_points:
+            raise ValueError(
+                f"extents {lo}+{hi}+1 != stencil length {n_points}"
+            )
+        return lo, hi
+
+    if weights is not None:
+        w = jnp.asarray(weights)
+        if direction == "x":
+            if w.ndim != 1:
+                raise ValueError("x stencil weights must be 1D")
+            left, right = _split(w.shape[0], num_sten_left, num_sten_right)
+            top = bottom = 0
+        elif direction == "y":
+            if w.ndim != 1:
+                raise ValueError("y stencil weights must be 1D")
+            top, bottom = _split(w.shape[0], num_sten_top, num_sten_bottom)
+            left = right = 0
+        else:  # xy
+            if w.ndim != 2:
+                raise ValueError("xy stencil weights must be 2D (sy, sx)")
+            top, bottom = _split(w.shape[0], num_sten_top, num_sten_bottom)
+            left, right = _split(w.shape[1], num_sten_left, num_sten_right)
+        return Stencil2D(
+            direction=direction,
+            bc=bc,
+            left=left,
+            right=right,
+            top=top,
+            bottom=bottom,
+            coeffs=w.ravel(),
+            point_fn=weighted_point_fn,
+            tile=tile,
+            backend=backend,
+            interpret=interpret,
+        )
+
+    # function-pointer mode
+    left = num_sten_left or 0
+    right = num_sten_right or 0
+    top = num_sten_top or 0
+    bottom = num_sten_bottom or 0
+    if direction == "x" and (top or bottom):
+        raise ValueError("x stencil cannot have top/bottom extents")
+    if direction == "y" and (left or right):
+        raise ValueError("y stencil cannot have left/right extents")
+    if coeffs is None:
+        coeffs = jnp.zeros((1,), jnp.float32)
+    return Stencil2D(
+        direction=direction,
+        bc=bc,
+        left=left,
+        right=right,
+        top=top,
+        bottom=bottom,
+        coeffs=jnp.asarray(coeffs),
+        point_fn=func,
+        tile=tile,
+        backend=backend,
+        interpret=interpret,
+    )
+
+
+def stencil_compute_2d(
+    plan: Stencil2D, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    """Functional alias for :meth:`Stencil2D.apply` (cuSten Compute)."""
+    return plan.apply(data, out_init)
+
+
+def stencil_destroy_2d(plan: Stencil2D) -> None:
+    """API-parity Destroy.  JAX buffers are reference counted; nothing to do."""
+    del plan
+
+
+class DoubleBuffer:
+    """cuSten's Swap: flip input/output fields between time steps.
+
+    >>> buf = DoubleBuffer(c0, jnp.zeros_like(c0))
+    >>> buf.new = plan.apply(buf.old); buf.swap()
+    """
+
+    __slots__ = ("old", "new")
+
+    def __init__(self, old: jnp.ndarray, new: Optional[jnp.ndarray] = None):
+        self.old = old
+        self.new = jnp.zeros_like(old) if new is None else new
+
+    def swap(self) -> "DoubleBuffer":
+        self.old, self.new = self.new, self.old
+        return self
+
+
+# Convenience constructors for classic schemes --------------------------------
+
+
+def central_difference_weights(order: int, derivative: int, h: float = 1.0):
+    """Weights of the central finite difference of given accuracy ``order``
+    (even) for ``derivative`` (1 or 2), via the standard Fornberg algorithm.
+
+    Returns a numpy array of length ``order + derivative - (derivative % 2) + 1``
+    scaled by ``h**-derivative``."""
+    import math as _math
+
+    if order % 2:
+        raise ValueError("order must be even for central differences")
+    npts = 2 * ((order + derivative - 1) // 2) + 1
+    offsets = np.arange(npts) - npts // 2
+    # Solve the Vandermonde system: sum_k w_k * off_k^m = m! * delta_{m,deriv}
+    A = np.vander(offsets, npts, increasing=True).T.astype(np.float64)
+    b = np.zeros(npts)
+    b[derivative] = _math.factorial(derivative)
+    w = np.linalg.solve(A, b)
+    return w / h**derivative

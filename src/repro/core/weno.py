@@ -1,0 +1,96 @@
+"""2D periodic WENO5 advection solver (paper §IV.C, ``2d_xyADVWENO_p``).
+
+dq/dt + u q_x + v q_y = 0 with upwinded Hamilton–Jacobi WENO5 spatial
+derivatives (Osher & Fedkiw — the paper's ref [2]) and third-order TVD
+Runge–Kutta time stepping (Shu–Osher).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as _ops
+
+
+@dataclasses.dataclass(frozen=True)
+class AdvectionConfig:
+    nx: int = 512
+    ny: int = 512
+    lx: float = 2.0 * np.pi
+    ly: float = 2.0 * np.pi
+    cfl: float = 0.4
+    backend: str = "auto"
+
+    @property
+    def dx(self) -> float:
+        return self.lx / self.nx
+
+    @property
+    def dy(self) -> float:
+        return self.ly / self.ny
+
+
+class WenoAdvection2D:
+    """Create-once advection stepper; velocities are extra streamed inputs
+    exactly like the u/v fields of the paper's modified kernel."""
+
+    def __init__(self, cfg: AdvectionConfig):
+        self.cfg = cfg
+
+    def rhs(self, q: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+        return _ops.weno_advect(
+            q, u, v, dx=self.cfg.dx, dy=self.cfg.dy, backend=self.cfg.backend
+        )
+
+    def dt_cfl(self, u, v) -> jnp.ndarray:
+        sx = jnp.max(jnp.abs(u)) / self.cfg.dx
+        sy = jnp.max(jnp.abs(v)) / self.cfg.dy
+        return self.cfg.cfl / jnp.maximum(sx + sy, 1e-12)
+
+    def step(self, q, u, v, dt) -> jnp.ndarray:
+        """One Shu–Osher TVD-RK3 step."""
+        q1 = q + dt * self.rhs(q, u, v)
+        q2 = 0.75 * q + 0.25 * (q1 + dt * self.rhs(q1, u, v))
+        return q / 3.0 + (2.0 / 3.0) * (q2 + dt * self.rhs(q2, u, v))
+
+    def run(
+        self,
+        q0: jnp.ndarray,
+        u: jnp.ndarray,
+        v: jnp.ndarray,
+        t_final: float,
+        *,
+        dt: Optional[float] = None,
+    ) -> Tuple[jnp.ndarray, int]:
+        dt = float(self.dt_cfl(u, v)) if dt is None else dt
+        n_steps = int(np.ceil(t_final / dt))
+        dt = t_final / n_steps
+
+        @jax.jit
+        def body(carry, _):
+            return self.step(carry, u, v, dt), None
+
+        q, _ = jax.lax.scan(body, q0, None, length=n_steps)
+        return q, n_steps
+
+
+def solid_body_rotation(cfg: AdvectionConfig, dtype="float64"):
+    """u = -(y - pi), v = (x - pi): rigid rotation about the box centre."""
+    dt = jnp.dtype(dtype)
+    x = jnp.linspace(0, cfg.lx, cfg.nx, endpoint=False, dtype=dt)
+    y = jnp.linspace(0, cfg.ly, cfg.ny, endpoint=False, dtype=dt)
+    X, Y = jnp.meshgrid(x, y)
+    return -(Y - cfg.ly / 2), (X - cfg.lx / 2)
+
+
+def gaussian_blob(cfg: AdvectionConfig, *, x0, y0, sigma, dtype="float64"):
+    dt = jnp.dtype(dtype)
+    x = jnp.linspace(0, cfg.lx, cfg.nx, endpoint=False, dtype=dt)
+    y = jnp.linspace(0, cfg.ly, cfg.ny, endpoint=False, dtype=dt)
+    X, Y = jnp.meshgrid(x, y)
+    return jnp.exp(-((X - x0) ** 2 + (Y - y0) ** 2) / (2 * sigma**2))

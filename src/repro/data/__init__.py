@@ -1,0 +1,8 @@
+"""Data pipelines (deterministic, step-keyed, restart-exact)."""
+
+from repro.data.pipeline import (  # noqa: F401
+    TokenBatchSource,
+    EncDecBatchSource,
+    VLMBatchSource,
+    make_source,
+)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots cuSten optimises.
+
+Each kernel module contains the ``pl.pallas_call`` + ``BlockSpec`` VMEM
+tiling; :mod:`repro.kernels.ops` holds the jit'd public wrappers with
+backend dispatch; :mod:`repro.kernels.ref` the pure-jnp oracles.
+
+Kernels:
+
+- ``stencil2d``  — generic weighted / function-pointer 2D stencil (X/Y/XY,
+  periodic/np) with halo-neighbour BlockSpecs (the cuSten compute kernel).
+- ``penta``      — batched pentadiagonal substitution (cuPentBatch), plus
+  Create-time LU factorisation and rank-4 Woodbury cyclic closure.
+- ``weno``       — WENO5 upwind advection RHS (the 2d_xyADVWENO_p variant).
+- ``fused_ch``   — beyond-paper: the whole Cahn–Hilliard explicit RHS fused
+  into one VMEM pass.
+"""

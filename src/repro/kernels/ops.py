@@ -1,0 +1,191 @@
+"""Public jit'd entry points for the Pallas kernels, with backend dispatch.
+
+Every op takes ``backend ∈ {'auto', 'pallas', 'jnp'}``:
+
+- ``pallas``  — the TPU kernel (``interpret=True`` automatically when no TPU
+  is attached, so the same call validates on CPU);
+- ``jnp``     — the pure-jnp oracle from :mod:`repro.kernels.ref`, which XLA
+  fuses well and is the production CPU path;
+- ``auto``    — pallas when the kernel's structural constraints (tile
+  divisibility, halo <= tile) hold on a TPU backend, otherwise jnp.
+
+This mirrors cuSten's "the library picks the implementation details" design:
+callers state the math, dispatch is the library's job.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.stencil2d import stencil2d_pallas
+from repro.util import pick_tile
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _should_interpret(interpret: Optional[bool]) -> bool:
+    return not on_tpu() if interpret is None else interpret
+
+
+def _pallas_ok(ny, nx, ty, tx, hx, hy) -> bool:
+    return (ny % ty == 0) and (nx % tx == 0) and hx <= tx and hy <= ty
+
+
+def stencil_apply(
+    data: jnp.ndarray,
+    coeffs: jnp.ndarray,
+    out_init: Optional[jnp.ndarray] = None,
+    *,
+    point_fn: Callable = _ref.weighted_point_fn,
+    left: int = 0,
+    right: int = 0,
+    top: int = 0,
+    bottom: int = 0,
+    bc: str = "periodic",
+    tile: Optional[tuple] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Apply a 2D stencil — the library's Compute primitive."""
+    ny, nx = data.shape
+    hx, hy = max(left, right), max(top, bottom)
+    ty, tx = tile if tile is not None else (pick_tile(ny), pick_tile(nx))
+
+    if backend == "auto":
+        backend = (
+            "pallas" if on_tpu() and _pallas_ok(ny, nx, ty, tx, hx, hy) else "jnp"
+        )
+    if backend == "pallas":
+        if not _pallas_ok(ny, nx, ty, tx, hx, hy):
+            raise ValueError(
+                f"pallas backend needs tile|field and halo<=tile; got "
+                f"field=({ny},{nx}) tile=({ty},{tx}) halo=({hy},{hx})"
+            )
+        return stencil2d_pallas(
+            data,
+            coeffs,
+            out_init,
+            point_fn=point_fn,
+            left=left,
+            right=right,
+            top=top,
+            bottom=bottom,
+            bc=bc,
+            ty=ty,
+            tx=tx,
+            interpret=_should_interpret(interpret),
+        )
+    if backend == "jnp":
+        fn = jax.jit(
+            functools.partial(
+                _ref.stencil2d_ref,
+                bc=bc,
+                left=left,
+                right=right,
+                top=top,
+                bottom=bottom,
+                point_fn=point_fn,
+            )
+        )
+        return fn(data, coeffs=coeffs, out_init=out_init)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Pentadiagonal batched solves — public wrappers (kernel in kernels/penta.py)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.penta import (  # noqa: E402  (import after defs is deliberate)
+    penta_factor,
+    penta_solve_factored,
+    cyclic_penta_factor,
+    cyclic_penta_solve_factored,
+)
+
+
+def penta_solve(
+    l2, l1, d, u1, u2, rhs, *, cyclic: bool, backend: str = "auto",
+    interpret: Optional[bool] = None,
+):
+    """One-shot batched pentadiagonal solve: factor + substitute.
+
+    ``rhs`` is (M,) or (M, N); diagonals are (M,).  For repeated solves with
+    the same operator (the ADI hot path) use the factor/solve_factored pair —
+    that split is cuSten's Create/Compute separation.
+    """
+    if cyclic:
+        fac = cyclic_penta_factor(l2, l1, d, u1, u2)
+        return cyclic_penta_solve_factored(
+            fac, rhs, backend=backend, interpret=interpret
+        )
+    fac = penta_factor(l2, l1, d, u1, u2)
+    return penta_solve_factored(fac, rhs, backend=backend, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# WENO5 advection — public wrapper (kernel in kernels/weno.py)
+# ---------------------------------------------------------------------------
+
+
+def weno_advect(
+    q: jnp.ndarray,
+    u: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    dx: float,
+    dy: float,
+    backend: str = "auto",
+    tile: Optional[tuple] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """RHS of periodic 2D advection with upwinded WENO5 derivatives."""
+    from repro.kernels.weno import weno5_advect_pallas
+
+    ny, nx = q.shape
+    ty, tx = tile if tile is not None else (pick_tile(ny), pick_tile(nx))
+    if backend == "auto":
+        backend = "pallas" if on_tpu() and _pallas_ok(ny, nx, ty, tx, 3, 3) else "jnp"
+    if backend == "pallas":
+        return weno5_advect_pallas(
+            q, u, v, dx=dx, dy=dy, ty=ty, tx=tx,
+            interpret=_should_interpret(interpret),
+        )
+    if backend == "jnp":
+        return jax.jit(
+            functools.partial(_ref.weno5_advect_ref, dx=dx, dy=dy)
+        )(q, u, v)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def ch_rhs(
+    c_n, c_nm1, *, dt, D, gamma, inv_h2, inv_h4,
+    backend: str = "auto", tile: Optional[tuple] = None,
+    interpret: Optional[bool] = None,
+):
+    """Fused Cahn–Hilliard explicit RHS (beyond-paper fusion kernel)."""
+    from repro.kernels.fused_ch import ch_rhs_pallas
+
+    ny, nx = c_n.shape
+    ty, tx = tile if tile is not None else (pick_tile(ny), pick_tile(nx))
+    if backend == "auto":
+        backend = "pallas" if on_tpu() and _pallas_ok(ny, nx, ty, tx, 2, 2) else "jnp"
+    if backend == "pallas":
+        return ch_rhs_pallas(
+            c_n, c_nm1, dt=dt, D=D, gamma=gamma, inv_h2=inv_h2, inv_h4=inv_h4,
+            ty=ty, tx=tx, interpret=_should_interpret(interpret),
+        )
+    if backend == "jnp":
+        return jax.jit(
+            functools.partial(
+                _ref.ch_rhs_ref, dt=dt, D=D, gamma=gamma,
+                inv_h2=inv_h2, inv_h4=inv_h4,
+            )
+        )(c_n, c_nm1)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,276 @@
+"""Pure-jnp oracles for every Pallas kernel in :mod:`repro.kernels`.
+
+These are the *semantic definitions*: slow-but-obviously-correct
+implementations used (a) as the test oracle for kernel `allclose` sweeps and
+(b) as the production CPU fallback backend of the stencil engine.
+
+Conventions (matching the paper's cuSten API):
+
+- A 2D field is ``(ny, nx)``; ``x`` is the fast (last) axis.
+- An X stencil has ``left``/``right`` extents; a Y stencil ``top``/``bottom``;
+  an XY stencil all four.  The stencil *windows* are enumerated row-major from
+  the top-left of the stencil, sweeping left→right in ``i`` then row by row in
+  ``j`` — the indexing convention §V.B of the paper spells out.
+- ``point_fn(windows, coeffs)`` is the "function pointer": it receives the
+  list of shifted views (one array per stencil point, same shape as the
+  field) and returns the output field.  The weighted mode is
+  ``point_fn = weighted_point_fn`` with ``coeffs = weights.ravel()``.
+- ``bc='periodic'`` wraps; ``bc='np'`` computes the interior only and passes
+  ``out_init`` (default zeros) through on the untouched boundary cells, the
+  exact semantics of cuSten's ``np`` variants.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_point_fn(windows: Sequence[jnp.ndarray], coeffs: jnp.ndarray):
+    """The linear-stencil 'function pointer': sum_k coeffs[k] * window_k."""
+    out = coeffs[0] * windows[0]
+    for k in range(1, len(windows)):
+        out = out + coeffs[k] * windows[k]
+    return out
+
+
+def shifted_windows(
+    data: jnp.ndarray, *, left: int, right: int, top: int, bottom: int
+) -> List[jnp.ndarray]:
+    """All stencil windows of ``data`` (periodic shifts), row-major order.
+
+    ``window[a*sx+b][j, i] == data[(j - top + a) % ny, (i - left + b) % nx]``
+    """
+    wins = []
+    for a in range(top + bottom + 1):
+        for b in range(left + right + 1):
+            wins.append(jnp.roll(data, shift=(top - a, left - b), axis=(0, 1)))
+    return wins
+
+
+def interior_mask(
+    shape, *, left: int, right: int, top: int, bottom: int
+) -> np.ndarray:
+    ny, nx = shape
+    jj, ii = np.meshgrid(np.arange(ny), np.arange(nx), indexing="ij")
+    return (
+        (ii >= left)
+        & (ii < nx - right)
+        & (jj >= top)
+        & (jj < ny - bottom)
+    )
+
+
+def stencil2d_ref(
+    data: jnp.ndarray,
+    *,
+    bc: str,
+    left: int = 0,
+    right: int = 0,
+    top: int = 0,
+    bottom: int = 0,
+    point_fn: Callable = weighted_point_fn,
+    coeffs: Optional[jnp.ndarray] = None,
+    out_init: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Oracle for the generic 2D stencil apply (any direction).
+
+    X direction == top=bottom=0; Y direction == left=right=0; XY uses all.
+    """
+    assert bc in ("periodic", "np"), bc
+    wins = shifted_windows(data, left=left, right=right, top=top, bottom=bottom)
+    out = point_fn(wins, coeffs)
+    if bc == "np":
+        mask = interior_mask(
+            data.shape, left=left, right=right, top=top, bottom=bottom
+        )
+        base = jnp.zeros_like(out) if out_init is None else out_init
+        out = jnp.where(mask, out, base.astype(out.dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pentadiagonal solves (cuPentBatch oracle)
+# ---------------------------------------------------------------------------
+
+
+def penta_dense(l2, l1, d, u1, u2) -> jnp.ndarray:
+    """Assemble the dense (M, M) matrix from the 5 diagonals (length M;
+    out-of-band entries of l2,l1,u1,u2 are ignored)."""
+    M = d.shape[0]
+    A = jnp.diag(d)
+    A = A + jnp.diag(l1[1:], k=-1) + jnp.diag(l2[2:], k=-2)
+    A = A + jnp.diag(u1[: M - 1], k=1) + jnp.diag(u2[: M - 2], k=2)
+    return A
+
+
+def penta_dense_cyclic(l2, l1, d, u1, u2) -> jnp.ndarray:
+    """Dense cyclic pentadiagonal matrix: row i couples columns
+    (i-2, i-1, i, i+1, i+2) mod M."""
+    M = d.shape[0]
+    A = jnp.zeros((M, M), d.dtype)
+    idx = jnp.arange(M)
+    A = A.at[idx, (idx - 2) % M].add(l2)
+    A = A.at[idx, (idx - 1) % M].add(l1)
+    A = A.at[idx, idx].add(d)
+    A = A.at[idx, (idx + 1) % M].add(u1)
+    A = A.at[idx, (idx + 2) % M].add(u2)
+    return A
+
+
+def penta_solve_ref(l2, l1, d, u1, u2, rhs, *, cyclic: bool) -> jnp.ndarray:
+    """Dense-solve oracle. ``rhs`` is (M,) or (M, N) batched along axis 1."""
+    A = penta_dense_cyclic(l2, l1, d, u1, u2) if cyclic else penta_dense(
+        l2, l1, d, u1, u2
+    )
+    return jnp.linalg.solve(A, rhs)
+
+
+# ---------------------------------------------------------------------------
+# WENO5 Hamilton–Jacobi advection oracle (paper §IV.C, ref Osher & Fedkiw)
+# ---------------------------------------------------------------------------
+
+_W_EPS = 1e-6
+
+
+def _weno5_phi(v1, v2, v3, v4, v5):
+    """Classic WENO5 combination of the five divided differences.
+
+    Returns the left-biased approximation of the derivative given
+    one-sided differences v1..v5 (Osher & Fedkiw, ch. 3.4)."""
+    s1 = (13.0 / 12.0) * (v1 - 2 * v2 + v3) ** 2 + 0.25 * (v1 - 4 * v2 + 3 * v3) ** 2
+    s2 = (13.0 / 12.0) * (v2 - 2 * v3 + v4) ** 2 + 0.25 * (v2 - v4) ** 2
+    s3 = (13.0 / 12.0) * (v3 - 2 * v4 + v5) ** 2 + 0.25 * (3 * v3 - 4 * v4 + v5) ** 2
+    a1 = 0.1 / (_W_EPS + s1) ** 2
+    a2 = 0.6 / (_W_EPS + s2) ** 2
+    a3 = 0.3 / (_W_EPS + s3) ** 2
+    w = a1 + a2 + a3
+    p1 = v1 / 3.0 - 7.0 * v2 / 6.0 + 11.0 * v3 / 6.0
+    p2 = -v2 / 6.0 + 5.0 * v3 / 6.0 + v4 / 3.0
+    p3 = v3 / 3.0 + 5.0 * v4 / 6.0 - v5 / 6.0
+    return (a1 * p1 + a2 * p2 + a3 * p3) / w
+
+
+def weno5_derivs_ref(q: jnp.ndarray, dx: float, dy: float):
+    """Periodic upwind WENO5 one-sided derivatives of ``q``.
+
+    Returns (dqdx_minus, dqdx_plus, dqdy_minus, dqdy_plus): the left- and
+    right-biased derivative approximations in each direction."""
+
+    def one_axis(q, h, axis):
+        # d[k] = (q_{i+k+1} - q_{i+k}) / h  for k in -3..2   (6 differences)
+        diffs = [
+            (jnp.roll(q, -(k + 1), axis=axis) - jnp.roll(q, -k, axis=axis)) / h
+            for k in range(-3, 3)
+        ]
+        # minus (left-biased): v1..v5 = d[-3],d[-2],d[-1],d[0],d[1]
+        dm = _weno5_phi(diffs[0], diffs[1], diffs[2], diffs[3], diffs[4])
+        # plus (right-biased): v1..v5 = d[2],d[1],d[0],d[-1],d[-2]
+        dp = _weno5_phi(diffs[5], diffs[4], diffs[3], diffs[2], diffs[1])
+        return dm, dp
+
+    dxm, dxp = one_axis(q, dx, axis=1)
+    dym, dyp = one_axis(q, dy, axis=0)
+    return dxm, dxp, dym, dyp
+
+
+def weno5_advect_ref(q, u, v, dx, dy):
+    """RHS of dq/dt = -(u q_x + v q_y) with upwinded WENO5 derivatives
+    (periodic).  This is the oracle for the paper's 2d_xyADVWENO_p variant."""
+    dxm, dxp, dym, dyp = weno5_derivs_ref(q, dx, dy)
+    qx = jnp.where(u > 0, dxm, dxp)
+    qy = jnp.where(v > 0, dym, dyp)
+    return -(u * qx + v * qy)
+
+
+# ---------------------------------------------------------------------------
+# Fused Cahn–Hilliard RHS oracle (beyond-paper fusion: one pass builds the
+# full explicit RHS of scheme eq. (2a))
+# ---------------------------------------------------------------------------
+
+
+def laplacian_ref(c: jnp.ndarray, inv_h2: float) -> jnp.ndarray:
+    """Periodic 5-point Laplacian: (delta_x + delta_y)/h^2 of eq. (4a)."""
+    return inv_h2 * (
+        jnp.roll(c, 1, 0)
+        + jnp.roll(c, -1, 0)
+        + jnp.roll(c, 1, 1)
+        + jnp.roll(c, -1, 1)
+        - 4.0 * c
+    )
+
+
+def biharmonic_ref(c: jnp.ndarray, inv_h4: float) -> jnp.ndarray:
+    """Periodic 13-point biharmonic (delta_x^2 + 2 delta_x delta_y + delta_y^2)/h^4
+    built from eq. (4) of the paper (5x5 cross-shaped stencil)."""
+    dx2 = (
+        jnp.roll(c, 2, 1) - 4 * jnp.roll(c, 1, 1) + 6 * c
+        - 4 * jnp.roll(c, -1, 1) + jnp.roll(c, -2, 1)
+    )
+    dy2 = (
+        jnp.roll(c, 2, 0) - 4 * jnp.roll(c, 1, 0) + 6 * c
+        - 4 * jnp.roll(c, -1, 0) + jnp.roll(c, -2, 0)
+    )
+    dxy_of = lambda f: (  # noqa: E731
+        jnp.roll(f, 1, 1) - 2 * f + jnp.roll(f, -1, 1)
+    )
+    dxdy = dxy_of(jnp.roll(c, 1, 0) - 2 * c + jnp.roll(c, -1, 0))
+    return inv_h4 * (dx2 + dy2 + 2.0 * dxdy)
+
+
+def ch_rhs_ref(c_n, c_nm1, *, dt, D, gamma, inv_h2, inv_h4):
+    """Oracle for the fused explicit RHS of the paper's eq. (2a):
+
+        rhs = -(2/3)(C^n - C^{n-1}) - (2/3) dt gamma D grad^4 Cbar^{n+1}
+              + (2/3) D dt grad^2 (C^3 - C)^n,
+        Cbar^{n+1} = 2 C^n - C^{n-1}.
+    """
+    cbar = 2.0 * c_n - c_nm1
+    lin = -(2.0 / 3.0) * (c_n - c_nm1)
+    hyper = -(2.0 / 3.0) * dt * gamma * D * biharmonic_ref(cbar, inv_h4)
+    nonlin = (2.0 / 3.0) * D * dt * laplacian_ref(c_n**3 - c_n, inv_h2)
+    return lin + hyper + nonlin
+
+
+# ---------------------------------------------------------------------------
+# 3D stencils (paper §VI.A future work, built): periodic shifts oracle
+# ---------------------------------------------------------------------------
+
+
+def stencil3d_ref(
+    data: jnp.ndarray,
+    *,
+    bc: str,
+    halos,  # (front, back, top, bottom, left, right) along (z, y, x)
+    point_fn: Callable = weighted_point_fn,
+    coeffs: Optional[jnp.ndarray] = None,
+    out_init: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Oracle for 3D stencils on (nz, ny, nx) fields.  Window order is
+    z-major, then row-major over (y, x) — the natural extension of the
+    paper's §V.B indexing convention."""
+    assert bc in ("periodic", "np"), bc
+    fr, bk, tp, bt, lf, rt = halos
+    wins = []
+    for c in range(fr + bk + 1):
+        for a in range(tp + bt + 1):
+            for b in range(lf + rt + 1):
+                wins.append(
+                    jnp.roll(data, (fr - c, tp - a, lf - b), axis=(0, 1, 2))
+                )
+    out = point_fn(wins, coeffs)
+    if bc == "np":
+        nz, ny, nx = data.shape
+        kk, jj, ii = np.meshgrid(
+            np.arange(nz), np.arange(ny), np.arange(nx), indexing="ij"
+        )
+        mask = (
+            (kk >= fr) & (kk < nz - bk)
+            & (jj >= tp) & (jj < ny - bt)
+            & (ii >= lf) & (ii < nx - rt)
+        )
+        base = jnp.zeros_like(out) if out_init is None else out_init
+        out = jnp.where(mask, out, base.astype(out.dtype))
+    return out

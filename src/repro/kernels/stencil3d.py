@@ -1,0 +1,165 @@
+"""3D stencil Pallas kernel — the paper's §VI.A extension, built.
+
+cuSten defers 3D because UM tile streaming needs contiguity; on TPU the
+problem disappears: ``BlockSpec`` tiles the (z, y) axes (3×3 neighbour
+tiles supply the z/y halos exactly like the 2D XY kernel) while each block
+carries the **full x row**, so x-halos are in-VMEM rolls.  VMEM budget:
+9 tiles of (Tz, Ty, nx) — for the default (4, 8, nx≤2048) f32 that is
+9 × 256 KiB ≈ 2.3 MiB.
+
+Supports arbitrary box stencils (fr/bk, tp/bt, lf/rt halos), weighted or
+function mode, periodic / np boundaries.  Oracle:
+:func:`repro.kernels.ref.stencil3d_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import weighted_point_fn
+
+
+def _wrap(i, n):
+    return jnp.remainder(i, n).astype(jnp.int32)
+
+
+def _clamp(i, n):
+    return jnp.clip(i, 0, n - 1).astype(jnp.int32)
+
+
+def _kernel(
+    *refs,
+    point_fn: Callable,
+    halos,
+    hz: int,
+    hy: int,
+    bc: str,
+    shape,
+    tz: int,
+    ty: int,
+):
+    fr, bk, tp, bt, lf, rt = halos
+    nz, ny, nx = shape
+    need_z, need_y = hz > 0, hy > 0
+    dzs = (-1, 0, 1) if need_z else (0,)
+    dys = (-1, 0, 1) if need_y else (0,)
+    n_tiles = len(dzs) * len(dys)
+    tile_refs = refs[:n_tiles]
+    coeffs = refs[n_tiles][...]
+    has_init = bc == "np"
+    out_init_ref = refs[n_tiles + 1] if has_init else None
+    o_ref = refs[-1]
+
+    tiles = {}
+    k = 0
+    for dz in dzs:
+        for dy in dys:
+            tiles[(dz, dy)] = tile_refs[k][...]
+            k += 1
+
+    def zband(dy):
+        mid = tiles[(0, dy)]
+        if not need_z:
+            return mid
+        up = tiles[(-1, dy)][tz - hz :, :, :]
+        dn = tiles[(1, dy)][:hz, :, :]
+        return jnp.concatenate([up, mid, dn], axis=0)
+
+    band = zband(0)
+    if need_y:
+        tb = zband(-1)[:, ty - hy :, :]
+        bb = zband(1)[:, :hy, :]
+        band = jnp.concatenate([tb, band, bb], axis=1)
+
+    windows = []
+    for c in range(fr + bk + 1):
+        z0 = hz - fr + c
+        for a in range(tp + bt + 1):
+            y0 = hy - tp + a
+            sub = jax.lax.slice(
+                band, (z0, y0, 0), (z0 + tz, y0 + ty, nx)
+            )
+            for b in range(lf + rt + 1):
+                # x-halo via in-VMEM roll on the full row
+                windows.append(jnp.roll(sub, lf - b, axis=2))
+    val = point_fn(windows, coeffs)
+
+    if bc == "np":
+        zi = pl.program_id(0)
+        yi = pl.program_id(1)
+        gz = zi * tz + jax.lax.broadcasted_iota(jnp.int32, (tz, ty, nx), 0)
+        gy = yi * ty + jax.lax.broadcasted_iota(jnp.int32, (tz, ty, nx), 1)
+        gx = jax.lax.broadcasted_iota(jnp.int32, (tz, ty, nx), 2)
+        mask = (
+            (gz >= fr) & (gz < nz - bk)
+            & (gy >= tp) & (gy < ny - bt)
+            & (gx >= lf) & (gx < nx - rt)
+        )
+        val = jnp.where(mask, val, out_init_ref[...])
+    o_ref[...] = val.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("point_fn", "halos", "bc", "tz", "ty", "interpret"),
+)
+def stencil3d_pallas(
+    data: jnp.ndarray,
+    coeffs: jnp.ndarray,
+    out_init: Optional[jnp.ndarray] = None,
+    *,
+    point_fn: Callable = weighted_point_fn,
+    halos=(1, 1, 1, 1, 1, 1),  # (front, back, top, bottom, left, right)
+    bc: str = "periodic",
+    tz: int = 4,
+    ty: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    nz, ny, nx = data.shape
+    fr, bk, tp, bt, lf, rt = halos
+    hz, hy = max(fr, bk), max(tp, bt)
+    if nz % tz or ny % ty:
+        raise ValueError(f"tiles ({tz},{ty}) must divide ({nz},{ny})")
+    if hz > tz or hy > ty or max(lf, rt) > nx:
+        raise ValueError("halo exceeds tile")
+    gz, gy = nz // tz, ny // ty
+
+    move = _wrap if bc == "periodic" else _clamp
+
+    def spec(dz, dy):
+        def index_map(k, j):
+            kk = move(k + dz, gz) if dz else k
+            jj = move(j + dy, gy) if dy else j
+            return (kk, jj, 0)
+
+        return pl.BlockSpec((tz, ty, nx), index_map)
+
+    need_z, need_y = hz > 0, hy > 0
+    dzs = (-1, 0, 1) if need_z else (0,)
+    dys = (-1, 0, 1) if need_y else (0,)
+    in_specs = [spec(dz, dy) for dz in dzs for dy in dys]
+    operands = [data] * len(in_specs)
+    in_specs.append(pl.BlockSpec(coeffs.shape, lambda k, j: (0,) * coeffs.ndim))
+    operands.append(coeffs)
+    if bc == "np":
+        if out_init is None:
+            out_init = jnp.zeros_like(data)
+        in_specs.append(pl.BlockSpec((tz, ty, nx), lambda k, j: (k, j, 0)))
+        operands.append(out_init)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, point_fn=point_fn, halos=halos, hz=hz, hy=hy,
+            bc=bc, shape=(nz, ny, nx), tz=tz, ty=ty,
+        ),
+        grid=(gz, gy),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tz, ty, nx), lambda k, j: (k, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), data.dtype),
+        interpret=interpret,
+    )(*operands)

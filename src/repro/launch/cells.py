@@ -1,0 +1,345 @@
+"""(architecture x input-shape) cells: step functions + ShapeDtypeStruct
+input specs for dry-run lowering and for the real train/serve entry points.
+
+Shapes (assigned, per system card):
+
+- ``train_4k``     seq 4096,   global batch 256  -> train_step
+- ``prefill_32k``  seq 32768,  global batch 32   -> prefill (serve) step
+- ``decode_32k``   cache 32768, global batch 128 -> serve_step (1 new token)
+- ``long_500k``    cache 524288, batch 1         -> serve_step; only for
+  sub-quadratic archs (rwkv6, jamba) — full-attention archs skip (recorded).
+
+Sharding assembly per cell (see DESIGN.md §5): batch over (pod, data);
+params FSDP over data + TP over model; decode caches sequence-sharded over
+model (32k) or all axes (500k) feeding the flash-decode shard_map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, get_config
+from repro.models.api import Model, build_model
+from repro.optim import get_optimizer, state_specs, warmup_cosine
+from repro.runtime.sharding import (
+    Shardings,
+    infer_param_specs,
+    _fit_spec,
+)
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape_name: str) -> Tuple[bool, str]:
+    info = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "full-attention arch: 500k-token full attention is O(S^2) by "
+            "design; cell reserved for SSM/hybrid archs (DESIGN.md §7)"
+        )
+    if info["kind"] == "decode" and not cfg.decode_supported:
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_shardings(cfg: ArchConfig, mesh: Mesh, shape_name: str) -> Shardings:
+    dp = dp_axes_of(mesh)
+    if SHAPES[shape_name]["kind"] != "decode":
+        return Shardings(mesh=mesh, dp_axes=dp, tp_axis="model", fsdp_axis="data")
+    if shape_name == "long_500k":
+        seq_axes = tuple(mesh.axis_names)  # all axes: 512-way seq sharding
+        dp = ()
+    else:
+        seq_axes = ("model",)
+    return Shardings(
+        mesh=mesh, dp_axes=dp, tp_axis="model", fsdp_axis="data",
+        cache_seq_axes=seq_axes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — never allocated)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec)
+    )
+
+
+def batch_specs(
+    cfg: ArchConfig, mesh: Mesh, shape_name: str
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Stand-ins for the data batch of a cell."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    dp = dp_axes_of(mesh)
+    dspec = P(dp)
+    out: Dict[str, Any] = {}
+    if info["kind"] == "train":
+        s_tok = s - (cfg.img_tokens if cfg.family == "vlm" else 0)
+        out["tokens"] = _sds((b, s_tok), jnp.int32, mesh, dspec)
+        out["labels"] = _sds((b, s_tok), jnp.int32, mesh, dspec)
+        if cfg.family == "encdec":
+            out["frames"] = _sds(
+                (b, s, cfg.d_model), jnp.bfloat16, mesh, P(dp, None, None)
+            )
+            # decoder operates on a standard 448-token transcript window
+            out["tokens"] = _sds((b, 448), jnp.int32, mesh, dspec)
+            out["labels"] = _sds((b, 448), jnp.int32, mesh, dspec)
+        if cfg.family == "vlm":
+            out["patches"] = _sds(
+                (b, cfg.img_tokens, cfg.d_model), jnp.bfloat16, mesh,
+                P(dp, None, None),
+            )
+    elif info["kind"] == "prefill":
+        s_tok = s - (cfg.img_tokens if cfg.family == "vlm" else 0)
+        out["tokens"] = _sds((b, s_tok), jnp.int32, mesh, dspec)
+        if cfg.family == "encdec":
+            out["frames"] = _sds(
+                (b, s, cfg.d_model), jnp.bfloat16, mesh, P(dp, None, None)
+            )
+            out["tokens"] = _sds((b, 448), jnp.int32, mesh, dspec)
+        if cfg.family == "vlm":
+            out["patches"] = _sds(
+                (b, cfg.img_tokens, cfg.d_model), jnp.bfloat16, mesh,
+                P(dp, None, None),
+            )
+    else:  # decode
+        bspec = dspec if b > 1 else P(None)
+        out["token"] = _sds((b,), jnp.int32, mesh, bspec)
+    return out
+
+
+def param_specs_tree(model: Model, mesh: Mesh):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = infer_param_specs(shapes, mesh)
+    return shapes, specs
+
+
+def _cache_spec_for(name: str, leaf, sh: Shardings, mesh: Mesh) -> P:
+    """Spec for a decode-cache leaf by name (see init_cache layouts)."""
+    dp = sh.dp_axes if sh.dp_axes else None
+    seq = sh.cache_seq_axes if sh.cache_seq_axes else None
+    if name.endswith(("k", "v")) and leaf.ndim == 5:  # (steps,B,KV,S,hd)
+        spec = P(None, dp, None, seq, None)
+    elif name.endswith(("k_s", "v_s")) and leaf.ndim == 4:  # (steps,B,KV,S)
+        spec = P(None, dp, None, seq)
+    elif name.endswith("conv"):  # (steps,B,k,din)
+        spec = P(None, dp, None, "model")
+    elif name.endswith("h"):  # (steps,B,din,state)
+        spec = P(None, dp, "model", None)
+    elif name.endswith(("x_tm", "x_cm")):  # (steps,B,D)
+        spec = P(None, dp, "model")
+    elif name.endswith("wkv"):  # (steps,B,H,hd,hd)
+        spec = P(None, dp, "model", None, None)
+    elif name.endswith(("xk", "xv")):  # (L,B,T,KV,hd) whisper cross
+        spec = P(None, dp, None, None, None)
+    else:
+        spec = P()
+    return _fit_spec(spec, leaf.ndim, leaf.shape, mesh)
+
+
+def cache_specs_tree(model: Model, sh: Shardings, batch: int, seq: int):
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    treedef = jax.tree_util.tree_structure(shapes)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(_cache_spec_for(name, leaf, sh, sh.mesh))
+    return shapes, jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    model: Model,
+    *,
+    sh: Shardings,
+    accum: Optional[int] = None,
+    lr: float = 3e-4,
+    param_specs=None,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation: the global batch is split into ``accum``
+    microbatches consumed by a scan with f32 grad accumulation — the
+    standard memory/throughput trade at scale.  Grads and the f32
+    accumulator are constrained to the *param* shardings: without the
+    constraint XLA materialises partially-replicated f32 grad trees
+    (observed 79 GB/device on the 340B cell).
+    """
+    cfg = model.cfg
+    accum = accum if accum is not None else cfg.grad_accum_train4k
+    opt = get_optimizer(cfg.optimizer, warmup_cosine(lr))
+
+    def like_params(tree):
+        if param_specs is None or sh.mesh is None:
+            return tree
+        return jax.tree.map(
+            lambda x, spec: jax.lax.with_sharding_constraint(
+                x, NamedSharding(sh.mesh, spec)
+            ),
+            tree,
+            param_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    def loss_of(params, batch):
+        return model.loss(params, batch, sh)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+            grads = like_params(grads)
+        else:
+            split = lambda x: x.reshape(  # noqa: E731
+                (accum, x.shape[0] // accum) + x.shape[1:]
+            )
+            micro = jax.tree.map(split, batch)
+
+            adt = jnp.dtype(cfg.accum_dtype)
+
+            def mb(carry, mbatch):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(adt), acc, like_params(g)
+                )
+                return (like_params(acc), lsum + l), None
+
+            zeros = like_params(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            )
+            (gsum, lsum), _ = jax.lax.scan(mb, (zeros, 0.0), micro)
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) / accum), gsum
+            )
+            loss = lsum / accum
+        params, opt_state = opt.update(grads, opt_state, params)
+        return like_params(params), opt_state, {"loss": loss}
+
+    train_step.optimizer = opt
+    return train_step
+
+
+def make_prefill_step(model: Model, *, sh: Shardings) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill_serve(params, batch, sh)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, *, sh: Shardings) -> Callable:
+    """One decode iteration: greedy-sample next token, update cache."""
+
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = model.decode(params, token, pos, cache, sh)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# cell assembly for the dry-run
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_fn: Callable
+    args_sds: Tuple  # ShapeDtypeStructs to lower against
+    donate: Tuple[int, ...]
+    model: Model
+    sh: Shardings
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *, lr=3e-4) -> Cell:
+    cfg = get_config(arch)
+    ok, why = cell_supported(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"cell ({arch}, {shape_name}) unsupported: {why}")
+    model = build_model(cfg)
+    sh = make_shardings(cfg, mesh, shape_name)
+    info = SHAPES[shape_name]
+
+    pshapes, pspecs = param_specs_tree(model, mesh)
+    params_sds = jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        pshapes,
+        pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    bspecs = batch_specs(cfg, mesh, shape_name)
+
+    if info["kind"] == "train":
+        step = make_train_step(model, sh=sh, lr=lr, param_specs=pspecs)
+        opt = step.optimizer
+        oshapes = jax.eval_shape(opt.init, pshapes)
+        ospecs = state_specs(cfg.optimizer, pspecs, pshapes)
+        ostate_sds = jax.tree.map(
+            lambda sds, spec: jax.ShapeDtypeStruct(
+                sds.shape, sds.dtype,
+                sharding=NamedSharding(
+                    mesh, _fit_spec(spec, len(sds.shape), sds.shape, mesh)
+                ),
+            ),
+            oshapes,
+            ospecs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+        return Cell(
+            arch, shape_name, step, (params_sds, ostate_sds, bspecs),
+            donate=(0, 1), model=model, sh=sh,
+        )
+
+    if info["kind"] == "prefill":
+        step = make_prefill_step(model, sh=sh)
+        return Cell(
+            arch, shape_name, step, (params_sds, bspecs),
+            donate=(), model=model, sh=sh,
+        )
+
+    # decode
+    step = make_serve_step(model, sh=sh)
+    cshapes, cspecs = cache_specs_tree(model, sh, info["batch"], info["seq"])
+    cache_sds = jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        cshapes,
+        cspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return Cell(
+        arch, shape_name, step,
+        (params_sds, cache_sds, bspecs["token"], pos),
+        donate=(1,), model=model, sh=sh,
+    )

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture x input-shape) cell against the
+production meshes — 16x16 = 256 chips single-pod and 2x16x16 = 512 chips
+multi-pod — with ShapeDtypeStruct stand-ins (no allocation), then records:
+
+- ``memory_analysis()``  (bytes per device — proves the cell fits HBM),
+- ``cost_analysis()``    (XLA's aggregate; loop-bodies counted once),
+- loop-aware HLO costs   (hlo_costs.py: trip-scaled FLOPs / bytes /
+  per-kind collective bytes — the §Roofline inputs),
+- the three roofline terms + dominant bottleneck (hlo_analysis.py).
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-9b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+    python -m repro.launch.dryrun --ch            # paper-native CH cells
+
+Exit code != 0 on any failed cell — failures are sharding bugs by
+definition and gate the §Dry-run deliverable.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, list_archs  # noqa: E402
+from repro.launch import hlo_costs  # noqa: E402
+from repro.launch.cells import SHAPES, build_cell, cell_supported  # noqa: E402
+from repro.launch.hlo_analysis import (  # noqa: E402
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+V5E_HBM = 16 * 1024**3  # 16 GiB per chip
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference)."""
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if info["kind"] == "train":
+        tokens = info["batch"] * info["seq"]
+        return 6.0 * n_active * tokens
+    if info["kind"] == "prefill":
+        tokens = info["batch"] * info["seq"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence; params minus embedding-gather cost
+    return 2.0 * n_active * info["batch"]
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    verbose: bool = True,
+) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh)
+    with mesh:
+        lowered = jax.jit(
+            cell.step_fn, donate_argnums=cell.donate
+        ).lower(*cell.args_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        if verbose:
+            print(ma)
+            print({k: v for k, v in ca.items() if "{" not in k})
+        txt = compiled.as_text()
+
+    costs = hlo_costs.analyze_hlo(txt)
+    mf = model_flops_for(arch, shape_name)
+    terms = RooflineTerms(
+        flops=costs.flops * n_chips,  # parsed per-device -> global
+        bytes_accessed=costs.bytes * n_chips,
+        collective_bytes=costs.collective_bytes,  # per-device
+        n_chips=n_chips,
+        model_flops=mf,
+    )
+    peak_dev = (
+        int(ma.argument_size_in_bytes)
+        + int(ma.output_size_in_bytes)
+        + int(ma.temp_size_in_bytes)
+        - int(ma.alias_size_in_bytes)
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device": peak_dev,
+            "fits_v5e": peak_dev <= V5E_HBM,
+        },
+        "xla_cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "hlo_costs": {
+            "flops_per_device": costs.flops,
+            "bytes_per_device": costs.bytes,
+            "collective_bytes_per_device": costs.collective_bytes,
+            "collectives": costs.collectives,
+        },
+        "roofline": terms.to_dict(),
+    }
+    if verbose:
+        d = terms
+        print(
+            f"[{arch} x {shape_name} @ {rec['mesh']}] "
+            f"t_comp={d.t_compute:.4f}s t_mem={d.t_memory:.4f}s "
+            f"t_coll={d.t_collective:.4f}s dominant={d.dominant} "
+            f"useful={d.useful_flops_frac and round(d.useful_flops_frac, 3)} "
+            f"roofline_frac={d.roofline_frac and round(d.roofline_frac, 3)} "
+            f"peak/dev={peak_dev/2**30:.2f}GiB fits={peak_dev <= V5E_HBM}"
+        )
+    return rec
+
+
+def run_ch_cell(name: str, *, multi_pod: bool, verbose: bool = True) -> dict:
+    """Paper-native Cahn–Hilliard dry-run cells (beyond the 40 LM cells)."""
+    import jax.numpy as jnp
+
+    from repro.core.cahn_hilliard import CHConfig
+    from repro.core.dist_ch import DistributedCahnHilliard
+    from repro.core.domain import DomainDecomposition
+
+    grids = {
+        "ch_2048": dict(n=2048, ensemble=None),  # paper Fig-1 scale x4
+        "ch_16k": dict(n=16384, ensemble=None),  # production single-field
+        "ch_ens64_4k": dict(n=4096, ensemble=64),  # ensemble sweep
+    }
+    g = grids[name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dd = DomainDecomposition(
+        mesh=mesh,
+        y_axis="data",
+        x_axis="model",
+        ensemble_axis=("pod" if (multi_pod and g["ensemble"]) else None),
+    )
+    cfg = CHConfig(nx=g["n"], ny=g["n"], dt=1e-3, dtype="float32")
+    solver = DistributedCahnHilliard(cfg, dd)
+    sds = solver.input_specs(ensemble=g["ensemble"])
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(
+            lambda a, b: solver.multi_step(a, b, 8), donate_argnums=(0, 1)
+        ).lower(*sds)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        txt = compiled.as_text()
+    costs = hlo_costs.analyze_hlo(txt)
+    # model flops: per step per point: ~60 flops RHS + 2x penta substitution
+    pts = g["n"] ** 2 * (g["ensemble"] or 1) * 8  # 8 steps in the program
+    mf = pts * (60 + 2 * 9 + 2 * 9)
+    terms = RooflineTerms(
+        flops=costs.flops * mesh.size,
+        bytes_accessed=costs.bytes * mesh.size,
+        collective_bytes=costs.collective_bytes,
+        n_chips=mesh.size,
+        model_flops=mf,
+    )
+    peak_dev = (
+        int(ma.argument_size_in_bytes) + int(ma.output_size_in_bytes)
+        + int(ma.temp_size_in_bytes) - int(ma.alias_size_in_bytes)
+    )
+    rec = {
+        "arch": "cahn-hilliard",
+        "shape": name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": mesh.size,
+        "status": "ok",
+        "compile_s": round(time.time() - t0, 2),
+        "memory": {"peak_per_device": peak_dev, "fits_v5e": peak_dev <= V5E_HBM},
+        "hlo_costs": {
+            "flops_per_device": costs.flops,
+            "bytes_per_device": costs.bytes,
+            "collective_bytes_per_device": costs.collective_bytes,
+            "collectives": costs.collectives,
+        },
+        "roofline": terms.to_dict(),
+    }
+    if verbose:
+        print(
+            f"[CH {name} @ {rec['mesh']}] t_comp={terms.t_compute:.5f}s "
+            f"t_mem={terms.t_memory:.5f}s t_coll={terms.t_collective:.5f}s "
+            f"dominant={terms.dominant} peak/dev={peak_dev/2**30:.3f}GiB"
+        )
+    return rec
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--ch", action="store_true", help="run CH PDE cells")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records, failures = [], []
+
+    def one(arch, shape, mp):
+        cfg = get_config(arch)
+        ok, why = cell_supported(cfg, shape)
+        mesh_tag = "2x16x16" if mp else "16x16"
+        if not ok:
+            rec = {
+                "arch": arch, "shape": shape, "mesh": mesh_tag,
+                "status": "skipped", "reason": why,
+            }
+            print(f"[{arch} x {shape} @ {rec['mesh']}] SKIP: {why}")
+            return rec
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp)
+            jax.clear_caches()  # bound compile-cache RAM over the sweep
+            return rec
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((arch, shape, mesh_tag, str(e)))
+            return {
+                "arch": arch, "shape": shape, "mesh": mesh_tag,
+                "status": "failed", "error": f"{type(e).__name__}: {e}",
+            }
+
+    if args.ch:
+        for name in ("ch_2048", "ch_16k", "ch_ens64_4k"):
+            for mp in meshes:
+                try:
+                    records.append(run_ch_cell(name, multi_pod=mp))
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append(("cahn-hilliard", name, mp, str(e)))
+    elif args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                for mp in meshes:
+                    records.append(one(arch, shape, mp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all / --ch)")
+        for mp in meshes:
+            records.append(one(args.arch, args.shape, mp))
+
+    stamp = time.strftime("%Y%m%d_%H%M%S")
+    path = os.path.join(args.out, f"dryrun_{stamp}.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"wrote {path} ({len(records)} records, {len(failures)} failures)")
+    if failures:
+        for fl in failures:
+            print("FAILED:", fl)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

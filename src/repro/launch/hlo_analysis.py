@@ -1,0 +1,164 @@
+"""HLO-text analysis: collective traffic + roofline terms from a compiled
+dry-run artifact (no hardware needed).
+
+``collective_bytes`` parses the post-SPMD module and sums operand bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.  ``cost_analysis`` supplies HLO FLOPs and bytes
+accessed.  Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment card).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  f32[256,1024]{1,0}  or  bf16[8,128]
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+    re.M,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from the (partitioned) HLO text.
+
+    Bytes are the *output* operand sizes of each collective op (per
+    participating device program)."""
+    stats = {k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _shape_bytes(shape_str)
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float  # HLO flops (whole program, all devices)
+    bytes_accessed: float  # HLO bytes (whole program, all devices)
+    collective_bytes: float  # per-device collective bytes (sum over ops)
+    n_chips: int
+    model_flops: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.n_chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # collective_bytes is per-device already (partitioned module)
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> Optional[float]:
+        if self.model_flops is None or self.flops == 0:
+            return None
+        return self.model_flops / self.flops
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_frac(self) -> Optional[float]:
+        """MODEL_FLOPS / (chips * peak * bound_time): the score proxy —
+        useful work per second vs what the dominant resource allows."""
+        if self.model_flops is None or self.bound_time == 0:
+            return None
+        return self.model_flops / (
+            self.n_chips * PEAK_FLOPS * self.bound_time
+        )
+
+    def to_dict(self):
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def analyze_compiled(compiled, *, n_chips: int, model_flops=None):
+    """RooflineTerms + collective table from a compiled executable."""
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    colls = collective_stats(txt)
+    cbytes = sum(v["bytes"] for v in colls.values())
+    terms = RooflineTerms(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes=cbytes,
+        n_chips=n_chips,
+        model_flops=model_flops,
+    )
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    mem["peak_per_device"] = (
+        mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
+        - mem["alias_bytes"]
+    )
+    return terms, colls, mem

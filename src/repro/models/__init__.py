@@ -1,0 +1,5 @@
+"""LM substrate for the assigned architecture pool (pure JAX).
+
+Import :func:`repro.models.api.build_model` for the uniform interface.
+(Not re-exported here to keep config <-> model imports acyclic.)
+"""

@@ -1,0 +1,130 @@
+"""Uniform model interface over the architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods are the exact
+functions the launcher lowers for each (arch x shape) cell:
+
+- ``init(key)``                          — parameter pytree
+- ``loss(params, batch, sh)``            — scalar train loss
+- ``prefill_logits(params, batch, sh)``  — full-sequence logits
+- ``init_cache(batch, max_seq)``         — decode cache pytree
+- ``decode(params, token, pos, cache, sh)`` — one serve step
+- ``batch_spec(shape)``                  — input names/shapes for the cell
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.runtime.sharding import Shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable  # (params, batch_dict, sh) -> scalar
+    prefill_logits: Callable  # (params, batch_dict, sh) -> (B, S, V)
+    init_cache: Optional[Callable]  # (batch, max_seq) -> cache
+    decode: Optional[Callable]  # (params, token, pos, cache, sh)
+    prefill_serve: Optional[Callable] = None  # (params, batch, sh) -> (logits_last, kvs)
+
+    def input_names(self, step: str):
+        if step == "train":
+            if self.cfg.family == "encdec":
+                return ("frames", "tokens", "labels")
+            if self.cfg.family == "vlm":
+                return ("patches", "tokens", "labels")
+            return ("tokens", "labels")
+        if step == "prefill":
+            if self.cfg.family == "encdec":
+                return ("frames", "tokens")
+            if self.cfg.family == "vlm":
+                return ("patches", "tokens")
+            return ("tokens",)
+        return ("token",)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+
+    if fam == "encdec":
+        def loss(params, batch, sh=Shardings.none()):
+            return encdec_mod.loss_fn(
+                params, cfg, batch["frames"], batch["tokens"], batch["labels"], sh
+            )
+
+        def prefill_logits(params, batch, sh=Shardings.none()):
+            enc = encdec_mod.encode(params, cfg, batch["frames"], sh)
+            return encdec_mod.decode_train(params, cfg, enc, batch["tokens"], sh)
+
+        def prefill_serve(params, batch, sh=Shardings.none()):
+            enc = encdec_mod.encode(params, cfg, batch["frames"], sh)
+            xk, xv = encdec_mod.prefill_cross(params, cfg, enc)
+            logits = encdec_mod.decode_train(
+                params, cfg, enc, batch["tokens"], sh
+            )[:, -1, :]
+            return logits, (xk, xv)
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec_mod.init_params(key, cfg),
+            loss=loss,
+            prefill_logits=prefill_logits,
+            init_cache=lambda b, s: encdec_mod.init_cache(cfg, b, s),
+            decode=lambda params, token, pos, cache, sh=Shardings.none():
+                encdec_mod.decode_step(params, cfg, token, pos, cache, sh),
+            prefill_serve=prefill_serve,
+        )
+
+    if fam == "vlm":
+        def loss(params, batch, sh=Shardings.none()):
+            return tf_mod.loss_fn(
+                params, cfg, batch["tokens"], batch["labels"], sh,
+                extra_embeds=batch["patches"],
+            )
+
+        def prefill_logits(params, batch, sh=Shardings.none()):
+            logits, _, _ = tf_mod.forward(
+                params, cfg, batch["tokens"], sh, extra_embeds=batch["patches"]
+            )
+            return logits
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: tf_mod.init_params(key, cfg),
+            loss=loss,
+            prefill_logits=prefill_logits,
+            init_cache=lambda b, s: tf_mod.init_cache(cfg, b, s),
+            decode=lambda params, token, pos, cache, sh=Shardings.none():
+                tf_mod.decode_step(params, cfg, token, pos, cache, sh),
+            prefill_serve=lambda params, batch, sh=Shardings.none():
+                tf_mod.prefill(params, cfg, batch["tokens"], sh,
+                               extra_embeds=batch["patches"]),
+        )
+
+    # decoder-only families: dense / moe / ssm / hybrid
+    def loss(params, batch, sh=Shardings.none()):
+        return tf_mod.loss_fn(params, cfg, batch["tokens"], batch["labels"], sh)
+
+    def prefill_logits(params, batch, sh=Shardings.none()):
+        logits, _, _ = tf_mod.forward(params, cfg, batch["tokens"], sh)
+        return logits
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: tf_mod.init_params(key, cfg),
+        loss=loss,
+        prefill_logits=prefill_logits,
+        init_cache=lambda b, s: tf_mod.init_cache(cfg, b, s),
+        decode=lambda params, token, pos, cache, sh=Shardings.none():
+            tf_mod.decode_step(params, cfg, token, pos, cache, sh),
+        prefill_serve=lambda params, batch, sh=Shardings.none():
+            tf_mod.prefill(params, cfg, batch["tokens"], sh),
+    )

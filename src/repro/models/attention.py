@@ -1,0 +1,350 @@
+"""Attention: GQA with RoPE, flash-style chunked attention (pure JAX), KV
+caches for decode, and a shard_map flash-decode for sequence-sharded caches.
+
+Shapes: q (B, S, H, hd); k, v (B, S, KV, hd) with H % KV == 0 (GQA).
+Softmax statistics are kept in f32 regardless of the compute dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_NEG_INF = -1e30
+
+
+def _expand_kv(k, n_rep: int):
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd) repeating each kv head."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, kv, n_rep, hd)
+    ).reshape(b, s, kv * n_rep, hd)
+
+
+def plain_attention(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Reference attention (materialises the score matrix).  Oracle for the
+    flash path and the small-model smoke path."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    k = _expand_kv(k, h // kv)
+    v = _expand_kv(v, h // kv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(ki <= qi, scores, _NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+):
+    """Online-softmax chunked attention in pure JAX (lax.scan over KV blocks,
+    outer map over Q blocks).  O(S * chunk) memory instead of O(S^2) — this
+    is what lets the 32k-prefill cells fit HBM.  XLA maps the inner einsums
+    onto the MXU; on TPU the scan pipelines HBM reads of K/V blocks.
+
+    GQA is handled *inside* the einsums (q reshaped to (KV, group) heads)
+    so the K/V blocks are never materialised n_rep times — expanding the
+    cache 4-8x in f32 was the dominant HBM term of the first decode/prefill
+    baselines (EXPERIMENTS.md §Perf).
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    if sq % q_chunk or sk % kv_chunk:
+        return plain_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+    scale = 1.0 / math.sqrt(hd)
+    nq = sq // q_chunk
+    nk = sk // kv_chunk
+    # q: (nq, B, qc, KV, G, hd); k/v: (nk, B, kc, KV, hd)
+    qb = q.reshape(b, nq, q_chunk, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(b, nk, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    @functools.partial(jax.checkpoint, policy=None)  # flash backward:
+    # recompute score blocks instead of saving the (nq, nk, ...) f32 stacks
+    # the inner scan's autodiff would otherwise checkpoint (9+ TiB of HBM
+    # traffic on the 96L cells — see EXPERIMENTS.md §Perf iteration 1).
+    def per_q_block(qi, qblk):
+        # online softmax over kv blocks; scores (B, KV, G, qc, kc)
+        def body(carry, inputs):
+            m, l, acc = carry
+            ki_idx, kblk, vblk = inputs
+            s = (
+                jnp.einsum(
+                    "bqkgd,bskd->bkgqs", qblk, kblk,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+            )
+            if causal:
+                qpos = (
+                    qi * q_chunk + q_offset + jnp.arange(q_chunk)[:, None]
+                )
+                kpos = ki_idx * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                s = jnp.where(kpos <= qpos, s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(nk), kb, vb)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)  # (B, qc, KV, G, hd)
+
+    outs = jax.lax.map(
+        lambda args: per_q_block(*args), (jnp.arange(nq), qb)
+    )  # (nq, B, qc, KV, G, hd)
+    return (
+        outs.transpose(1, 0, 2, 3, 4, 5)
+        .reshape(b, sq, h, hd)
+        .astype(q.dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode (KV cache) paths
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token decode against a (B, KV, S_max, hd) cache.  ``pos`` is the
+    index of the *current* token (attends to cache[<= pos]).  GQA handled
+    grouped (no cache expansion); the (B, KV, S, hd) layout keeps the score
+    dot transpose-free."""
+    b, kvh, smax, hd = k_cache.shape
+    h = q.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, q.shape[1], kvh, g, hd)
+    s = jnp.einsum(
+        "bqkgd,bksd->bkgqs", qg, k_cache,
+        preferred_element_type=jnp.float32,
+    )
+    s = s / math.sqrt(hd)
+    mask = jnp.arange(smax)[None, None, None, None, :] <= pos
+    s = jnp.where(mask, s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgqs,bksd->bqkgd", w.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(b, q.shape[1], h, hd).astype(q.dtype)
+
+
+def sharded_decode_attention(
+    q, k_cache, v_cache, pos, *, mesh, seq_axes, batch_axes=None
+):
+    """Flash-decoding over a *sequence-sharded* KV cache.
+
+    The cache's S axis is sharded over ``seq_axes`` (e.g. ``('model',)`` for
+    decode_32k, ``('data', 'model')`` for the 500k-context cells).  Each
+    shard computes partial (max, sum, weighted-V) statistics over its local
+    slice; two tiny ``psum``/``pmax`` collectives (B*H floats) merge them —
+    instead of all-gathering a multi-GB cache.  This is the halo-free analogue
+    of the paper's tiled pipeline: keep the big operand resident, move only
+    reductions.
+
+    q: (B, 1, H, hd) with B possibly sharded over ``batch_axes``.
+    """
+    seq_axes = tuple(seq_axes)
+    n_shards = 1
+    for a in seq_axes:
+        n_shards *= mesh.shape[a]
+    b, kvh, smax, hd = k_cache.shape
+    s_loc = smax // n_shards
+    h = q.shape[2]
+
+    bspec = batch_axes if batch_axes else None
+
+    def local(qb, kb, vb, posb):
+        # shard index along the flattened seq axes
+        idx = 0
+        for a in seq_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        g = h // kvh
+        qg = qb.reshape(qb.shape[0], qb.shape[1], kvh, g, hd)
+        # scores (B, KV, G, 1, s_loc) — grouped GQA on the transpose-free
+        # (B, KV, S, hd) layout, bf16 operands, f32 accumulation
+        s = jnp.einsum(
+            "bqkgd,bksd->bkgqs", qg, kb,
+            preferred_element_type=jnp.float32,
+        )
+        s = s / math.sqrt(hd)
+        gk = idx * s_loc + jnp.arange(s_loc)
+        s = jnp.where(gk[None, None, None, None, :] <= posb, s, _NEG_INF)
+        m_loc = s.max(axis=-1)
+        m = jax.lax.pmax(m_loc, seq_axes)
+        p = jnp.exp(s - m[..., None])
+        l = jax.lax.psum(p.sum(axis=-1), seq_axes)
+        o = jax.lax.psum(
+            jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            ),
+            seq_axes,
+        )
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        # (B, KV, G, 1, hd) -> (B, 1, H, hd)
+        return (
+            out.transpose(0, 3, 1, 2, 4)
+            .reshape(qb.shape[0], qb.shape[1], h, hd)
+            .astype(qb.dtype)
+        )
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None, None),
+            P(bspec, None, seq_axes, None),
+            P(bspec, None, seq_axes, None),
+            P(),
+        ),
+        out_specs=P(bspec, None, None, None),
+        check_vma=False,
+    )(q, k_cache, v_cache, pos)
+
+
+def cache_update(k_cache, v_cache, k_new, v_new, pos):
+    """Insert the new token's K/V at ``pos``.  Cache layout (B, KV, S, hd);
+    new values arrive as (B, 1, KV, hd) from the projection."""
+    k_new = k_new.transpose(0, 2, 1, 3).astype(k_cache.dtype)
+    v_new = v_new.transpose(0, 2, 1, 3).astype(v_cache.dtype)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, 0, pos, 0))
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# int8-quantised KV cache (per-token-per-head absmax scales)
+#
+# The nemotron decode_32k cell's bf16 cache alone is 19.2 GiB/chip at 256
+# chips — physically over v5e HBM.  int8 + f32 scales is 9.7 GiB and is the
+# standard production answer (vLLM-style KV quantisation).  Dequantisation
+# happens shard-locally inside the flash-decode, so the bf16 copy is never
+# resident.
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x):
+    """(B, 1, KV, hd) -> (int8 values (B,KV,1,hd), f32 scales (B,KV,1))."""
+    xt = x.transpose(0, 2, 1, 3).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xt), axis=-1) / 127.0  # (B, KV, 1)
+    q = jnp.round(xt / jnp.maximum(scale[..., None], 1e-10)).astype(jnp.int8)
+    return q, scale
+
+
+def cache_update_q(cache, k_new, v_new, pos):
+    """Quantised-cache insert.  cache: dict(k,v int8 (B,KV,S,hd);
+    k_s,v_s f32 (B,KV,S))."""
+    kq, ks = quantize_kv(k_new)
+    vq, vs = quantize_kv(v_new)
+    out = dict(cache)
+    out["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, pos, 0))
+    out["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, pos, 0))
+    out["k_s"] = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, 0, pos))
+    out["v_s"] = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, 0, pos))
+    return out
+
+
+def _dequant(q, s, dtype):
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def decode_attention_q(q, cache, pos, compute_dtype=jnp.bfloat16):
+    """decode_attention over an int8-quantised cache (dequant on the fly)."""
+    k = _dequant(cache["k"], cache["k_s"], compute_dtype)
+    v = _dequant(cache["v"], cache["v_s"], compute_dtype)
+    return decode_attention(q, k, v, pos)
+
+
+def sharded_decode_attention_q(
+    q, cache, pos, *, mesh, seq_axes, batch_axes=None,
+    compute_dtype=jnp.bfloat16,
+):
+    """Flash-decode over the sequence-sharded int8 cache: each shard
+    dequantises only its local slice (bf16 copy never fully resident)."""
+    seq_axes = tuple(seq_axes)
+    bspec = batch_axes if batch_axes else None
+    n_shards = 1
+    for a in seq_axes:
+        n_shards *= mesh.shape[a]
+    b, kvh, smax, hd = cache["k"].shape
+    s_loc = smax // n_shards
+    h = q.shape[2]
+
+    def local(qb, kq, ks, vq, vs, posb):
+        idx = 0
+        for a in seq_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        k = _dequant(kq, ks, compute_dtype)
+        v = _dequant(vq, vs, compute_dtype)
+        g = h // kvh
+        qg = qb.reshape(qb.shape[0], qb.shape[1], kvh, g, hd)
+        s = jnp.einsum(
+            "bqkgd,bksd->bkgqs", qg, k, preferred_element_type=jnp.float32
+        ) / math.sqrt(hd)
+        gk = idx * s_loc + jnp.arange(s_loc)
+        s = jnp.where(gk[None, None, None, None, :] <= posb, s, _NEG_INF)
+        m = jax.lax.pmax(s.max(axis=-1), seq_axes)
+        p = jnp.exp(s - m[..., None])
+        l = jax.lax.psum(p.sum(axis=-1), seq_axes)
+        o = jax.lax.psum(
+            jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(v.dtype), v,
+                preferred_element_type=jnp.float32,
+            ),
+            seq_axes,
+        )
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return (
+            out.transpose(0, 3, 1, 2, 4)
+            .reshape(qb.shape[0], qb.shape[1], h, hd)
+            .astype(qb.dtype)
+        )
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None, None),
+            P(bspec, None, seq_axes, None),
+            P(bspec, None, seq_axes),
+            P(bspec, None, seq_axes, None),
+            P(bspec, None, seq_axes),
+            P(),
+        ),
+        out_specs=P(bspec, None, None, None),
+        check_vma=False,
+    )(q, cache["k"], cache["k_s"], cache["v"], cache["v_s"], pos)

@@ -1,0 +1,223 @@
+"""Shared neural-net layers for the architecture pool (pure JAX, no flax).
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init
+function takes a ``jax.random`` key; apply functions are pure.  Layer stacks
+are stored with a leading layer axis and consumed by ``lax.scan`` so HLO size
+and compile time are O(1) in depth (essential for the 96-layer dry-runs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """Mixed-precision policy: bf16 params/compute, f32 softmax/norms."""
+
+    params: str = "bfloat16"
+    compute: str = "bfloat16"
+    norm: str = "float32"
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.params)
+
+    @property
+    def cdt(self):
+        return jnp.dtype(self.compute)
+
+
+def trunc_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, std: Optional[float] = None):
+    std = (d_in**-0.5) if std is None else std
+    return trunc_normal(key, (d_in, d_out), std, dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# -- rotary position embedding -------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32):
+    """Whisper-style fixed sinusoidal embeddings (S, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (d // 2 - 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# -- MLP ----------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, dtype, *, gated: bool):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params, x, *, activation: str):
+    """activation: 'silu' (gated SwiGLU), 'gelu', 'relu2' (squared ReLU,
+    Nemotron-4), 'relu'."""
+    up = x @ params["w_up"]
+    if activation == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    elif activation == "gelu":
+        h = jax.nn.gelu(up)
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    elif activation == "relu":
+        h = jax.nn.relu(up)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return h @ params["w_down"]
+
+
+# -- embeddings / unembedding ---------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return trunc_normal(key, (vocab, d), d**-0.5, dtype)
+
+
+def embed_lookup(table, tokens, *, chunk: int = 2048):
+    """Gather as a one-hot matmul.  Under SPMD with a vocab-sharded table the
+    compare+select fuses into a masked local reduction + small all-reduce —
+    no table all-gather (Megatron vocab-parallel embedding).
+
+    Long sequences are processed in chunks by a scan so the transient
+    (B, S, V_shard) one-hot never materialises (7.7 GiB/device on the
+    32k-prefill cells otherwise — §Perf)."""
+    V = table.shape[0]
+    s = tokens.shape[-1]
+    if tokens.ndim == 2 and s > chunk:
+        b = tokens.shape[0]
+        main = (s // chunk) * chunk
+        tc = tokens[:, :main].reshape(b, s // chunk, chunk).transpose(1, 0, 2)
+
+        def body(_, tk):
+            one_hot = jax.nn.one_hot(tk, V, dtype=table.dtype)
+            return None, one_hot @ table
+
+        _, out = jax.lax.scan(body, None, tc)
+        out = out.transpose(1, 0, 2, 3).reshape(b, main, table.shape[1])
+        if main < s:  # remainder tail
+            oh = jax.nn.one_hot(tokens[:, main:], V, dtype=table.dtype)
+            out = jnp.concatenate([out, oh @ table], axis=1)
+        return out
+    one_hot = jax.nn.one_hot(tokens, V, dtype=table.dtype)
+    return one_hot @ table
+
+
+def unembed_logits(x, table):
+    """Tied or untied output projection: (..., d) @ (V, d)^T."""
+    return jnp.einsum("...d,vd->...v", x, table)
+
+
+def chunked_softmax_cross_entropy(
+    hidden, table, labels, *, z_loss: float = 0.0, chunk: int = 512,
+    transpose_table: bool = False,
+):
+    """CE over sequence chunks without materialising (B, S, V) logits.
+
+    ``hidden``: (B, S, D); ``table``: (D, V) (or (V, D) with
+    ``transpose_table`` for tied embeddings).  Each chunk's logits are
+    produced, reduced to (lse, label_logit), and dropped; ``jax.checkpoint``
+    makes the backward recompute them chunkwise.  Cuts ~2 * B*S*V*4 bytes of
+    peak HBM on the big-vocab cells (EXPERIMENTS.md §Perf).
+    """
+    b, s, d = hidden.shape
+    if s % chunk:
+        logits = (
+            unembed_logits(hidden, table) if transpose_table else hidden @ table
+        )
+        return softmax_cross_entropy(logits, labels, z_loss=z_loss)
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(h, l):
+        logits = unembed_logits(h, table) if transpose_table else h @ table
+        return softmax_cross_entropy(logits, l, z_loss=z_loss)
+
+    def body(acc, xs):
+        h, l = xs
+        return acc + one(h, l).sum(), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return tot / (b * s)
+
+
+def softmax_cross_entropy(logits, labels, *, z_loss: float = 0.0):
+    """Vocab-parallel-safe CE: label logit via iota-compare masked reduction
+    (no gather across the sharded vocab axis).  Returns per-token loss."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    V = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(iota == labels[..., None], lf, 0.0), axis=-1
+    )
+    loss = lse - label_logit
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss

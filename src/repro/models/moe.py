@@ -1,0 +1,128 @@
+"""Mixture-of-Experts layer: top-k routing with GShard-style static-capacity
+einsum dispatch (TPU-native — no ragged gathers, shardable by XLA SPMD).
+
+Experts live on the ``model`` mesh axis (all assigned MoE archs have 16
+experts — one per model rank on the production mesh); the dispatch/combine
+einsums lower to all-to-alls.  Aux load-balance loss follows Switch/GShard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 16
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    every_k_layers: int = 1  # MoE every k-th layer (2 for jamba)
+    aux_loss_weight: float = 0.01
+    group_tokens: int = 8192  # GShard group size (capacity per group)
+
+
+def moe_init(key, d: int, d_ff: int, cfg: MoEConfig, dtype, *, gated: bool):
+    ks = jax.random.split(key, cfg.num_experts + 1)
+    experts = [
+        mlp_init(ks[i], d, d_ff, dtype, gated=gated)
+        for i in range(cfg.num_experts)
+    ]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *experts)
+    return {
+        "router": dense_init(ks[-1], d, cfg.num_experts, dtype, std=0.02),
+        "experts": stacked,  # leaves (E, ...)
+    }
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(cap, cfg.top_k)
+
+
+def moe_apply(
+    params, x, cfg: MoEConfig, *, activation: str, dropless: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    ``dropless=True`` sizes capacity to the worst case (serving/decode path:
+    no token may be dropped, matching production inference semantics).
+
+    GShard grouping: sequences longer than ``group_tokens`` are processed in
+    token groups by an outer scan, with capacity enforced *per group* (the
+    GShard/Switch semantics).  Without grouping the (T, E, C) dispatch
+    tensors grow O(T^2/E) — 176 GiB/device on the dbrx prefill_32k cell
+    (EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    t = b * s
+    group = cfg.group_tokens
+    if not dropless and t > group and t % group == 0:
+        xg = x.reshape(t // group, group, d)
+
+        @jax.checkpoint  # recompute dispatch/expert stacks per group in the
+        # backward instead of stacking (groups, E, cap, ff) residuals
+        def per_group(_, xs):
+            out, aux = _moe_dense_dispatch(
+                params, xs[None], cfg, activation=activation, dropless=False
+            )
+            return None, (out[0], aux)
+
+        _, (outs, auxs) = jax.lax.scan(per_group, None, xg)
+        return outs.reshape(b, s, d), auxs.mean()
+    return _moe_dense_dispatch(
+        params, x, cfg, activation=activation, dropless=dropless
+    )
+
+
+def _moe_dense_dispatch(
+    params, x, cfg: MoEConfig, *, activation: str, dropless: bool
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    e = cfg.num_experts
+    t = b * s
+    cap = t if dropless else _capacity(t, cfg)
+    xt = x.reshape(t, d)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # Static-capacity dispatch: position of each (token, slot) in its expert.
+    dispatch = jnp.zeros((t, e, cap), jnp.float32)
+    combine = jnp.zeros((t, e, cap), jnp.float32)
+    counts = jnp.zeros((e,), jnp.int32)
+    for slot in range(cfg.top_k):
+        sel = jax.nn.one_hot(gate_idx[:, slot], e, dtype=jnp.int32)  # (T, E)
+        pos = counts[None, :] + jnp.cumsum(sel, axis=0) - sel  # (T, E)
+        keep = (pos < cap) & (sel > 0)
+        pos_oh = jax.nn.one_hot(
+            jnp.where(keep, pos, cap), cap + 1, dtype=jnp.float32
+        )[..., :cap]  # (T, E, cap); overflow -> dropped
+        dispatch = dispatch + pos_oh
+        combine = combine + pos_oh * gate_vals[:, slot][:, None, None]
+        counts = counts + sel.sum(axis=0)
+
+    # (E, cap, D) expert inputs — this einsum is the all-to-all under SPMD
+    xin = jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), xt)
+
+    def run_expert(p, xe):
+        return mlp_apply(p, xe, activation=activation)
+
+    h = jax.vmap(run_expert)(params["experts"], xin)  # (E, cap, D)
+    out = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), h)
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=0)  # mean router prob per expert
+    ce = (
+        jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32).mean(axis=0)
+    )  # fraction of tokens whose top-1 is e
+    aux = cfg.aux_loss_weight * e * jnp.sum(me * ce)
+    return out.reshape(b, s, d), aux

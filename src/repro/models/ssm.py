@@ -1,0 +1,355 @@
+"""State-space / linear-attention blocks: RWKV6 ("Finch") and Mamba.
+
+Both are implemented in their recurrent form with ``lax.scan`` over time
+(compile-time O(1) in sequence length; decode carries O(1) state — the whole
+point of the 500k-context cells).  Training-time chunked/parallel variants
+are a recorded perf-iteration target (EXPERIMENTS.md §Perf).
+
+Shapes follow the assigned configs: rwkv6-7b d_model=4096, head_dim=64
+(64 heads); jamba mamba d_inner = 2*d_model, d_state=16, d_conv=4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+_TIME_CHUNK = 256
+
+
+def chunked_scan(step, init, xs, *, chunk: int = _TIME_CHUNK):
+    """lax.scan with per-chunk rematerialisation.
+
+    A plain scan's autodiff saves residuals for *every* timestep — for the
+    train_4k SSM cells that is (S=4096) x (B, H, hd, hd) f32 stacks (3500 s
+    of HBM traffic on jamba, EXPERIMENTS.md §Perf).  Chunking saves only the
+    carry at S/chunk boundaries and recomputes inside each chunk during the
+    backward pass."""
+    leaves = jax.tree.leaves(xs)
+    S = leaves[0].shape[0]
+    if S <= chunk or S % chunk:
+        return jax.lax.scan(step, init, xs)
+    xs_c = jax.tree.map(
+        lambda x: x.reshape((S // chunk, chunk) + x.shape[1:]), xs
+    )
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys_c = jax.lax.scan(chunk_body, init, xs_c)
+    ys = jax.tree.map(
+        lambda y: y.reshape((S,) + y.shape[2:]), ys_c
+    )
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent token-shift and decay (arXiv:2404.05892)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    lora_mix: int = 32  # rank of the ddlerp LoRA
+    lora_decay: int = 64  # rank of the decay LoRA
+
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv_time_mix_init(key, d: int, cfg: RWKVConfig, dtype):
+    ks = jax.random.split(key, 12)
+    hd = cfg.head_dim
+    n_heads = d // hd
+    return {
+        "mu_x": jnp.zeros((d,), dtype),
+        "mu": jnp.zeros((5, d), dtype),
+        "lora_a": dense_init(ks[0], d, 5 * cfg.lora_mix, dtype, std=0.02),
+        "lora_b": trunc_zeros(5, cfg.lora_mix, d, dtype),
+        "w_r": dense_init(ks[1], d, d, dtype),
+        "w_k": dense_init(ks[2], d, d, dtype),
+        "w_v": dense_init(ks[3], d, d, dtype),
+        "w_g": dense_init(ks[4], d, d, dtype),
+        "w_o": dense_init(ks[5], d, d, dtype),
+        "decay_base": jnp.full((d,), -6.0, dtype),  # w0: slow decay at init
+        "decay_a": dense_init(ks[6], d, cfg.lora_decay, dtype, std=0.02),
+        "decay_b": jnp.zeros((cfg.lora_decay, d), dtype),
+        "bonus": jnp.zeros((n_heads, hd), dtype),  # u ("first token bonus")
+        "ln_out": rmsnorm_init(d, dtype),
+    }
+
+
+def trunc_zeros(n, r, d, dtype):
+    return jnp.zeros((n, r, d), dtype)
+
+
+def rwkv_channel_mix_init(key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dtype),
+        "mu_r": jnp.zeros((d,), dtype),
+        "w_k": dense_init(ks[0], d, d_ff, dtype),
+        "w_v": dense_init(ks[1], d_ff, d, dtype),
+        "w_r": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation for the 5 streams."""
+    dx = x_prev - x
+    base = x + dx * p["mu_x"].astype(x.dtype)
+    r = p["lora_a"].shape[1] // 5
+    lo = jnp.tanh(base @ p["lora_a"])  # (..., 5r)
+    lo = lo.reshape(*lo.shape[:-1], 5, r)
+    adj = jnp.einsum("...nr,nrd->...nd", lo, p["lora_b"].astype(x.dtype))
+    mu = p["mu"].astype(x.dtype) + adj  # (..., 5, d)
+    return [x + dx * mu[..., i, :] for i in range(5)]
+
+
+def _rwkv_decay(p, xw):
+    lo = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"].astype(xw.dtype)
+    wt = p["decay_base"].astype(jnp.float32) + lo.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(wt))  # in (0, 1), data-dependent per channel
+
+
+_WKV_CHUNK = 32
+
+
+def _wkv_chunked(rr, kk, vv, ww, u, state, *, chunk: int = _WKV_CHUNK):
+    """Chunkwise-parallel WKV6 (flash-linear-attention style).
+
+    Replaces the per-timestep recurrence (whose state I/O dominated the
+    rwkv6 train_4k memory term at 126 s/step, §Perf) with per-chunk batched
+    einsums.  Exact reformulation: with per-channel log-decay
+    ``L_t = sum_{s<=t} log w_s`` (decreasing), for t in a chunk with
+    incoming state S0:
+
+        y_t = (r_t * e^{L_{t-1}}) S0
+              + sum_{tau<t} [sum_d r_t k_tau e^{L_{t-1}-L_tau}]_d v_tau
+              + (r_t . (u*k_t)) v_t
+        S_C = diag(e^{L_C}) S0 + sum_tau (k_tau * e^{L_C - L_tau})^T v_tau
+
+    Every exponent is a *ratio* along the chunk, hence <= 1 — no overflow.
+    Inputs: (S, B, H, hd) time-major; state (B, H, hd, hd) f32.
+    Returns (final_state, ys (S, B, H, hd)).
+    """
+    S, b, h, hd = rr.shape
+    n = S // chunk
+    out_dtype = rr.dtype
+
+    def resh(x):
+        return (
+            x.reshape(n, chunk, b, h, hd)
+            .transpose(0, 2, 3, 1, 4)
+            .astype(jnp.float32)
+        )  # (n, B, H, C, hd)
+
+    r_, k_, v_, w_ = resh(rr), resh(kk), resh(vv), resh(ww)
+    logw = jnp.log(jnp.maximum(w_, 1e-20))  # (n,B,H,C,hd), <= 0
+    L = jnp.cumsum(logw, axis=-2)  # L_t (inclusive)
+    Lprev = L - logw  # L_{t-1}
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def per_chunk(S0, inp):
+        r, k, v, Lc, Lp = inp  # (B,H,C,hd) each
+        # cross-chunk: (r * e^{Lp}) @ S0
+        r_dec = r * jnp.exp(Lp)
+        y_cross = jnp.einsum("bhck,bhkv->bhcv", r_dec, S0)
+        # intra-chunk scores with pairwise decay ratios (all <= 1)
+        ratio = jnp.exp(
+            jnp.clip(Lp[:, :, :, None, :] - Lc[:, :, None, :, :], -60.0, 0.0)
+        )  # (B,H,C,C,hd): e^{L_{t-1} - L_tau}
+        M = jnp.einsum("bhtd,bhsd,bhtsd->bhts", r, k, ratio)
+        M = jnp.where(causal[None, None], M, 0.0)
+        y_intra = jnp.einsum("bhts,bhsv->bhtv", M, v)
+        # bonus diagonal
+        diag = jnp.einsum("bhtd,bhtd->bht", r, k * u[None, :, None, :])
+        y_diag = diag[..., None] * v
+        y = y_cross + y_intra + y_diag  # (B,H,C,hd)
+        # state propagation (all ratios <= 1)
+        k_hat = k * jnp.exp(Lc[:, :, -1:, :] - Lc)
+        S_new = (
+            jnp.exp(Lc[:, :, -1, :])[..., None] * S0
+            + jnp.einsum("bhsk,bhsv->bhkv", k_hat, v)
+        )
+        return S_new, y.astype(out_dtype)
+
+    state, ys = jax.lax.scan(per_chunk, state, (r_, k_, v_, L, Lprev))
+    # (n, B, H, C, hd) -> (S, B, H, hd)
+    ys = ys.transpose(0, 3, 1, 2, 4).reshape(S, b, h, hd)
+    return state, ys
+
+
+def rwkv_time_mix(
+    p, x, cfg: RWKVConfig, state: Optional[Tuple] = None
+):
+    """x: (B, S, D).  state (decode): (x_prev (B,D), S (B,H,hd,hd)).
+    Returns (out, new_state)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    h = d // hd
+
+    if state is None:
+        x_prev_seq = jnp.concatenate(
+            [jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1
+        )
+        wkv_state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    else:
+        xp, wkv_state = state
+        x_prev_seq = xp[:, None, :] if s == 1 else jnp.concatenate(
+            [xp[:, None, :], x[:, :-1]], axis=1
+        )
+
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev_seq)
+    rr = (xr @ p["w_r"]).reshape(b, s, h, hd)
+    kk = (xk @ p["w_k"]).reshape(b, s, h, hd)
+    vv = (xv @ p["w_v"]).reshape(b, s, h, hd)
+    gg = jax.nn.silu(xg @ p["w_g"])
+    ww = _rwkv_decay(p, xw).reshape(b, s, h, hd)  # f32 decay in (0,1)
+    u = p["bonus"].astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, hd)
+        a_t = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                         v_t.astype(jnp.float32))
+        y = jnp.einsum(
+            "bhk,bhkv->bhv", r_t.astype(jnp.float32),
+            S + u[None, :, :, None] * a_t,
+        )
+        S_new = w_t.astype(jnp.float32)[..., None] * S + a_t
+        # emit in compute dtype: the stacked ys are (S, B, H, hd) — keeping
+        # them f32 doubled HBM traffic and peak memory (§Perf)
+        return S_new, y.astype(r_t.dtype)
+
+    xs = (
+        rr.transpose(1, 0, 2, 3),
+        kk.transpose(1, 0, 2, 3),
+        vv.transpose(1, 0, 2, 3),
+        ww.transpose(1, 0, 2, 3),
+    )
+    if s % _WKV_CHUNK == 0 and s > _WKV_CHUNK:
+        wkv_state, ys = _wkv_chunked(*xs, u, wkv_state)
+    else:
+        wkv_state, ys = chunked_scan(step, wkv_state, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    y = rmsnorm(p["ln_out"], y)
+    out = (y * gg) @ p["w_o"]
+    return out, (x[:, -1, :], wkv_state)
+
+
+def rwkv_channel_mix(p, x, state: Optional[jnp.ndarray] = None):
+    """state (decode): previous token (B, D)."""
+    b, s, d = x.shape
+    if state is None:
+        x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    else:
+        x_prev = state[:, None, :] if s == 1 else jnp.concatenate(
+            [state[:, None, :], x[:, :-1]], axis=1
+        )
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    r = jax.nn.sigmoid(xr @ p["w_r"])
+    return r * (k @ p["w_v"]), x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6) — for the Jamba hybrid (arXiv:2403.19887 defaults)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 256
+
+
+def mamba_init(key, d: int, cfg: MambaConfig, dtype):
+    ks = jax.random.split(key, 7)
+    din = cfg.expand * d
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * din, dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, din)).astype(dtype)
+        * (cfg.d_conv**-0.5),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": dense_init(ks[2], din, cfg.dt_rank + 2 * cfg.d_state, dtype),
+        "dt_proj": dense_init(ks[3], cfg.dt_rank, din, dtype, std=0.02),
+        "dt_bias": jnp.zeros((din,), dtype),
+        "a_log": jnp.log(
+            jnp.broadcast_to(
+                jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (din, cfg.d_state)
+            )
+        ),
+        "d_skip": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[4], din, d, dtype),
+    }
+
+
+def mamba_apply(p, x, cfg: MambaConfig, state: Optional[Tuple] = None):
+    """x: (B, S, D).  state (decode): (conv_buf (B, d_conv-1, din),
+    h (B, din, d_state)).  Returns (out, new_state)."""
+    b, s, d = x.shape
+    din = cfg.expand * d
+
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B, S, din) each
+
+    # causal depthwise conv along S
+    if state is None:
+        conv_buf = jnp.zeros((b, cfg.d_conv - 1, din), xin.dtype)
+    else:
+        conv_buf = state[0]
+    xpad = jnp.concatenate([conv_buf, xin], axis=1)
+    new_conv_buf = xpad[:, -(cfg.d_conv - 1) :, :]
+    conv = sum(
+        xpad[:, k : k + s, :] * p["conv_w"][k][None, None, :]
+        for k in range(cfg.d_conv)
+    ) + p["conv_b"]
+    u = jax.nn.silu(conv)  # (B, S, din)
+
+    proj = u @ p["x_proj"]
+    dt_low, Bmat, Cmat = jnp.split(
+        proj, [cfg.dt_rank, cfg.dt_rank + cfg.d_state], axis=-1
+    )
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])  # (B, S, din)
+    A = -jnp.exp(p["a_log"])  # (din, n) f32
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp  # (B, din), (B, din), (B, n), (B, n)
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)  # (B, din, n)
+        dBu = (
+            dt_t[..., None]
+            * b_t[:, None, :]
+            * u_t[..., None]
+        ).astype(jnp.float32)
+        h_new = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h_new, c_t.astype(jnp.float32))
+        return h_new, y.astype(u_t.dtype)
+
+    h0 = (
+        jnp.zeros((b, din, cfg.d_state), jnp.float32)
+        if state is None
+        else state[1]
+    )
+    xs = (
+        u.transpose(1, 0, 2),
+        dt.transpose(1, 0, 2),
+        Bmat.transpose(1, 0, 2),
+        Cmat.transpose(1, 0, 2),
+    )
+    h_fin, ys = chunked_scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    y = y + u * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, (new_conv_buf, h_fin)

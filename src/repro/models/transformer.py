@@ -1,0 +1,530 @@
+"""Decoder-only LM assembly for the dense / MoE / SSM / hybrid families.
+
+Layer stacks are stored with a leading layer axis and consumed by
+``lax.scan`` (hybrid: scan over period-groups with the static in-group
+pattern unrolled), so HLO size and compile time are depth-independent.
+
+Three entry points per model (the dry-run lowers each):
+
+- ``loss_fn``    — next-token CE (train_4k cells), remat + Shardings aware;
+- ``prefill``    — full-sequence forward returning logits + filled caches
+  (prefill_32k cells);
+- ``decode_step``— single-token step against caches (decode/long cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import attention as att
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_rope,
+    chunked_softmax_cross_entropy,
+    dense_init,
+    embed_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_cross_entropy,
+    unembed_logits,
+)
+from repro.runtime.sharding import Shardings
+
+
+# ---------------------------------------------------------------------------
+# per-layer kinds
+# ---------------------------------------------------------------------------
+
+
+def layer_kind(cfg: ArchConfig, idx: int) -> str:
+    """'attn' | 'mamba' | 'rwkv' for the mixer; MLP kind handled separately."""
+    if cfg.family == "ssm":
+        return "rwkv"
+    if cfg.family == "hybrid":
+        return "attn" if (idx % cfg.attn_every) == (cfg.attn_every - 1) else "mamba"
+    return "attn"
+
+
+def mlp_kind(cfg: ArchConfig, idx: int) -> str:
+    if cfg.moe is None:
+        return "dense"
+    k = cfg.moe.every_k_layers
+    return "moe" if (idx % k) == (k - 1) else "dense"
+
+
+def _attn_init(key, cfg: ArchConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+
+
+def _layer_init(key, cfg: ArchConfig, idx: int, dtype):
+    ks = jax.random.split(key, 4)
+    kind, mk = layer_kind(cfg, idx), mlp_kind(cfg, idx)
+    p: Dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["attn"] = _attn_init(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = ssm_mod.mamba_init(ks[0], cfg.d_model, cfg.mamba, dtype)
+    elif kind == "rwkv":
+        p["tmix"] = ssm_mod.rwkv_time_mix_init(ks[0], cfg.d_model, cfg.rwkv, dtype)
+    if cfg.family == "ssm":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cmix"] = ssm_mod.rwkv_channel_mix_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        if mk == "moe":
+            p["moe"] = moe_mod.moe_init(
+                ks[1], cfg.d_model, cfg.d_ff, cfg.moe, dtype, gated=cfg.gated_mlp
+            )
+        else:
+            p["mlp"] = mlp_init(
+                ks[1], cfg.d_model, cfg.d_ff, dtype, gated=cfg.gated_mlp
+            )
+    return p
+
+
+def _stack_period(cfg: ArchConfig) -> int:
+    """Layers per scan step: 1 for homogeneous stacks, the pattern period
+    for hybrids (jamba: lcm(attn_every=8, moe_every=2) = 8)."""
+    if cfg.family != "hybrid":
+        return 1
+    import math
+
+    return math.lcm(cfg.attn_every, cfg.moe.every_k_layers if cfg.moe else 1)
+
+
+def init_params(key, cfg: ArchConfig):
+    dtype = cfg.dtype_policy.pdt
+    period = _stack_period(cfg)
+    n_steps = cfg.n_layers // period
+    keys = jax.random.split(key, cfg.n_layers + 3)
+
+    # stack params: for each position-in-period, stack across scan steps
+    stacks = []
+    for pos in range(period):
+        per_step = [
+            _layer_init(keys[s * period + pos], cfg, s * period + pos, dtype)
+            for s in range(n_steps)
+        ]
+        stacks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_step))
+
+    params = {
+        "embed": embed_init(keys[-1], cfg.vocab, cfg.d_model, dtype),
+        "blocks": stacks if period > 1 else stacks[0],
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            keys[-2], cfg.d_model, cfg.vocab, dtype, std=cfg.d_model**-0.5
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _run_attn(p, x, cfg, sh: Shardings, *, positions, causal=True):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    q = sh.act_bthd(apply_rope(q, positions, theta=cfg.rope_theta))
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    o = att.flash_attention(q, k, v, causal=causal)
+    o = sh.act_bthd(o)
+    out = o.reshape(b, s, h * hd) @ p["wo"]
+    return out, (k, v)
+
+
+def _run_mixer(p, x, cfg, sh, *, positions, kind):
+    """Sequence mixer (pre-norm residual branch).  Returns (delta, kv)."""
+    xin = rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    if kind == "attn":
+        return _run_attn(p["attn"], xin, cfg, sh, positions=positions)
+    if kind == "mamba":
+        out, _ = ssm_mod.mamba_apply(p["mamba"], xin, cfg.mamba)
+        return out, None
+    if kind == "rwkv":
+        out, _ = ssm_mod.rwkv_time_mix(p["tmix"], xin, cfg.rwkv)
+        return out, None
+    raise ValueError(kind)
+
+
+def _run_mlp(p, x, cfg, sh, *, idx_kind):
+    xin = rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    if cfg.family == "ssm":
+        out, _ = ssm_mod.rwkv_channel_mix(p["cmix"], xin)
+        return out, 0.0
+    if idx_kind == "moe":
+        out, aux = moe_mod.moe_apply(
+            p["moe"], xin, cfg.moe, activation=cfg.activation
+        )
+        return out, aux
+    return mlp_apply(p["mlp"], xin, activation=cfg.activation), 0.0
+
+
+def _block(p, x, cfg, sh, *, positions, kind, mk):
+    delta, kv = _run_mixer(p, x, cfg, sh, positions=positions, kind=kind)
+    x = sh.act_btd(x + delta)
+    delta, aux = _run_mlp(p, x, cfg, sh, idx_kind=mk)
+    x = sh.act_btd(x + delta)
+    return x, aux, kv
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # full (and the inner body of group:N)
+
+
+def _remat_group_size(cfg: ArchConfig) -> int:
+    """remat='group:N' => nested checkpointing: the layer scan is reshaped
+    to (L/N, N, ...) groups; only group *inputs* are saved across the stack
+    (L/N residuals instead of L), and layers within a group are themselves
+    rematerialised during the group's backward recompute.  Memory ~ L/N
+    layer-inputs + 1 layer working set; compute ~ one extra forward."""
+    if cfg.remat.startswith("group:"):
+        return int(cfg.remat.split(":")[1])
+    return 1
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    sh: Shardings = Shardings.none(),
+    *,
+    extra_embeds: Optional[jnp.ndarray] = None,
+    collect_kv: bool = False,
+    logits_mode: str = "all",  # 'all' | 'last' | 'hidden'
+):
+    """Full-sequence forward.  Returns (logits, aux_loss, kv_stack|None).
+
+    ``extra_embeds``: (B, S_img, D) stub frontend embeddings prepended to the
+    token embeddings (VLM cells).  ``logits_mode='last'`` unembeds only the
+    final position (the serving prefill path — avoids materialising the
+    (B, S, V) logits tensor).
+    """
+    x = embed_lookup(params["embed"], tokens).astype(cfg.dtype_policy.cdt)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x = sh.act_btd(x)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+
+    period = _stack_period(cfg)
+
+    if period == 1:
+        kind = layer_kind(cfg, 0)
+        G = _remat_group_size(cfg)
+
+        def body(carry, lp):
+            xc, aux = carry
+            # mlp kind can vary layerwise for moe.every_k>1 only in hybrids
+            xo, a, kv = _block(
+                lp, xc, cfg, sh, positions=positions,
+                kind=kind, mk=mlp_kind(cfg, 0),
+            )
+            return (xo, aux + a), kv if collect_kv else None
+
+        if G > 1 and cfg.n_layers % G == 0 and not collect_kv:
+            grouped = jax.tree.map(
+                lambda p: p.reshape((cfg.n_layers // G, G) + p.shape[1:]),
+                params["blocks"],
+            )
+
+            def group_body(carry, gp):
+                out, _ = jax.lax.scan(jax.checkpoint(body), carry, gp)
+                return out, None
+
+            (x, aux), kvs = jax.lax.scan(
+                jax.checkpoint(group_body), (x, 0.0), grouped
+            )
+        else:
+            (x, aux), kvs = jax.lax.scan(
+                _remat(body, cfg), (x, 0.0), params["blocks"]
+            )
+    else:
+        def body(carry, lps):
+            xc, aux = carry
+            kvs_step = []
+            for pos in range(period):
+                kind = layer_kind(cfg, pos)
+                mk = mlp_kind(cfg, pos)
+                xc, a, kv = _block(
+                    lps[pos], xc, cfg, sh, positions=positions, kind=kind, mk=mk
+                )
+                aux = aux + a
+                if collect_kv and kv is not None:
+                    kvs_step.append(kv)
+            out_kv = (
+                tuple(kvs_step) if (collect_kv and kvs_step) else None
+            )
+            return (xc, aux), out_kv
+
+        (x, aux), kvs = jax.lax.scan(
+            _remat(body, cfg), (x, 0.0), tuple(params["blocks"])
+        )
+
+    x = rmsnorm(params["ln_f"], x, eps=cfg.norm_eps)
+    if logits_mode == "hidden":
+        return x, aux, kvs
+    if logits_mode == "last":
+        x = x[:, -1:, :]
+    if cfg.tie_embeddings:
+        logits = unembed_logits(x, params["embed"])
+    else:
+        logits = x @ params["unembed"]
+    logits = sh.act_btv(logits)
+    return logits, aux, kvs
+
+
+def loss_fn(
+    params,
+    cfg: ArchConfig,
+    tokens,
+    labels,
+    sh: Shardings = Shardings.none(),
+    *,
+    extra_embeds=None,
+    z_loss: float = 1e-4,
+):
+    """Mean next-token CE (labels already shifted by the data pipeline).
+
+    Large cells (seq >= 2048) use the sequence-chunked CE so the (B, S, V)
+    logits tensor never exists; small smokes keep the direct path."""
+    seq = tokens.shape[1]
+    if seq >= 2048 and seq % 512 == 0:
+        hidden, aux, _ = forward(
+            params, cfg, tokens, sh, extra_embeds=extra_embeds,
+            logits_mode="hidden",
+        )
+        if extra_embeds is not None:
+            hidden = hidden[:, extra_embeds.shape[1] :, :]
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        ce = chunked_softmax_cross_entropy(
+            hidden, table, labels, z_loss=z_loss,
+            transpose_table=cfg.tie_embeddings,
+        )
+        return ce + aux
+    logits, aux, _ = forward(
+        params, cfg, tokens, sh, extra_embeds=extra_embeds
+    )
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1] :, :]
+    ce = softmax_cross_entropy(logits, labels, z_loss=z_loss)
+    return ce.mean() + aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None):
+    """Decode caches, stacked over scan steps.
+
+    attention: dict(k=(steps, B, S, KV, hd), v=...); rwkv: recurrent states;
+    mamba: conv buffer + ssm state; hybrid: tuple per position-in-period.
+    """
+    dtype = dtype or cfg.dtype_policy.cdt
+    period = _stack_period(cfg)
+    steps = cfg.n_layers // period
+
+    def one(kind):
+        if kind == "attn":
+            # (steps, B, KV, S, hd): transpose-free decode dot (§Perf)
+            shape = (steps, batch, cfg.n_kv_heads, max_seq, cfg.hd)
+            if cfg.cache_dtype == "int8":
+                sshape = shape[:-1]
+                return {
+                    "k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_s": jnp.zeros(sshape, jnp.float32),
+                    "v_s": jnp.zeros(sshape, jnp.float32),
+                }
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kind == "mamba":
+            din = cfg.mamba.expand * cfg.d_model
+            return {
+                "conv": jnp.zeros((steps, batch, cfg.mamba.d_conv - 1, din), dtype),
+                "h": jnp.zeros((steps, batch, din, cfg.mamba.d_state), jnp.float32),
+            }
+        if kind == "rwkv":
+            hd = cfg.rwkv.head_dim
+            nh = cfg.d_model // hd
+            return {
+                "x_tm": jnp.zeros((steps, batch, cfg.d_model), dtype),
+                "x_cm": jnp.zeros((steps, batch, cfg.d_model), dtype),
+                "wkv": jnp.zeros((steps, batch, nh, hd, hd), jnp.float32),
+            }
+        raise ValueError(kind)
+
+    if period == 1:
+        return one(layer_kind(cfg, 0))
+    return tuple(one(layer_kind(cfg, pos)) for pos in range(period))
+
+
+def _decode_mixer(p, xtok, cfg, sh, cache_layer, pos, kind):
+    """One-token mixer step.  xtok: (B, 1, D) normed input."""
+    b = xtok.shape[0]
+    if kind == "attn":
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = (xtok @ p["attn"]["wq"]).reshape(b, 1, h, hd)
+        k = (xtok @ p["attn"]["wk"]).reshape(b, 1, kv, hd)
+        v = (xtok @ p["attn"]["wv"]).reshape(b, 1, kv, hd)
+        pp = jnp.full((b, 1), pos)
+        q = apply_rope(q, pp, theta=cfg.rope_theta)
+        k = apply_rope(k, pp, theta=cfg.rope_theta)
+        if cfg.cache_dtype == "int8":
+            new_cache = att.cache_update_q(cache_layer, k, v, pos)
+            if sh.use_sharded_decode:
+                o = att.sharded_decode_attention_q(
+                    q, new_cache, pos,
+                    mesh=sh.mesh, seq_axes=sh.cache_seq_axes,
+                    batch_axes=sh.dp_axes if xtok.shape[0] > 1 else None,
+                    compute_dtype=cfg.dtype_policy.cdt,
+                )
+            else:
+                o = att.decode_attention_q(
+                    q, new_cache, pos, compute_dtype=cfg.dtype_policy.cdt
+                )
+            out = o.reshape(b, 1, h * hd) @ p["attn"]["wo"]
+            return out, new_cache
+        kc, vc = att.cache_update(
+            cache_layer["k"], cache_layer["v"], k, v, pos
+        )
+        if sh.use_sharded_decode:
+            o = att.sharded_decode_attention(
+                q, kc, vc, pos,
+                mesh=sh.mesh, seq_axes=sh.cache_seq_axes,
+                batch_axes=sh.dp_axes if xtok.shape[0] > 1 else None,
+            )
+        else:
+            o = att.decode_attention(q, kc, vc, pos)
+        out = o.reshape(b, 1, h * hd) @ p["attn"]["wo"]
+        return out, {"k": kc, "v": vc}
+    if kind == "mamba":
+        out, (conv, hstate) = ssm_mod.mamba_apply(
+            p["mamba"], xtok, cfg.mamba,
+            state=(cache_layer["conv"], cache_layer["h"]),
+        )
+        return out, {"conv": conv, "h": hstate}
+    if kind == "rwkv":
+        out, (x_tm, wkv) = ssm_mod.rwkv_time_mix(
+            p["tmix"], xtok, cfg.rwkv,
+            state=(cache_layer["x_tm"], cache_layer["wkv"]),
+        )
+        return out, {"x_tm": x_tm, "wkv": wkv}
+    raise ValueError(kind)
+
+
+def _decode_block(p, x, cfg, sh, cache_layer, pos, kind, mk):
+    xin = rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    delta, new_cache = _decode_mixer(p, xin, cfg, sh, cache_layer, pos, kind)
+    x = x + delta
+    xin = rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    if cfg.family == "ssm":
+        out, x_cm = ssm_mod.rwkv_channel_mix(
+            p["cmix"], xin, state=cache_layer["x_cm"]
+        )
+        new_cache["x_cm"] = x_cm
+        x = x + out
+    elif mk == "moe":
+        out, _ = moe_mod.moe_apply(
+            p["moe"], xin, cfg.moe, activation=cfg.activation, dropless=True
+        )
+        x = x + out
+    else:
+        x = x + mlp_apply(p["mlp"], xin, activation=cfg.activation)
+    return x, new_cache
+
+
+def decode_step(
+    params,
+    cfg: ArchConfig,
+    token: jnp.ndarray,  # (B,)
+    pos,  # scalar int32: index of this token
+    cache,
+    sh: Shardings = Shardings.none(),
+):
+    """One autoregressive step.  Returns (logits (B, V), new_cache)."""
+    x = embed_lookup(params["embed"], token[:, None]).astype(
+        cfg.dtype_policy.cdt
+    )
+    period = _stack_period(cfg)
+
+    if period == 1:
+        kind, mk = layer_kind(cfg, 0), mlp_kind(cfg, 0)
+
+        def body(xc, inp):
+            lp, cl = inp
+            xo, nc = _decode_block(lp, xc, cfg, sh, cl, pos, kind, mk)
+            return xo, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    else:
+        new_cache = []
+        for p_pos in range(period):
+            kind = layer_kind(cfg, p_pos)
+            mk = mlp_kind(cfg, p_pos)
+
+            def body(xc, inp, kind=kind, mk=mk):
+                lp, cl = inp
+                return _decode_block(lp, xc, cfg, sh, cl, pos, kind, mk)
+
+            x, nc = jax.lax.scan(
+                body, x, (params["blocks"][p_pos], cache[p_pos])
+            )
+            new_cache.append(nc)
+        new_cache = tuple(new_cache)
+
+    x = rmsnorm(params["ln_f"], x, eps=cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = (
+        unembed_logits(x, params["embed"])
+        if cfg.tie_embeddings
+        else x @ params["unembed"]
+    )
+    return logits[:, 0, :], new_cache
+
+
+def prefill(
+    params,
+    cfg: ArchConfig,
+    tokens,
+    sh: Shardings = Shardings.none(),
+    *,
+    extra_embeds=None,
+):
+    """Serving prefill: forward the prompt, unembed ONLY the last position,
+    and collect per-layer KV for the decode cache (attention archs).
+    SSM/hybrid recurrent states are rebuilt by the serving loop via chunked
+    prefill (launch/serve.py)."""
+    logits, _, kvs = forward(
+        params, cfg, tokens, sh, extra_embeds=extra_embeds,
+        collect_kv=(cfg.family not in ("ssm",)), logits_mode="last",
+    )
+    return logits[:, 0, :], kvs

@@ -1,0 +1,22 @@
+"""Optimizers and schedules (sharding-friendly, memory-tiered).
+
+Three second-moment tiers so every assigned config fits v5e HBM:
+
+- ``adamw``     — f32 moments (default; 8 bytes/param extra);
+- ``adafactor`` — factored second moment (~0 extra per matrix dim);
+- ``adamw8bit`` — block-quantised int8 moments (2 bytes/param extra) —
+  the distributed-optimization trick for the 340B-class cells.
+
+Optimizer states inherit the param PartitionSpecs (runtime/sharding.py);
+Adafactor's factored stats drop the last / second-to-last axes and the spec
+derivation mirrors that in :func:`repro.optim.optimizers.state_specs`.
+"""
+
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    get_optimizer,
+    global_norm,
+    clip_by_global_norm,
+    state_specs,
+)
+from repro.optim.schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,304 @@
+"""AdamW / Adafactor / 8-bit AdamW with a uniform functional interface.
+
+``opt = get_optimizer(name, lr=...)``; ``state = opt.init(params)``;
+``params, state = opt.update(grads, state, params)``.  Params may be bf16 —
+the update math runs in f32 and casts back (bf16-params + f32-master-free
+training; the f32 "master" lives implicitly in the moment buffers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (params, state)
+    name: str
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW (f32 moments)
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    lr: Callable | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr_t * (u + weight_decay * pf)
+            return pf.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; beta1=0 => no first moment buffer)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(
+    lr: Callable | float,
+    *,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    decay: float = 0.8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # drop cols
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "stats": jax.tree.map(per_leaf, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** -decay
+        lr_t = lr_fn(step)
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta2 * st["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                c = vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(r * c, eps))
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_st = {"v": v}
+            # relative update clipping (Adafactor's d)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr_t * (u + weight_decay * pf)
+            return pf.astype(p.dtype), new_st
+
+        out = _map3(upd, grads, state["stats"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_stats = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"stats": new_stats, "step": step}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def _map3(fn, grads, stats, params):
+    """tree_map over (grads, stats, params) where stats leaves are dicts."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_s = treedef.flatten_up_to(stats)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fn(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# 8-bit AdamW: block-quantised moments (Dettmers-style)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 256
+
+
+def _quantize(x):
+    """Blockwise absmax int8 quantisation of a flat f32 array."""
+    n = x.size
+    pad = (-n) % _BLOCK
+    xf = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(xf), axis=1, keepdims=True) / 127.0
+    q = jnp.round(xf / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q, scale, shape):
+    xf = q.astype(jnp.float32) * scale
+    return xf.reshape(-1)[: int(jnp.prod(jnp.asarray(shape)))].reshape(shape)
+
+
+def adamw8bit(
+    lr: Callable | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def zq(p):
+            q, s = _quantize(jnp.zeros(p.size, jnp.float32))
+            return {"q": q, "s": s}
+
+        return {
+            "m": jax.tree.map(zq, params),
+            "v": jax.tree.map(zq, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mq, vq, p):
+            g = g.astype(jnp.float32)
+            m = _dequantize(mq["q"], mq["s"], p.shape)
+            # v is stored in sqrt-space: linear absmax quantisation of raw v
+            # underflows small-|g| entries in a block to 0, exploding their
+            # updates; sqrt-space halves the dynamic range (bitsandbytes
+            # uses a nonlinear codebook for the same reason).
+            rv = _dequantize(vq["q"], vq["s"], p.shape)
+            v = rv * rv
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(jnp.maximum(v, 0.0) / c2) + eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr_t * (u + weight_decay * pf)
+            qm, sm = _quantize(m)
+            qv, sv = _quantize(jnp.sqrt(jnp.maximum(v, 0.0)))
+            return pf.astype(p.dtype), {"q": qm, "s": sm}, {"q": qv, "s": sv}
+
+        out = _map3_q(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init=init, update=update, name="adamw8bit")
+
+
+def _map3_q(fn, grads, ms, vs, params):
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(ms)
+    flat_v = treedef.flatten_up_to(vs)
+    flat_p = treedef.flatten_up_to(params)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [fn(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)],
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    if name == "adamw8bit":
+        return adamw8bit(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def state_specs(opt_name: str, param_specs, param_shapes=None):
+    """PartitionSpecs for optimizer state given param specs (+ shapes, needed
+    to mirror Adafactor's rank-based factoring decision)."""
+    if opt_name in ("adamw",):
+        return {
+            "m": param_specs,
+            "v": param_specs,
+            "step": P(),
+        }
+    if opt_name == "adafactor":
+        def per_leaf(spec, shape):
+            ndim = len(shape.shape) if hasattr(shape, "shape") else len(shape)
+            entries = list(spec) + [None] * (ndim - len(spec))
+            if ndim >= 2:
+                return {
+                    "vr": P(*entries[:-1]),
+                    "vc": P(*entries[:-2], entries[-1]),
+                }
+            return {"v": P(*entries)}
+
+        if param_shapes is None:
+            raise ValueError("adafactor state_specs needs param_shapes")
+        flat_s, treedef = jax.tree_util.tree_flatten(
+            param_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        flat_p = treedef.flatten_up_to(param_shapes)
+        stats = jax.tree_util.tree_unflatten(
+            treedef, [per_leaf(sp, sh) for sp, sh in zip(flat_s, flat_p)]
+        )
+        return {"stats": stats, "step": P()}
+    if opt_name == "adamw8bit":
+        # quantised flat blocks: shard along the block axis over fsdp
+        def per_leaf(spec):
+            return {"q": P("data", None), "s": P("data", None)}
+
+        q = jax.tree.map(per_leaf, param_specs, is_leaf=lambda x: isinstance(x, P))
+        return {"m": q, "v": q, "step": P()}
+    raise ValueError(opt_name)

@@ -1,0 +1,26 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(
+    peak_lr: float,
+    *,
+    warmup_steps: int = 2000,
+    total_steps: int = 100_000,
+    end_frac: float = 0.1,
+):
+    """Linear warmup then cosine decay to ``end_frac * peak_lr``."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+        t = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = end_frac + (1 - end_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return lr

@@ -1,0 +1,115 @@
+"""Fault tolerance: failure supervision, straggler detection, heartbeats.
+
+At 1000+ nodes the dominant events are (a) hardware failures — handled by
+checkpoint/restart through the supervisor loop, (b) stragglers — detected by
+the step-time monitor, (c) hangs — detected externally via the heartbeat
+file.  All three are deliberately simple, deterministic mechanisms that
+compose with the step-keyed data pipeline for bit-exact resume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, List, Optional
+
+
+class StragglerMonitor:
+    """EWMA step-time monitor.  On TPU pods the slowest participant sets the
+    step time, so a persistent multiplier over the EWMA indicates a
+    straggling host/chip; the policy hook decides (log, re-shard, evict)."""
+
+    def __init__(
+        self,
+        *,
+        alpha: float = 0.1,
+        threshold: float = 2.0,
+        warmup_steps: int = 5,
+        on_straggler: Optional[Callable[[int, float, float], None]] = None,
+    ):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup_steps = warmup_steps
+        self.on_straggler = on_straggler
+        self.ewma: Optional[float] = None
+        self.count = 0
+        self.events: List[dict] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is flagged as a straggler event."""
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        flagged = (
+            self.count > self.warmup_steps and dt > self.threshold * self.ewma
+        )
+        if flagged:
+            self.events.append({"step": step, "dt": dt, "ewma": self.ewma})
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ewma)
+            # don't poison the EWMA with the outlier
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return flagged
+
+
+class Heartbeat:
+    """Liveness file for an external watchdog (touch every ``interval`` s)."""
+
+    def __init__(self, path: str, interval: float = 30.0):
+        self.path = path
+        self.interval = interval
+        self._last = 0.0
+
+    def beat(self, step: int):
+        now = time.time()
+        if now - self._last >= self.interval:
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(f"{step} {now}\n")
+            os.replace(tmp, self.path)
+            self._last = now
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    restarts: int
+    completed_steps: int
+    failures: List[str]
+
+
+def supervise(
+    run_fn: Callable[[int], int],
+    *,
+    max_restarts: int = 3,
+    on_restart: Optional[Callable[[int, BaseException], None]] = None,
+) -> SupervisorReport:
+    """Run ``run_fn(start_step) -> final_step`` under restart-on-failure.
+
+    ``run_fn`` must itself restore from the latest checkpoint when invoked
+    (the launch/train.py loop does).  Any exception triggers a restart from
+    the last committed checkpoint, up to ``max_restarts`` times — the
+    single-process analogue of a cluster controller rescheduling dead hosts.
+    """
+    restarts = 0
+    failures: List[str] = []
+    step = 0
+    while True:
+        try:
+            step = run_fn(step)
+            return SupervisorReport(
+                restarts=restarts, completed_steps=step, failures=failures
+            )
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:  # noqa: BLE001 — supervisor catches all
+            failures.append(f"{type(e).__name__}: {e}")
+            restarts += 1
+            if on_restart:
+                on_restart(restarts, e)
+            if restarts > max_restarts:
+                raise RuntimeError(
+                    f"exceeded {max_restarts} restarts; failures: {failures}"
+                ) from e

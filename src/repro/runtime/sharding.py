@@ -1,0 +1,180 @@
+"""Sharding rules: how params, activations and caches map onto the mesh.
+
+The production meshes are ``(data, model)`` single-pod and
+``(pod, data, model)`` multi-pod (launch/mesh.py).  The strategy is the
+standard 2D hybrid:
+
+- **DP**: batch over ``pod`` x ``data``;
+- **FSDP**: parameter (and optimizer-state) d_model-ish dims sharded over
+  ``data`` (ZeRO-3 — params are all-gathered per layer by XLA SPMD on use);
+- **TP**: head / ffn / vocab / expert dims over ``model`` (Megatron);
+- decode caches: sequence dim over ``model`` (32k cells) or
+  ``(data, model)`` (500k cells), consumed by the flash-decode shard_map.
+
+Param specs are inferred from leaf *path names* (the models use consistent
+naming) via the regex table below; unmatched leaves are replicated.  The
+same inference is applied to optimizer states (moments share param shapes;
+Adafactor's factored stats drop the last axis).
+
+``Shardings`` is the runtime handle passed into the model functions; with
+``Shardings.none()`` every constraint is a no-op (single-device smoke tests
+run the identical code path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Param spec inference
+# ---------------------------------------------------------------------------
+
+# (path regex, spec builder) — first match wins; L = leading layer-stack axis
+# is always unsharded; builders receive (fsdp, tp) axis names.
+_RULES: Sequence[Tuple[str, Any]] = (
+    # embeddings / unembedding
+    (r"embed$", lambda f, t: P(t, f)),  # (V, D): vocab x fsdp
+    (r"pos_embed$", lambda f, t: P(None, None)),
+    (r"unembed$", lambda f, t: P(f, t)),  # (D, V)
+    # attention
+    (r"attn/w[qkv]$", lambda f, t: P(None, f, t)),  # (L, D, H*hd)
+    (r"attn/wo$", lambda f, t: P(None, t, f)),  # (L, H*hd, D)
+    (r"xattn/w[qkv]$", lambda f, t: P(None, f, t)),
+    (r"xattn/wo$", lambda f, t: P(None, t, f)),
+    # dense MLP
+    (r"mlp/w_(up|gate)$", lambda f, t: P(None, f, t)),  # (L, D, F)
+    (r"mlp/w_down$", lambda f, t: P(None, t, f)),  # (L, F, D)
+    # MoE — experts over tp (16 experts == 16 model ranks)
+    (r"moe/router$", lambda f, t: P(None, f, None)),  # (L, D, E)
+    (r"moe/experts/w_(up|gate)$", lambda f, t: P(None, t, f, None)),  # (L,E,D,F)
+    (r"moe/experts/w_down$", lambda f, t: P(None, t, None, f)),  # (L,E,F,D)
+    # RWKV6
+    (r"tmix/w_[rkvg]$", lambda f, t: P(None, f, t)),
+    (r"tmix/w_o$", lambda f, t: P(None, t, f)),
+    (r"tmix/(lora|decay)_[ab]$", lambda f, t: P(None, None, None)),
+    (r"tmix/mu$", lambda f, t: P(None, None, t)),
+    (r"tmix/(mu_x|decay_base)$", lambda f, t: P(None, t)),
+    (r"tmix/bonus$", lambda f, t: P(None, None, None)),
+    (r"cmix/w_k$", lambda f, t: P(None, f, t)),  # (L, D, F)
+    (r"cmix/w_v$", lambda f, t: P(None, t, f)),  # (L, F, D)
+    (r"cmix/w_r$", lambda f, t: P(None, f, t)),
+    (r"cmix/mu_[kr]$", lambda f, t: P(None, t)),
+    # Mamba
+    (r"mamba/in_proj$", lambda f, t: P(None, f, t)),  # (L, D, 2*din)
+    (r"mamba/conv_w$", lambda f, t: P(None, None, t)),  # (L, k, din)
+    (r"mamba/conv_b$", lambda f, t: P(None, t)),  # (L, din)
+    (r"mamba/x_proj$", lambda f, t: P(None, t, None)),  # (L, din, r+2n)
+    (r"mamba/dt_proj$", lambda f, t: P(None, None, t)),  # (L, r, din)
+    (r"mamba/(dt_bias|d_skip)$", lambda f, t: P(None, t)),
+    (r"mamba/a_log$", lambda f, t: P(None, t, None)),  # (L, din, n)
+    (r"mamba/out_proj$", lambda f, t: P(None, t, f)),  # (L, din, D)
+    # norms and other small leaves: replicated
+    (r"(ln|norm)", lambda f, t: P()),
+)
+
+
+def _match_spec(path: str, fsdp, tp) -> Optional[P]:
+    for pat, builder in _RULES:
+        if re.search(pat, path):
+            return builder(fsdp, tp)
+    return None
+
+
+def _fit_spec(spec: P, ndim: int, shape, mesh: Mesh) -> P:
+    """Trim/extend the spec to the leaf rank; drop axes that don't divide."""
+    entries = list(spec) + [None] * (ndim - len(spec))
+    entries = entries[:ndim]
+    out = []
+    for dim, ent in zip(shape, entries):
+        if ent is None:
+            out.append(None)
+            continue
+        axes = (ent,) if isinstance(ent, str) else tuple(ent)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ent if dim % size == 0 else None)
+    while out and out[-1] is None:  # canonical form: no trailing Nones
+        out.pop()
+    return P(*out)
+
+
+def infer_param_specs(params: Any, mesh: Mesh, *, fsdp="data", tp="model"):
+    """Pytree of PartitionSpecs for a param pytree (by leaf path name)."""
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        spec = _match_spec(name, fsdp, tp)
+        if spec is None:
+            spec = P()
+        specs.append(_fit_spec(spec, leaf.ndim, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh, *, fsdp="data", tp="model"):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        infer_param_specs(params, mesh, fsdp=fsdp, tp=tp),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Runtime handle used inside model code
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Shardings:
+    """Activation/cache constraint helper (None mesh => no-ops)."""
+
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)  # batch data-parallel axes
+    tp_axis: Optional[str] = "model"
+    fsdp_axis: Optional[str] = "data"
+    cache_seq_axes: Tuple[str, ...] = ()  # sequence-sharded decode caches
+    seq_axis: Optional[str] = None  # sequence parallelism for activations
+
+    @classmethod
+    def none(cls) -> "Shardings":
+        return cls(mesh=None)
+
+    def _c(self, x, *entries):
+        if self.mesh is None:
+            return x
+        spec = P(*entries, *([None] * (x.ndim - len(entries))))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    # logical constraint points used by the models
+    def act_btd(self, x):  # (B, S, D) hidden states
+        return self._c(x, self.dp_axes, self.seq_axis, None)
+
+    def act_btv(self, x):  # (B, S, V) logits: vocab over tp
+        return self._c(x, self.dp_axes, self.seq_axis, self.tp_axis)
+
+    def act_bthd(self, x):  # (B, S, H, hd): heads over tp
+        return self._c(x, self.dp_axes, self.seq_axis, self.tp_axis, None)
+
+    def cache_bskh(self, x):  # (B, S, KV, hd) decode cache
+        seq = self.cache_seq_axes if self.cache_seq_axes else None
+        return self._c(x, self.dp_axes, seq, None, None)
+
+    def batch_only(self, x):
+        return self._c(x, self.dp_axes)
+
+    @property
+    def use_sharded_decode(self) -> bool:
+        return self.mesh is not None and bool(self.cache_seq_axes)

@@ -1,0 +1,56 @@
+"""Small shared helpers used across the framework."""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pick_tile(n: int, target: int = 128) -> int:
+    """Largest divisor of ``n`` that is ``<= target``.
+
+    Used to choose Pallas block sizes that exactly tile the grid (periodic
+    wrap-around at block granularity requires exact division).  Prefers
+    hardware-aligned powers of two.
+    """
+    if n <= target:
+        return n
+    for cand in sorted({target, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1}, reverse=True):
+        if cand <= target and n % cand == 0:
+            return cand
+    return math.gcd(n, target) or 1
+
+
+def tolerance_for(dtype) -> dict:
+    """Sensible allclose tolerances per dtype for kernel<->oracle checks."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float64:
+        return dict(rtol=1e-12, atol=1e-12)
+    if dtype == jnp.float32:
+        return dict(rtol=1e-5, atol=1e-5)
+    if dtype == jnp.bfloat16:
+        return dict(rtol=2e-2, atol=2e-2)
+    if dtype == jnp.float16:
+        return dict(rtol=2e-3, atol=2e-3)
+    return dict(rtol=1e-5, atol=1e-5)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0 or unit == "PiB":
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} PiB"
+
+
+def prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out

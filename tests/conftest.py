@@ -1,0 +1,11 @@
+"""Test configuration.
+
+x64 is enabled for the numerics tests (the paper's solver is double
+precision); all code under test is dtype-explicit so this only widens the
+oracles.  Device count is left at 1 — multi-device tests spawn subprocesses
+with their own ``--xla_force_host_platform_device_count`` (the dry-run, and
+ONLY the dry-run, forces 512)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

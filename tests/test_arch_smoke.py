@@ -1,0 +1,199 @@
+"""Per-architecture smoke tests (REQUIRED deliverable): reduced config of the
+same family, one forward/train step on CPU, output shapes + no NaNs.
+
+Also: decode==forward consistency, MoE dropless-decode consistency, RWKV
+state-splitting equivalence, and a does-it-learn test per family group.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models.api import build_model
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, rng, B=2, S=16):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(1, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(1, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)) * 0.1,
+            jnp.float32,
+        )
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.img_tokens, cfg.d_model)) * 0.1,
+            jnp.float32,
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, rng)
+
+    # forward: logits shape + finite
+    logits = model.prefill_logits(params, batch)
+    S = batch["tokens"].shape[1] + (
+        cfg.img_tokens if cfg.family == "vlm" else 0
+    )
+    assert logits.shape == (2, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one train step (loss + grads + sgd) on CPU: finite, loss reasonable
+    def step(p, b):
+        loss, g = jax.value_and_grad(lambda q: model.loss(q, b))(p)
+        p = jax.tree.map(lambda w, gw: w - 1e-2 * gw.astype(w.dtype), p, g)
+        return p, loss
+
+    params2, loss = jax.jit(step)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    assert 0.0 < float(loss) < 3 * np.log(cfg.vocab)
+    finite = jax.tree.map(lambda x: bool(jnp.all(jnp.isfinite(x))), params2)
+    assert all(jax.tree.leaves(finite))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        # capacity dropping differs between prefill/decode batch shapes by
+        # design; raise capacity so the comparison is drop-free
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    # exact-consistency test uses the exact cache; the int8 cache has its
+    # own tolerance test (test_int8_kv_cache_decode_close)
+    cfg = dataclasses.replace(cfg, cache_dtype="bfloat16")
+    model = build_model(cfg)
+    rng = np.random.default_rng(1)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = make_batch(cfg, rng, B, S)
+    toks = batch["tokens"]
+
+    if cfg.family == "vlm":
+        from repro.models import transformer as tf
+
+        full = tf.forward(params, cfg, toks)[0]
+    else:
+        full = model.prefill_logits(params, batch)
+
+    cache = model.init_cache(B, S + 4)
+    if cfg.family == "encdec":
+        from repro.models import encdec as em
+
+        enc = em.encode(params, cfg, batch["frames"])
+        xk, xv = em.prefill_cross(params, cfg, enc)
+        cache = dict(cache, xk=xk, xv=xv)
+    step = jax.jit(lambda p, t, q, c: model.decode(p, t, q, c))
+    lg = None
+    for i in range(S):
+        lg, cache = step(params, toks[:, i], i, cache)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full[:, -1, :]), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_rwkv_state_continuity():
+    """Processing a sequence in two halves through decode must equal the
+    one-shot forward — the recurrent-state contract of the 500k cells."""
+    cfg = get_config("rwkv6-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (1, 10)), jnp.int32)
+    full = model.prefill_logits(params, {"tokens": toks})
+    cache = model.init_cache(1, 16)
+    step = jax.jit(lambda p, t, q, c: model.decode(p, t, q, c))
+    for i in range(10):
+        lg, cache = step(params, toks[:, i], i, cache)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full[:, -1]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_moe_aux_loss_and_balance():
+    from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+    cfg = MoEConfig(num_experts=4, top_k=2)
+    params = moe_init(jax.random.PRNGKey(0), 32, 64, cfg, jnp.float32, gated=True)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 16, 32)),
+                    jnp.float32)
+    out, aux = moe_apply(params, x, cfg, activation="silu")
+    assert out.shape == x.shape
+    assert float(aux) > 0
+    # dropless mode must process every token: compare against huge capacity
+    out2, _ = moe_apply(params, x, cfg, activation="silu", dropless=True)
+    cfg_big = MoEConfig(num_experts=4, top_k=2, capacity_factor=64.0)
+    out3, _ = moe_apply(params, x, cfg_big, activation="silu")
+    np.testing.assert_allclose(out2, out3, atol=1e-6)
+
+
+def test_tiny_model_learns():
+    """~50 sgd steps on a repeating pattern must cut the loss markedly —
+    the end-to-end 'gradients flow correctly' test for the shared stack."""
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.tile(jnp.arange(16, dtype=jnp.int32)[None], (4, 1)) + 5
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(lambda q: model.loss(q, batch))(p)
+        return jax.tree.map(lambda w, gw: w - 0.5 * gw.astype(w.dtype), p, g), loss
+
+    losses = []
+    for _ in range(50):
+        params, loss = step(params)
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], (losses[0], losses[-1])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_formula_close(arch):
+    """ArchConfig.param_count (used for roofline MODEL_FLOPS) should match
+    the actually-initialised reduced model within 10%."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    actual = sum(x.size for x in jax.tree.leaves(params))
+    est = cfg.param_count()
+    assert 0.75 < est / actual < 1.25, (arch, est, actual)
+
+
+def test_int8_kv_cache_decode_close():
+    """int8-quantised KV cache (the nemotron decode answer): logits within
+    a small fraction of the logit range; greedy tokens unchanged."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_config("nemotron-4-340b").reduced(), cache_dtype="int8"
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (2, 12)), jnp.int32)
+    full = model.prefill_logits(params, {"tokens": toks})
+    cache = model.init_cache(2, 16)
+    assert cache["k"].dtype == jnp.int8
+    step = jax.jit(lambda p, t, q, c: model.decode(p, t, q, c))
+    for i in range(12):
+        lg, cache = step(params, toks[:, i], i, cache)
+    ref = np.asarray(full[:, -1, :])
+    diff = float(np.abs(np.asarray(lg) - ref).max())
+    assert diff < 0.05 * float(ref.max() - ref.min())
+    assert (np.argmax(np.asarray(lg), -1) == np.argmax(ref, -1)).all()

@@ -1,0 +1,215 @@
+"""Pallas kernel <-> pure-jnp oracle equivalence (interpret mode on CPU).
+
+Every kernel is swept over shapes and dtypes with hypothesis and asserted
+allclose against its ref.py oracle, per the deliverable contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as R
+from repro.kernels.fused_ch import ch_rhs_pallas
+from repro.kernels.penta import (
+    cyclic_penta_factor,
+    cyclic_penta_solve_factored,
+    hyperdiffusion_diagonals,
+    penta_factor,
+    penta_solve_factored,
+)
+from repro.kernels.stencil2d import stencil2d_pallas
+from repro.kernels.weno import weno5_advect_pallas
+from repro.util import tolerance_for
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# -- generic stencil kernel ---------------------------------------------------
+
+shape_strategy = st.sampled_from(
+    [(32, 32), (32, 64), (64, 96), (96, 32), (128, 128)]
+)
+halo_strategy = st.tuples(
+    st.integers(0, 3), st.integers(0, 3), st.integers(0, 3), st.integers(0, 3)
+)
+
+
+class TestStencil2D:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        shape=shape_strategy,
+        halos=halo_strategy,
+        bc=st.sampled_from(["periodic", "np"]),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**16),
+    )
+    def test_weighted_matches_ref(self, shape, halos, bc, dtype, seed):
+        left, right, top, bottom = halos
+        if left + right + top + bottom == 0:
+            left = 1
+        rng = np.random.default_rng(seed)
+        data = _rand(rng, shape, dtype)
+        n = (left + right + 1) * (top + bottom + 1)
+        w = _rand(rng, (n,), dtype)
+        out_init = _rand(rng, shape, dtype) if bc == "np" else None
+        kern = stencil2d_pallas(
+            data, w, out_init,
+            left=left, right=right, top=top, bottom=bottom,
+            bc=bc, ty=16, tx=32, interpret=True,
+        )
+        oracle = R.stencil2d_ref(
+            data, bc=bc, left=left, right=right, top=top, bottom=bottom,
+            coeffs=w, out_init=out_init,
+        )
+        np.testing.assert_allclose(kern, oracle, **tolerance_for(dtype))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**16),
+        bc=st.sampled_from(["periodic", "np"]),
+    )
+    def test_function_pointer_matches_ref(self, dtype, seed, bc):
+        rng = np.random.default_rng(seed)
+        data = _rand(rng, (48, 64), dtype)
+        coeffs = _rand(rng, (9,), dtype)
+
+        def fn(windows, coe):  # nonlinear: laplacian-of-cube style
+            return sum(c * (w * w * w - w) for c, w in zip(coe, windows))
+
+        kern = stencil2d_pallas(
+            data, coeffs, jnp.zeros_like(data) if bc == "np" else None,
+            point_fn=fn, left=1, right=1, top=1, bottom=1,
+            bc=bc, ty=16, tx=16, interpret=True,
+        )
+        oracle = R.stencil2d_ref(
+            data, bc=bc, left=1, right=1, top=1, bottom=1,
+            point_fn=fn, coeffs=coeffs,
+        )
+        np.testing.assert_allclose(kern, oracle, **tolerance_for(dtype))
+
+    def test_tile_constraint_errors(self):
+        data = jnp.zeros((30, 30))
+        w = jnp.ones((3,))
+        with pytest.raises(ValueError):
+            stencil2d_pallas(data, w, left=1, right=1, ty=16, tx=16,
+                             interpret=True)
+        with pytest.raises(ValueError):
+            stencil2d_pallas(
+                jnp.zeros((32, 32)), jnp.ones((19,)), left=9, right=9,
+                ty=8, tx=8, interpret=True,
+            )
+
+
+# -- pentadiagonal substitution kernel ---------------------------------------
+
+
+class TestPentaKernel:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([16, 64, 128, 256]),
+        n=st.sampled_from([8, 32, 64]),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**16),
+    )
+    def test_substitute_matches_dense(self, m, n, dtype, seed):
+        rng = np.random.default_rng(seed)
+        l2, l1, u1, u2 = (_rand(rng, (m,), dtype) for _ in range(4))
+        d = jnp.asarray(8.0 + np.abs(rng.standard_normal(m)), dtype)
+        rhs = _rand(rng, (m, n), dtype)
+        fac = penta_factor(l2, l1, d, u1, u2)
+        x_pal = penta_solve_factored(fac, rhs, backend="pallas", interpret=True)
+        x_ref = R.penta_solve_ref(l2, l1, d, u1, u2, rhs, cyclic=False)
+        tol = tolerance_for(dtype)
+        if dtype == jnp.float32:
+            tol = dict(rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(x_pal, x_ref, **tol)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([16, 100, 256]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_cyclic_matches_dense(self, m, seed):
+        rng = np.random.default_rng(seed)
+        dtype = jnp.float64
+        l2, l1, u1, u2 = (_rand(rng, (m,), dtype) for _ in range(4))
+        d = jnp.asarray(8.0 + np.abs(rng.standard_normal(m)), dtype)
+        rhs = _rand(rng, (m, 16), dtype)
+        fac = cyclic_penta_factor(l2, l1, d, u1, u2)
+        x = cyclic_penta_solve_factored(fac, rhs, backend="pallas", interpret=True)
+        x_ref = R.penta_solve_ref(l2, l1, d, u1, u2, rhs, cyclic=True)
+        np.testing.assert_allclose(x, x_ref, rtol=1e-9, atol=1e-9)
+
+    def test_hyperdiffusion_operator_roundtrip(self):
+        m = 128
+        diags = hyperdiffusion_diagonals(m, 0.7)
+        A = R.penta_dense_cyclic(*diags)
+        fac = cyclic_penta_factor(*diags)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((m, 8)))
+        b = A @ x
+        np.testing.assert_allclose(
+            cyclic_penta_solve_factored(fac, b), x, atol=1e-11
+        )
+
+    def test_vector_rhs(self):
+        m = 64
+        diags = hyperdiffusion_diagonals(m, 0.3)
+        fac = penta_factor(*diags)
+        rng = np.random.default_rng(1)
+        b = jnp.asarray(rng.standard_normal(m))
+        x = penta_solve_factored(fac, b, backend="jnp")
+        assert x.shape == (m,)
+        A = R.penta_dense(*diags)
+        np.testing.assert_allclose(A @ x, b, atol=1e-12)
+
+
+# -- WENO kernel ---------------------------------------------------------------
+
+
+class TestWenoKernel:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        shape=st.sampled_from([(32, 32), (32, 64), (64, 96)]),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, shape, dtype, seed):
+        rng = np.random.default_rng(seed)
+        q = _rand(rng, shape, dtype)
+        u = _rand(rng, shape, dtype)
+        v = _rand(rng, shape, dtype)
+        kern = weno5_advect_pallas(
+            q, u, v, dx=0.1, dy=0.2, ty=16, tx=16, interpret=True
+        )
+        oracle = R.weno5_advect_ref(q, u, v, 0.1, 0.2)
+        tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else dict(
+            rtol=1e-10, atol=1e-10
+        )
+        np.testing.assert_allclose(kern, oracle, **tol)
+
+
+# -- fused Cahn–Hilliard RHS kernel --------------------------------------------
+
+
+class TestFusedCHKernel:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        shape=st.sampled_from([(32, 32), (64, 32), (64, 128)]),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, shape, dtype, seed):
+        rng = np.random.default_rng(seed)
+        cn = jnp.asarray(rng.uniform(-1, 1, shape), dtype)
+        cm = jnp.asarray(rng.uniform(-1, 1, shape), dtype)
+        kw = dict(dt=1e-3, D=0.6, gamma=0.01, inv_h2=100.0, inv_h4=10000.0)
+        kern = ch_rhs_pallas(cn, cm, ty=16, tx=16, interpret=True, **kw)
+        oracle = R.ch_rhs_ref(cn, cm, **kw)
+        np.testing.assert_allclose(kern, oracle, **tolerance_for(dtype))

