@@ -29,7 +29,9 @@ def main():
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--t", type=float, default=8.0, help="final time")
     ap.add_argument("--dt", type=float, default=2e-3)
-    ap.add_argument("--rhs", choices=["fused", "stencil"], default="fused")
+    ap.add_argument(
+        "--rhs", choices=["fused", "stencil", "batch1d"], default="fused"
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

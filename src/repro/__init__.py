@@ -22,10 +22,18 @@ The package is organised as a production framework:
 
 __version__ = "2.0.0"  # tracks cuSten's published version
 
-from repro.core.stencil import (  # noqa: F401
+from repro import _compat
+
+_compat.install()  # backport newer-jax API points onto the pinned jax
+
+from repro.core.stencil import (  # noqa: F401,E402
     Stencil2D,
+    StencilBatch1D,
     stencil_create_2d,
     stencil_compute_2d,
     stencil_destroy_2d,
+    stencil_create_1d_batch,
+    stencil_compute_1d_batch,
+    stencil_destroy_1d_batch,
     DoubleBuffer,
 )

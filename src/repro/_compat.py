@@ -1,0 +1,109 @@
+"""Version-tolerance backports for the pinned jax (0.4.x).
+
+The framework (and its test suite) is written against the current jax API;
+the deployment container pins jax 0.4.37.  Rather than scattering version
+checks through every call site, this module backports the three API points
+we rely on, feature-detected so it is a no-op on newer jax:
+
+- ``jax.sharding.AxisType`` — the auto/explicit/manual axis-type enum
+  (absent before jax 0.5; all our meshes are ``Auto``, which is exactly the
+  pre-0.5 behaviour, so a placeholder enum is semantically faithful).
+- ``jax.make_mesh(..., axis_types=...)`` — the kwarg is accepted and
+  dropped when the installed ``make_mesh`` does not know it (again: every
+  axis was implicitly Auto before the kwarg existed).
+- ``Compiled.cost_analysis()`` — newer jax returns the flat dict; 0.4.x
+  returns a one-element list of dicts.  We normalise to the dict, which is
+  the exact upstream change (jax#20214).
+- ``jax.shard_map`` — promoted out of ``jax.experimental.shard_map`` in
+  jax 0.5 with ``check_rep`` renamed to ``check_vma``; we alias the
+  experimental function and translate the kwarg.
+
+:func:`install` is idempotent and is called from ``repro/__init__.py`` so
+any import of the package makes the running jax present the newer surface.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+_INSTALLED = False
+
+
+def _backport_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        """Backport of jax.sharding.AxisType (jax >= 0.5)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _backport_make_mesh_axis_types() -> None:
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        return
+    if "axis_types" in params:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        del axis_types  # pre-0.5 jax: every axis is implicitly Auto
+        return orig(axis_shapes, axis_names, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+def _backport_cost_analysis() -> None:
+    compiled = jax.stages.Compiled
+    orig = compiled.cost_analysis
+    if getattr(orig, "_repro_compat", False):
+        return
+
+    @functools.wraps(orig)
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, list) and len(out) == 1 and isinstance(out[0], dict):
+            return out[0]
+        return out
+
+    cost_analysis._repro_compat = True
+    compiled.cost_analysis = cost_analysis
+
+
+def _backport_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        if check_vma is not None:
+            kwargs.setdefault("check_rep", check_vma)
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+
+    jax.shard_map = shard_map
+
+
+def install() -> None:
+    """Install all backports (idempotent, feature-detected)."""
+    global _INSTALLED
+    if _INSTALLED:
+        return
+    _backport_axis_type()
+    _backport_make_mesh_axis_types()
+    _backport_cost_analysis()
+    _backport_shard_map()
+    _INSTALLED = True

@@ -1,12 +1,16 @@
-"""The paper's primary contribution: the plan-based 2D stencil engine,
-its distributed domain decomposition, and the ADI / Cahn–Hilliard / WENO
-solver stack built on top of it."""
+"""The paper's primary contribution: the plan-based 2D + batched-1D stencil
+engine, its distributed domain decomposition, and the ADI / Cahn–Hilliard /
+WENO solver stack built on top of it."""
 
 from repro.core.stencil import (  # noqa: F401
     Stencil2D,
+    StencilBatch1D,
     stencil_create_2d,
     stencil_compute_2d,
     stencil_destroy_2d,
+    stencil_create_1d_batch,
+    stencil_compute_1d_batch,
+    stencil_destroy_1d_batch,
     DoubleBuffer,
     central_difference_weights,
 )

@@ -9,6 +9,14 @@ happens once at Create time (:class:`ADIOperator`); each Compute is a batched
 banded substitution.  Solves run along axis 0 with the batch on axis 1 (TPU
 lanes); the x-sweep transposes in/out — the same interleaving transpose the
 paper applies between sweeps.
+
+The *explicit* side of each sweep is the same batched-1D picture: a purely
+directional stencil applied to every grid line at once.
+:func:`apply_along_x` / :func:`apply_along_y` run a
+:class:`~repro.core.stencil.StencilBatch1D` plan over the rows / columns of
+an ``(ny, nx)`` field (the y-path shares the x-solve's interleaving
+transpose), so per-direction RHS assembly never touches the full-2D stencil
+machinery.
 """
 
 from __future__ import annotations
@@ -18,6 +26,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.core.stencil import StencilBatch1D
 from repro.kernels.penta import (
     CyclicPentaFactors,
     PentaFactors,
@@ -27,6 +36,28 @@ from repro.kernels.penta import (
     penta_factor,
     penta_solve_factored,
 )
+
+
+def apply_along_x(
+    plan: StencilBatch1D,
+    field: jnp.ndarray,
+    out_init: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Apply a batched-1D plan along the x (last) axis of an (ny, nx) field:
+    the ny rows are the batch."""
+    return plan.apply(field, out_init)
+
+
+def apply_along_y(
+    plan: StencilBatch1D,
+    field: jnp.ndarray,
+    out_init: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Apply a batched-1D plan along the y (first) axis of an (ny, nx)
+    field: the nx columns are the batch (transposes in/out, like
+    :meth:`ADIOperator.solve_x` does for the implicit half)."""
+    out_init_t = None if out_init is None else out_init.T
+    return plan.apply(field.T, out_init_t).T
 
 
 @dataclasses.dataclass(frozen=True)

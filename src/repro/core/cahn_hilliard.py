@@ -12,12 +12,19 @@ with the two-step Beam–Warming-style ADI scheme of paper eq. (2):
 with L = I + (2/3) D gamma dt d^4/dx^4 (pentadiagonal, factored once), and a
 standard ADI half-step pair (paper eq. 3) to bootstrap C^1 from C^0.
 
-Two interchangeable RHS paths (validated identical in tests):
+Three interchangeable RHS paths (validated identical in tests):
 
 - ``rhs_mode='stencil'`` — paper-faithful: the RHS is assembled from cuSten
   plan calls: a 5x5 weighted XY plan for grad^4, and a 3x3 *function-pointer*
   plan applying the Laplacian directly to (C^3 - C) — the exact structure of
   the paper's code (§V.B).
+- ``rhs_mode='batch1d'`` — the batched-1D decomposition: every directional
+  piece (``delta_x^2``, ``delta_y^2``, the two ``delta`` factors of the
+  cross term, and the per-direction Laplacian of ``C^3 - C``) is a
+  :class:`~repro.core.stencil.StencilBatch1D` plan run over all grid lines
+  at once via :func:`~repro.core.adi.apply_along_x` /
+  :func:`~repro.core.adi.apply_along_y` — the explicit counterpart of the
+  ADI sweeps' batched implicit solves (no full-2D stencil calls at all).
 - ``rhs_mode='fused'`` — beyond-paper: one fused Pallas pass
   (:mod:`repro.kernels.fused_ch`) computing the entire explicit RHS.
 """
@@ -33,8 +40,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as _metrics
-from repro.core.adi import ADIOperator, make_adi_operator
-from repro.core.stencil import Stencil2D, stencil_create_2d
+from repro.core.adi import (
+    ADIOperator,
+    apply_along_x,
+    apply_along_y,
+    make_adi_operator,
+)
+from repro.core.stencil import (
+    Stencil2D,
+    stencil_create_1d_batch,
+    stencil_create_2d,
+)
 from repro.kernels import ops as _ops
 
 # ---------------------------------------------------------------------------
@@ -96,7 +112,7 @@ class CHConfig:
     D: float = 0.6
     gamma: float = 0.01
     dtype: str = "float64"
-    rhs_mode: str = "fused"  # 'fused' | 'stencil'
+    rhs_mode: str = "fused"  # 'fused' | 'stencil' | 'batch1d'
     backend: str = "auto"  # kernel backend for stencils & penta
 
     @property
@@ -155,6 +171,42 @@ class CahnHilliardADI:
         self.plan_init_a = mk(weights=jnp.asarray(init_explicit_weights_a(), dtype))
         self.plan_init_b = mk(weights=jnp.asarray(init_explicit_weights_b(), dtype))
 
+        # Create: the batched-1D plans (per-direction RHS path).  Each is one
+        # directional factor; apply_along_{x,y} runs it over all grid lines.
+        mk1d = functools.partial(
+            stencil_create_1d_batch, "periodic", backend=cfg.backend
+        )
+        self.plan_d4_1d = mk1d(weights=jnp.asarray(_D4, dtype))
+        self.plan_d2_1d = mk1d(weights=jnp.asarray(_D2, dtype))
+        self.plan_lap_cube_1d = stencil_create_1d_batch(
+            "periodic",
+            func=cube_laplacian_point_fn,
+            coeffs=jnp.asarray(_D2, dtype),
+            num_sten_left=1,
+            num_sten_right=1,
+            backend=cfg.backend,
+        )
+
+    # -- batched-1D directional assembly (rhs_mode='batch1d') ----------------
+    def _cross_batch1d(self, c: jnp.ndarray) -> jnp.ndarray:
+        """delta_x delta_y c — two directional 3-point factors."""
+        return apply_along_x(self.plan_d2_1d, apply_along_y(self.plan_d2_1d, c))
+
+    def _bih_batch1d(self, c: jnp.ndarray) -> jnp.ndarray:
+        """delta_x^2 + delta_y^2 + 2 delta_x delta_y (units h^-4)."""
+        return (
+            apply_along_x(self.plan_d4_1d, c)
+            + apply_along_y(self.plan_d4_1d, c)
+            + 2.0 * self._cross_batch1d(c)
+        )
+
+    def _lap_cube_batch1d(self, c: jnp.ndarray) -> jnp.ndarray:
+        """Laplacian of (C^3 - C) via the per-direction function-pointer
+        plan: the nonlinearity is evaluated inside each 1D sweep."""
+        return apply_along_x(self.plan_lap_cube_1d, c) + apply_along_y(
+            self.plan_lap_cube_1d, c
+        )
+
     # -- explicit RHS of the full scheme (eq. 2a) --------------------------
     def rhs(self, c_n: jnp.ndarray, c_nm1: jnp.ndarray) -> jnp.ndarray:
         cfg = self.cfg
@@ -169,7 +221,17 @@ class CahnHilliardADI:
                 inv_h4=self.inv_h4,
                 backend=cfg.backend,
             )
-        if cfg.rhs_mode == "stencil":
+        if cfg.rhs_mode in ("stencil", "batch1d"):
+            bih = (
+                self._bih_batch1d
+                if cfg.rhs_mode == "batch1d"
+                else self.plan_bih.apply
+            )
+            lap_cube = (
+                self._lap_cube_batch1d
+                if cfg.rhs_mode == "batch1d"
+                else self.plan_lap_cube.apply
+            )
             cbar = 2.0 * c_n - c_nm1
             lin = -(2.0 / 3.0) * (c_n - c_nm1)
             hyper = (
@@ -178,14 +240,14 @@ class CahnHilliardADI:
                 * cfg.gamma
                 * cfg.D
                 * self.inv_h4
-                * self.plan_bih.apply(cbar)
+                * bih(cbar)
             )
             nonlin = (
                 (2.0 / 3.0)
                 * cfg.D
                 * cfg.dt
                 * self.inv_h2
-                * self.plan_lap_cube.apply(c_n)
+                * lap_cube(c_n)
             )
             return lin + hyper + nonlin
         raise ValueError(f"unknown rhs_mode {cfg.rhs_mode!r}")
@@ -205,15 +267,30 @@ class CahnHilliardADI:
         half = 0.5 * cfg.dt
         coef_h = cfg.D * cfg.gamma * self.inv_h4
 
+        if cfg.rhs_mode == "batch1d":
+            # per-direction explicit operators of eq. (3), assembled from
+            # the 1D plans: a = delta_y^2 + 2 dxdy, b = delta_x^2 + 2 dxdy
+            expl_a = lambda c: (  # noqa: E731
+                apply_along_y(self.plan_d4_1d, c) + 2.0 * self._cross_batch1d(c)
+            )
+            expl_b = lambda c: (  # noqa: E731
+                apply_along_x(self.plan_d4_1d, c) + 2.0 * self._cross_batch1d(c)
+            )
+            lap_cube = self._lap_cube_batch1d
+        else:
+            expl_a = self.plan_init_a.apply
+            expl_b = self.plan_init_b.apply
+            lap_cube = self.plan_lap_cube.apply
+
         rhs_a = c0 + half * (
-            -coef_h * self.plan_init_a.apply(c0)
-            + cfg.D * self.inv_h2 * self.plan_lap_cube.apply(c0)
+            -coef_h * expl_a(c0)
+            + cfg.D * self.inv_h2 * lap_cube(c0)
         )
         c_half = self.op_half.solve_x(rhs_a)
 
         rhs_b = c_half + half * (
-            -coef_h * self.plan_init_b.apply(c_half)
-            + cfg.D * self.inv_h2 * self.plan_lap_cube.apply(c_half)
+            -coef_h * expl_b(c_half)
+            + cfg.D * self.inv_h2 * lap_cube(c_half)
         )
         return self.op_half.solve_y(rhs_b)
 

@@ -1,6 +1,7 @@
-"""The plan-based 2D stencil engine — cuSten's four-function API in JAX.
+"""The plan-based stencil engine — cuSten's four-function API in JAX.
 
-cuSten exposes ``custen{Create,Compute,Swap,Destroy}2D{X,Y,XY}{p,np}{,Fun}``.
+cuSten exposes ``custen{Create,Compute,Swap,Destroy}2D{X,Y,XY}{p,np}{,Fun}``
+plus the batched-1D family ``custen{Create,Compute,...}1DBatch{p,np}{,Fun}``.
 The functional JAX equivalents:
 
 - :func:`stencil_create_2d`  — Create: validates geometry, captures weights /
@@ -17,6 +18,17 @@ halos, as in the paper).  ``bc='np'`` computes interior points only and
 passes the output buffer through untouched on the boundary — the caller
 applies their own boundary conditions afterwards, exactly the cuSten
 semantics.
+
+**Batched 1D** (:class:`StencilBatch1D`, :func:`stencil_create_1d_batch`,
+:func:`stencil_compute_1d_batch`, :func:`stencil_destroy_1d_batch`): the
+same Create/Compute/Destroy contract for applying one 1D stencil to every
+row of a ``(B, M)`` stack independently — many 1D problems solved at once
+(the cuPentBatch batching model).  On TPU the batch is tiled over the Pallas
+grid with ``M`` on the lanes, so the whole batch tile advances per VPU op;
+``bc='np'`` passes the ``left``/``right`` edge *columns* of every row
+through from ``out_init``.  Typical uses: per-direction explicit RHS
+assembly inside ADI sweeps (:mod:`repro.core.adi`), ensembles of independent
+1D PDEs, Fourier-space line operators.
 """
 
 from __future__ import annotations
@@ -32,6 +44,21 @@ from repro.kernels.ref import weighted_point_fn
 
 _DIRECTIONS = ("x", "y", "xy")
 _BCS = ("periodic", "np")
+
+
+def _split_extents(n_points: int, lo: Optional[int], hi: Optional[int]):
+    """Resolve a stencil length into (lo, hi) extents around the centre."""
+    if lo is None and hi is None:
+        if n_points % 2 == 0:
+            raise ValueError(
+                "even stencil length needs explicit left/right split"
+            )
+        return n_points // 2, n_points // 2
+    if lo is None or hi is None:
+        raise ValueError("give both or neither of the extent pair")
+    if lo + hi + 1 != n_points:
+        raise ValueError(f"extents {lo}+{hi}+1 != stencil length {n_points}")
+    return lo, hi
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,38 +144,23 @@ def stencil_create_2d(
     if (weights is None) == (func is None):
         raise ValueError("exactly one of weights / func must be given")
 
-    def _split(n_points: int, lo: Optional[int], hi: Optional[int]):
-        if lo is None and hi is None:
-            if n_points % 2 == 0:
-                raise ValueError(
-                    "even stencil length needs explicit left/right split"
-                )
-            return n_points // 2, n_points // 2
-        if lo is None or hi is None:
-            raise ValueError("give both or neither of the extent pair")
-        if lo + hi + 1 != n_points:
-            raise ValueError(
-                f"extents {lo}+{hi}+1 != stencil length {n_points}"
-            )
-        return lo, hi
-
     if weights is not None:
         w = jnp.asarray(weights)
         if direction == "x":
             if w.ndim != 1:
                 raise ValueError("x stencil weights must be 1D")
-            left, right = _split(w.shape[0], num_sten_left, num_sten_right)
+            left, right = _split_extents(w.shape[0], num_sten_left, num_sten_right)
             top = bottom = 0
         elif direction == "y":
             if w.ndim != 1:
                 raise ValueError("y stencil weights must be 1D")
-            top, bottom = _split(w.shape[0], num_sten_top, num_sten_bottom)
+            top, bottom = _split_extents(w.shape[0], num_sten_top, num_sten_bottom)
             left = right = 0
         else:  # xy
             if w.ndim != 2:
                 raise ValueError("xy stencil weights must be 2D (sy, sx)")
-            top, bottom = _split(w.shape[0], num_sten_top, num_sten_bottom)
-            left, right = _split(w.shape[1], num_sten_left, num_sten_right)
+            top, bottom = _split_extents(w.shape[0], num_sten_top, num_sten_bottom)
+            left, right = _split_extents(w.shape[1], num_sten_left, num_sten_right)
         return Stencil2D(
             direction=direction,
             bc=bc,
@@ -197,6 +209,128 @@ def stencil_compute_2d(
 
 
 def stencil_destroy_2d(plan: Stencil2D) -> None:
+    """API-parity Destroy.  JAX buffers are reference counted; nothing to do."""
+    del plan
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilBatch1D:
+    """An immutable batched-1D stencil plan (cuSten's ``1DBatch`` family).
+
+    Applies one 1D stencil (extents ``left``/``right``) along axis 1 of a
+    ``(B, M)`` stack, every row independently.
+    """
+
+    bc: str
+    left: int
+    right: int
+    coeffs: jnp.ndarray  # stencil weights (weighted mode) or fn coefficients
+    point_fn: Callable = weighted_point_fn
+    tile: Optional[Tuple[int, int]] = None  # (Tb, Tm)
+    backend: str = "auto"
+    interpret: Optional[bool] = None
+
+    # -- Compute ----------------------------------------------------------
+    def apply(
+        self, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        """Apply the stencil to every row of ``data`` (the Compute call).
+
+        For ``bc='np'`` the ``left``/``right`` edge columns are copied from
+        ``out_init`` (zeros if not given)."""
+        return ops.stencil_apply_batch1d(
+            data,
+            self.coeffs,
+            out_init,
+            point_fn=self.point_fn,
+            left=self.left,
+            right=self.right,
+            bc=self.bc,
+            tile=self.tile,
+            backend=self.backend,
+            interpret=self.interpret,
+        )
+
+    __call__ = apply
+
+    @property
+    def num_sten(self) -> int:
+        return self.left + self.right + 1
+
+    @property
+    def halo(self) -> Tuple[int, int]:
+        return (self.left, self.right)
+
+
+def stencil_create_1d_batch(
+    bc: str,
+    *,
+    weights=None,
+    func: Optional[Callable] = None,
+    coeffs=None,
+    num_sten_left: Optional[int] = None,
+    num_sten_right: Optional[int] = None,
+    tile: Optional[Tuple[int, int]] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> StencilBatch1D:
+    """Create a batched-1D stencil plan (cuSten ``custenCreate1DBatch*``).
+
+    Weighted mode: pass 1D ``weights`` of length ``numSten`` (symmetric
+    split inferred for odd lengths, or give ``num_sten_left/right``).
+    Function mode (``Fun`` variants): pass ``func(windows, coeffs)`` plus
+    ``coeffs`` and the explicit extents; ``windows`` sweeps left→right.
+    """
+    if bc not in _BCS:
+        raise ValueError(f"bc must be one of {_BCS}")
+    if (weights is None) == (func is None):
+        raise ValueError("exactly one of weights / func must be given")
+
+    if weights is not None:
+        w = jnp.asarray(weights)
+        if w.ndim != 1:
+            raise ValueError("batched-1D stencil weights must be 1D")
+        left, right = _split_extents(
+            w.shape[0], num_sten_left, num_sten_right
+        )
+        return StencilBatch1D(
+            bc=bc,
+            left=left,
+            right=right,
+            coeffs=w,
+            point_fn=weighted_point_fn,
+            tile=tile,
+            backend=backend,
+            interpret=interpret,
+        )
+
+    # function-pointer mode
+    left = num_sten_left or 0
+    right = num_sten_right or 0
+    if coeffs is None:
+        coeffs = jnp.zeros((1,), jnp.float32)
+    return StencilBatch1D(
+        bc=bc,
+        left=left,
+        right=right,
+        coeffs=jnp.asarray(coeffs),
+        point_fn=func,
+        tile=tile,
+        backend=backend,
+        interpret=interpret,
+    )
+
+
+def stencil_compute_1d_batch(
+    plan: StencilBatch1D,
+    data: jnp.ndarray,
+    out_init: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Functional alias for :meth:`StencilBatch1D.apply` (cuSten Compute)."""
+    return plan.apply(data, out_init)
+
+
+def stencil_destroy_1d_batch(plan: StencilBatch1D) -> None:
     """API-parity Destroy.  JAX buffers are reference counted; nothing to do."""
     del plan
 

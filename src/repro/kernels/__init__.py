@@ -8,6 +8,9 @@ Kernels:
 
 - ``stencil2d``  — generic weighted / function-pointer 2D stencil (X/Y/XY,
   periodic/np) with halo-neighbour BlockSpecs (the cuSten compute kernel).
+- ``stencil1d_batch`` — batched-1D stencil over a (B, M) stack (cuSten's
+  ``1DBatch`` family): batch tiled over the grid, M on the lanes, halos
+  along M only.
 - ``penta``      — batched pentadiagonal substitution (cuPentBatch), plus
   Create-time LU factorisation and rank-4 Woodbury cyclic closure.
 - ``weno``       — WENO5 upwind advection RHS (the 2d_xyADVWENO_p variant).

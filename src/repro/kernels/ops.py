@@ -22,8 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.stencil1d_batch import stencil1d_batch_pallas
 from repro.kernels.stencil2d import stencil2d_pallas
-from repro.util import pick_tile
+from repro.util import pick_tile, pick_tile_any
 
 
 def on_tpu() -> bool:
@@ -36,6 +37,46 @@ def _should_interpret(interpret: Optional[bool]) -> bool:
 
 def _pallas_ok(ny, nx, ty, tx, hx, hy) -> bool:
     return (ny % ty == 0) and (nx % tx == 0) and hx <= tx and hy <= ty
+
+
+# Module-level jitted oracle entry points: a fresh jit(partial(...)) per call
+# would miss jax's jit cache (keyed on function identity) and retrace every
+# eager invocation.
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("point_fn", "left", "right", "top", "bottom", "bc"),
+)
+def _stencil2d_jnp(
+    data, coeffs, out_init, *, point_fn, left, right, top, bottom, bc
+):
+    return _ref.stencil2d_ref(
+        data,
+        bc=bc,
+        left=left,
+        right=right,
+        top=top,
+        bottom=bottom,
+        point_fn=point_fn,
+        coeffs=coeffs,
+        out_init=out_init,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("point_fn", "left", "right", "bc")
+)
+def _stencil1d_batch_jnp(data, coeffs, out_init, *, point_fn, left, right, bc):
+    return _ref.stencil1d_batch_ref(
+        data,
+        bc=bc,
+        left=left,
+        right=right,
+        point_fn=point_fn,
+        coeffs=coeffs,
+        out_init=out_init,
+    )
 
 
 def stencil_apply(
@@ -83,18 +124,72 @@ def stencil_apply(
             interpret=_should_interpret(interpret),
         )
     if backend == "jnp":
-        fn = jax.jit(
-            functools.partial(
-                _ref.stencil2d_ref,
-                bc=bc,
-                left=left,
-                right=right,
-                top=top,
-                bottom=bottom,
-                point_fn=point_fn,
-            )
+        return _stencil2d_jnp(
+            data, coeffs, out_init,
+            point_fn=point_fn, left=left, right=right, top=top,
+            bottom=bottom, bc=bc,
         )
-        return fn(data, coeffs=coeffs, out_init=out_init)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _pallas_ok_1d(B, M, tb, tm, hm) -> bool:
+    return (B % tb == 0) and (M % tm == 0) and hm <= tm
+
+
+def stencil_apply_batch1d(
+    data: jnp.ndarray,
+    coeffs: jnp.ndarray,
+    out_init: Optional[jnp.ndarray] = None,
+    *,
+    point_fn: Callable = _ref.weighted_point_fn,
+    left: int = 0,
+    right: int = 0,
+    bc: str = "periodic",
+    tile: Optional[tuple] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Apply a 1D stencil along axis 1 of a ``(B, M)`` stack — the
+    batched-1D Compute primitive (cuSten's ``1DBatch`` family).
+
+    Same backend contract as :func:`stencil_apply`: ``auto`` picks the
+    Pallas kernel when its structural constraints hold on a TPU (falling
+    back to the jnp oracle for e.g. non-divisible batch counts), ``pallas``
+    / ``jnp`` force the respective path.
+    """
+    B, M = data.shape
+    hm = max(left, right)
+    tb, tm = tile if tile is not None else (pick_tile_any(B), pick_tile_any(M))
+
+    if backend == "auto":
+        backend = (
+            "pallas"
+            if on_tpu() and _pallas_ok_1d(B, M, tb, tm, hm)
+            else "jnp"
+        )
+    if backend == "pallas":
+        if not _pallas_ok_1d(B, M, tb, tm, hm):
+            raise ValueError(
+                f"pallas backend needs tile|stack and halo<=tile; got "
+                f"stack=({B},{M}) tile=({tb},{tm}) halo={hm}"
+            )
+        return stencil1d_batch_pallas(
+            data,
+            coeffs,
+            out_init,
+            point_fn=point_fn,
+            left=left,
+            right=right,
+            bc=bc,
+            tb=tb,
+            tm=tm,
+            interpret=_should_interpret(interpret),
+        )
+    if backend == "jnp":
+        return _stencil1d_batch_jnp(
+            data, coeffs, out_init,
+            point_fn=point_fn, left=left, right=right, bc=bc,
+        )
     raise ValueError(f"unknown backend {backend!r}")
 
 

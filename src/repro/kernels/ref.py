@@ -92,6 +92,44 @@ def stencil2d_ref(
 
 
 # ---------------------------------------------------------------------------
+# Batched-1D stencils (cuSten's 1DBatch family)
+# ---------------------------------------------------------------------------
+
+
+def stencil1d_batch_ref(
+    data: jnp.ndarray,
+    *,
+    bc: str,
+    left: int = 0,
+    right: int = 0,
+    point_fn: Callable = weighted_point_fn,
+    coeffs: Optional[jnp.ndarray] = None,
+    out_init: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Oracle for the batched-1D stencil apply on a ``(B, M)`` stack.
+
+    The same 1D stencil (extents ``left``/``right``) is applied along axis 1
+    of every row independently; rows never couple.  Window order sweeps
+    left→right, i.e. ``window[b][r, i] == data[r, (i - left + b) % M]``.
+    ``bc='np'`` computes interior columns only and passes ``out_init``
+    (default zeros) through on the ``left``/``right`` edge columns.
+    """
+    assert bc in ("periodic", "np"), bc
+    wins = [
+        jnp.roll(data, shift=left - b, axis=1)
+        for b in range(left + right + 1)
+    ]
+    out = point_fn(wins, coeffs)
+    if bc == "np":
+        M = data.shape[1]
+        ii = np.arange(M)
+        mask = (ii >= left) & (ii < M - right)
+        base = jnp.zeros_like(out) if out_init is None else out_init
+        out = jnp.where(mask[None, :], out, base.astype(out.dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Pentadiagonal solves (cuPentBatch oracle)
 # ---------------------------------------------------------------------------
 

@@ -11,16 +11,33 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - pinned jax 0.4.x
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    """``jax.make_mesh`` across jax versions: pass explicit Auto axis types
+    when the installed jax knows them, plain construction otherwise (every
+    axis is implicitly Auto there — identical semantics)."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+            )
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_mesh_for(
@@ -36,16 +53,10 @@ def make_mesh_for(
         raise ValueError(f"{n} devices not divisible by tp*pods")
     data = n // (model_parallel * pods)
     if pods > 1:
-        return jax.make_mesh(
-            (pods, data, model_parallel),
-            ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
+        return _make_mesh(
+            (pods, data, model_parallel), ("pod", "data", "model")
         )
-    return jax.make_mesh(
-        (data, model_parallel),
-        ("data", "model"),
-        axis_types=(AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model_parallel), ("data", "model"))
 
 
 def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:

@@ -27,6 +27,28 @@ def pick_tile(n: int, target: int = 128) -> int:
     return math.gcd(n, target) or 1
 
 
+def pick_tile_any(n: int, target: int = 256) -> int:
+    """Largest divisor of ``n`` that is ``<= target`` (any divisor, not just
+    powers of two).
+
+    Used by the batched-1D kernel, where awkward extents (prime batch
+    counts, non-power-of-two line lengths) are routine: a divisor like 150
+    of 300 keeps the Pallas grid small where :func:`pick_tile` would fall
+    back to a tiny power of two."""
+    if n <= target:
+        return n
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            if d <= target:
+                best = max(best, d)
+            if n // d <= target:
+                best = max(best, n // d)
+        d += 1
+    return best
+
+
 def tolerance_for(dtype) -> dict:
     """Sensible allclose tolerances per dtype for kernel<->oracle checks."""
     dtype = jnp.dtype(dtype)

@@ -1,0 +1,116 @@
+"""Deterministic stand-in for the ``hypothesis`` property-testing API.
+
+The kernel/optimizer sweeps are written as hypothesis properties; the test
+container does not ship ``hypothesis`` and nothing may be installed.  This
+module implements the tiny subset the suite uses (``given`` / ``settings`` /
+``strategies.{sampled_from,integers,floats,tuples}``) as a *deterministic
+sweep*: each strategy enumerates a small representative example list
+(endpoints + seeded interior picks) and ``given`` runs the test body over
+``max_examples`` seeded combinations.  Coverage is a fixed pseudo-random
+subset of the cartesian space — weaker than hypothesis' search, but
+reproducible and dependency-free.
+
+Import pattern used by the tests::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+from typing import Any, List
+
+
+class _Strategy:
+    """A finite pool of representative examples."""
+
+    def __init__(self, examples: List[Any]):
+        if not examples:
+            raise ValueError("strategy needs at least one example")
+        self.examples = examples
+
+
+class _Strategies:
+    @staticmethod
+    def sampled_from(values):
+        return _Strategy(list(values))
+
+    @staticmethod
+    def integers(min_value, max_value):
+        rng = random.Random(f"int:{min_value}:{max_value}")
+        pool = {min_value, max_value, (min_value + max_value) // 2}
+        while len(pool) < min(8, max_value - min_value + 1):
+            pool.add(rng.randint(min_value, max_value))
+        return _Strategy(sorted(pool))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        rng = random.Random(f"float:{min_value}:{max_value}")
+        pool = [min_value, max_value, 0.5 * (min_value + max_value)]
+        pool += [rng.uniform(min_value, max_value) for _ in range(5)]
+        return _Strategy(pool)
+
+    @staticmethod
+    def tuples(*strategies):
+        rng = random.Random(len(strategies))
+        n = max(len(s.examples) for s in strategies)
+        pool = [
+            tuple(rng.choice(s.examples) for s in strategies)
+            for _ in range(max(n, 8))
+        ]
+        return _Strategy(pool)
+
+
+strategies = _Strategies()
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Record ``max_examples``; every other knob is search-engine specific."""
+
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(**named_strategies):
+    """Run the test once per seeded draw from the strategy pools."""
+
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(
+                wrapper, "_max_examples",
+                getattr(fn, "_max_examples", _DEFAULT_MAX_EXAMPLES),
+            )
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                draw = {
+                    name: rng.choice(strat.examples)
+                    for name, strat in named_strategies.items()
+                }
+                fn(*args, **kwargs, **draw)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # Expose only the non-strategy parameters (e.g. ``self``) so pytest
+        # does not go hunting for fixtures named after the strategy args.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p
+                for p in sig.parameters.values()
+                if p.name not in named_strategies
+            ]
+        )
+        return wrapper
+
+    return decorate

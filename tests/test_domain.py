@@ -94,7 +94,7 @@ def multidevice_results():
         [sys.executable, "-c", _SCRIPT],
         capture_output=True,
         text=True,
-        timeout=600,
+        timeout=1800,  # 8-device host compiles; generous for loaded CI boxes
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
         cwd=".",
     )

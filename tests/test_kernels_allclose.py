@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic sweep fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ref as R
 from repro.kernels.fused_ch import ch_rhs_pallas

@@ -64,7 +64,7 @@ print("RESULTS" + json.dumps(results))
 def results():
     proc = subprocess.run(
         [sys.executable, "-c", _SCRIPT],
-        capture_output=True, text=True, timeout=600,
+        capture_output=True, text=True, timeout=1800,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd=".",
     )
     assert proc.returncode == 0, proc.stderr[-3000:]

@@ -1,0 +1,244 @@
+"""Batched-1D stencil subsystem: kernel<->oracle equivalence, plan API,
+dispatch contract, and the ADI/Cahn-Hilliard integration path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adi import apply_along_x, apply_along_y
+from repro.core.stencil import (
+    StencilBatch1D,
+    stencil_compute_1d_batch,
+    stencil_create_1d_batch,
+    stencil_destroy_1d_batch,
+)
+from repro.kernels.ops import stencil_apply_batch1d
+from repro.kernels.ref import stencil1d_batch_ref
+from repro.kernels.stencil1d_batch import stencil1d_batch_pallas
+
+# acceptance grid: odd/even extents, prime batch, non-pow2 line length
+BATCHES = [1, 4, 257]
+LENGTHS = [64, 300]
+TOLS = {jnp.dtype(jnp.float32): 1e-6, jnp.dtype(jnp.float64): 1e-12}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+class TestKernelMatchesOracle:
+    @pytest.mark.parametrize("B", BATCHES)
+    @pytest.mark.parametrize("M", LENGTHS)
+    @pytest.mark.parametrize("bc", ["periodic", "np"])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_weighted(self, B, M, bc, dtype):
+        rng = np.random.default_rng(B * 1000 + M)
+        data = _rand(rng, (B, M), dtype)
+        w = _rand(rng, (5,), dtype)
+        init = _rand(rng, (B, M), dtype) if bc == "np" else None
+        kern = stencil_apply_batch1d(
+            data, w, init, left=2, right=2, bc=bc,
+            backend="pallas", interpret=True,
+        )
+        ref = stencil1d_batch_ref(
+            data, bc=bc, left=2, right=2, coeffs=w, out_init=init
+        )
+        tol = TOLS[jnp.dtype(dtype)]
+        np.testing.assert_allclose(kern, ref, rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("extents", [(1, 0), (0, 1), (3, 1), (2, 4)])
+    def test_asymmetric_extents(self, extents):
+        left, right = extents
+        rng = np.random.default_rng(7)
+        data = _rand(rng, (8, 96), jnp.float64)
+        w = _rand(rng, (left + right + 1,), jnp.float64)
+        kern = stencil_apply_batch1d(
+            data, w, left=left, right=right, bc="periodic",
+            backend="pallas", interpret=True,
+        )
+        ref = stencil1d_batch_ref(
+            data, bc="periodic", left=left, right=right, coeffs=w
+        )
+        np.testing.assert_allclose(kern, ref, rtol=1e-12, atol=1e-12)
+
+    @pytest.mark.parametrize("bc", ["periodic", "np"])
+    def test_function_pointer_mode(self, bc):
+        rng = np.random.default_rng(11)
+        data = _rand(rng, (6, 128), jnp.float64)
+        coeffs = _rand(rng, (3,), jnp.float64)
+
+        def fn(windows, coe):  # nonlinear: laplacian-of-cube style
+            return sum(c * (w * w * w - w) for c, w in zip(coe, windows))
+
+        init = jnp.zeros_like(data) if bc == "np" else None
+        kern = stencil1d_batch_pallas(
+            data, coeffs, init, point_fn=fn, left=1, right=1,
+            bc=bc, tb=6, tm=32, interpret=True,
+        )
+        ref = stencil1d_batch_ref(
+            data, bc=bc, left=1, right=1, point_fn=fn, coeffs=coeffs
+        )
+        np.testing.assert_allclose(kern, ref, rtol=1e-12, atol=1e-12)
+
+    def test_rows_are_independent(self):
+        # a batched apply must equal stacking per-row 1D applies
+        rng = np.random.default_rng(3)
+        data = _rand(rng, (5, 64), jnp.float64)
+        w = _rand(rng, (3,), jnp.float64)
+        full = stencil1d_batch_ref(data, bc="periodic", left=1, right=1, coeffs=w)
+        rows = jnp.stack([
+            stencil1d_batch_ref(
+                data[i : i + 1], bc="periodic", left=1, right=1, coeffs=w
+            )[0]
+            for i in range(5)
+        ])
+        np.testing.assert_allclose(full, rows, rtol=0, atol=0)
+
+    def test_np_edges_pass_through(self):
+        rng = np.random.default_rng(5)
+        data = _rand(rng, (4, 64), jnp.float64)
+        init = _rand(rng, (4, 64), jnp.float64)
+        w = _rand(rng, (5,), jnp.float64)
+        out = stencil_apply_batch1d(
+            data, w, init, left=2, right=2, bc="np",
+            backend="pallas", interpret=True,
+        )
+        np.testing.assert_array_equal(out[:, :2], init[:, :2])
+        np.testing.assert_array_equal(out[:, -2:], init[:, -2:])
+
+
+class TestDispatch:
+    def test_tile_constraint_errors(self):
+        data = jnp.zeros((7, 30))
+        w = jnp.ones((3,))
+        with pytest.raises(ValueError):
+            stencil1d_batch_pallas(data, w, left=1, right=1, tb=4, tm=16,
+                                   interpret=True)
+        with pytest.raises(ValueError):  # halo > tile width
+            stencil1d_batch_pallas(
+                jnp.zeros((8, 32)), jnp.ones((19,)), left=9, right=9,
+                tb=8, tm=8, interpret=True,
+            )
+
+    def test_forced_pallas_rejects_non_divisible_tile(self):
+        data = jnp.zeros((7, 32))
+        with pytest.raises(ValueError):
+            stencil_apply_batch1d(
+                data, jnp.ones((3,)), left=1, right=1,
+                tile=(4, 16), backend="pallas", interpret=True,
+            )
+
+    def test_auto_falls_back_to_jnp_off_tpu(self):
+        rng = np.random.default_rng(0)
+        data = _rand(rng, (13, 127), jnp.float64)
+        w = _rand(rng, (3,), jnp.float64)
+        out = stencil_apply_batch1d(
+            data, w, left=1, right=1, bc="periodic", backend="auto"
+        )
+        ref = stencil1d_batch_ref(data, bc="periodic", left=1, right=1, coeffs=w)
+        np.testing.assert_allclose(out, ref, rtol=1e-12, atol=1e-12)
+
+    def test_auto_falls_back_on_non_divisible_tile(self):
+        # an explicit tile that doesn't divide the batch must quietly take
+        # the jnp path under auto (the cuSten contract: dispatch is the
+        # library's job), never error
+        rng = np.random.default_rng(2)
+        data = _rand(rng, (7, 32), jnp.float64)
+        w = _rand(rng, (3,), jnp.float64)
+        out = stencil_apply_batch1d(
+            data, w, left=1, right=1, bc="periodic",
+            tile=(4, 16), backend="auto",
+        )
+        ref = stencil1d_batch_ref(data, bc="periodic", left=1, right=1, coeffs=w)
+        np.testing.assert_allclose(out, ref, rtol=1e-12, atol=1e-12)
+
+    def test_unknown_backend(self):
+        with pytest.raises(ValueError):
+            stencil_apply_batch1d(
+                jnp.zeros((4, 8)), jnp.ones((3,)), left=1, right=1,
+                backend="cuda",
+            )
+
+
+class TestPlanAPI:
+    def test_create_compute_destroy(self):
+        rng = np.random.default_rng(1)
+        plan = stencil_create_1d_batch(
+            "periodic", weights=jnp.asarray([1.0, -2.0, 1.0]), backend="jnp"
+        )
+        assert isinstance(plan, StencilBatch1D)
+        assert plan.num_sten == 3 and plan.halo == (1, 1)
+        data = _rand(rng, (4, 32), jnp.float64)
+        out = stencil_compute_1d_batch(plan, data)
+        ref = stencil1d_batch_ref(
+            data, bc="periodic", left=1, right=1,
+            coeffs=jnp.asarray([1.0, -2.0, 1.0]),
+        )
+        np.testing.assert_allclose(out, ref, rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(plan(data), out, rtol=0, atol=0)
+        stencil_destroy_1d_batch(plan)
+
+    def test_create_validation(self):
+        with pytest.raises(ValueError):
+            stencil_create_1d_batch("bad", weights=jnp.ones((3,)))
+        with pytest.raises(ValueError):
+            stencil_create_1d_batch("periodic")  # neither weights nor func
+        with pytest.raises(ValueError):
+            stencil_create_1d_batch(
+                "periodic", weights=jnp.ones((3, 3))
+            )  # not 1D
+        with pytest.raises(ValueError):
+            stencil_create_1d_batch(
+                "periodic", weights=jnp.ones((4,))
+            )  # even length, no split
+
+    def test_asymmetric_split(self):
+        plan = stencil_create_1d_batch(
+            "np", weights=jnp.ones((4,)), num_sten_left=2, num_sten_right=1
+        )
+        assert plan.halo == (2, 1)
+
+
+class TestADIIntegration:
+    def test_apply_along_axes_match_2d_plans(self):
+        from repro.core.stencil import stencil_create_2d
+        from repro.kernels.ref import stencil2d_ref
+
+        rng = np.random.default_rng(9)
+        field = _rand(rng, (48, 64), jnp.float64)
+        w = jnp.asarray([1.0, -4.0, 6.0, -4.0, 1.0])
+        plan1d = stencil_create_1d_batch("periodic", weights=w, backend="jnp")
+        # along x == 2D x-direction plan
+        ref_x = stencil2d_ref(field, bc="periodic", left=2, right=2, coeffs=w)
+        np.testing.assert_allclose(
+            apply_along_x(plan1d, field), ref_x, rtol=1e-12, atol=1e-12
+        )
+        # along y == 2D y-direction plan
+        ref_y = stencil2d_ref(field, bc="periodic", top=2, bottom=2, coeffs=w)
+        np.testing.assert_allclose(
+            apply_along_y(plan1d, field), ref_y, rtol=1e-12, atol=1e-12
+        )
+
+    def test_cahn_hilliard_batch1d_mode_matches_fused(self):
+        from repro.core.cahn_hilliard import (
+            CahnHilliardADI,
+            CHConfig,
+            deep_quench_ic,
+        )
+
+        c0 = deep_quench_ic(48, 48, seed=2)
+        mk = lambda mode: CahnHilliardADI(  # noqa: E731
+            CHConfig(nx=48, ny=48, dt=1e-3, backend="jnp", rhs_mode=mode)
+        )
+        ref_solver, b1d_solver = mk("fused"), mk("batch1d")
+        c1_ref = ref_solver.initial_step(c0)
+        c1 = b1d_solver.initial_step(c0)
+        np.testing.assert_allclose(c1, c1_ref, rtol=1e-12, atol=1e-12)
+        state_ref, state = (c1_ref, c0), (c1, c0)
+        for _ in range(3):
+            state_ref = ref_solver.step(*state_ref)
+            state = b1d_solver.step(*state)
+        np.testing.assert_allclose(
+            state[0], state_ref[0], rtol=1e-11, atol=1e-11
+        )
