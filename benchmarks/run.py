@@ -6,6 +6,12 @@ fraction, ...).
 
     PYTHONPATH=src python -m benchmarks.run            # standard set
     PYTHONPATH=src python -m benchmarks.run --full     # + Fig-1 physics run
+    PYTHONPATH=src python -m benchmarks.run --smoke    # reduced sizes,
+                                                       # writes BENCH_smoke.json
+
+``--smoke`` runs every (non-heavy) case at reduced size so CI can execute
+the whole harness in seconds and archive the JSON as a perf-trajectory
+artifact.
 """
 
 from __future__ import annotations
@@ -28,12 +34,13 @@ from benchmarks.timing import time_call
 # ---------------------------------------------------------------------------
 
 
-def bench_stencil_sweep():
+def bench_stencil_sweep(smoke: bool = False):
     from repro.core.stencil import central_difference_weights, stencil_create_2d
 
     rows = []
     rng = np.random.default_rng(0)
-    data = jnp.asarray(rng.standard_normal((1024, 1024)))
+    n = 128 if smoke else 1024
+    data = jnp.asarray(rng.standard_normal((n, n)))
     cases = [
         ("x_order2", "x", central_difference_weights(2, 2)),
         ("x_order8", "x", central_difference_weights(8, 2)),
@@ -52,7 +59,7 @@ def bench_stencil_sweep():
             fn = jax.jit(plan.apply)
             us = time_call(fn, data)
             mpts = data.size / us  # points per microsecond
-            rows.append((f"stencil_{name}_{bc}_1024", us, f"{mpts:.1f}Mpt/s"))
+            rows.append((f"stencil_{name}_{bc}_{n}", us, f"{mpts:.1f}Mpt/s"))
     return rows
 
 
@@ -61,7 +68,7 @@ def bench_stencil_sweep():
 # ---------------------------------------------------------------------------
 
 
-def bench_batch1d():
+def bench_batch1d(smoke: bool = False):
     from repro.core.stencil import (
         central_difference_weights,
         stencil_create_1d_batch,
@@ -72,7 +79,12 @@ def bench_batch1d():
     rows = []
     rng = np.random.default_rng(0)
     w = jnp.asarray(central_difference_weights(8, 2))
-    for B, M in [(64, 1024), (256, 1024), (1024, 1024), (257, 300)]:
+    shapes = (
+        [(16, 128), (33, 60)]
+        if smoke
+        else [(64, 1024), (256, 1024), (1024, 1024), (257, 300)]
+    )
+    for B, M in shapes:
         data = jnp.asarray(rng.standard_normal((B, M)))
         for bc in ("periodic", "np"):
             plan = stencil_create_1d_batch(bc, weights=w, backend="jnp")
@@ -104,7 +116,7 @@ def bench_batch1d():
 # ---------------------------------------------------------------------------
 
 
-def bench_penta_batch():
+def bench_penta_batch(smoke: bool = False):
     from repro.kernels.penta import (
         cyclic_penta_factor,
         cyclic_penta_solve_factored,
@@ -113,7 +125,12 @@ def bench_penta_batch():
 
     rows = []
     rng = np.random.default_rng(0)
-    for m, n in [(256, 256), (1024, 1024), (2048, 512)]:
+    shapes = (
+        [(64, 64), (128, 32)]
+        if smoke
+        else [(256, 256), (1024, 1024), (2048, 512)]
+    )
+    for m, n in shapes:
         fac = cyclic_penta_factor(*hyperdiffusion_diagonals(m, 0.4))
         rhs = jnp.asarray(rng.standard_normal((m, n)))
         fn = jax.jit(lambda r, f=fac: cyclic_penta_solve_factored(f, r))
@@ -125,11 +142,56 @@ def bench_penta_batch():
 
 
 # ---------------------------------------------------------------------------
+# §III streaming — streamed tiled executor vs the monolithic path
+# ---------------------------------------------------------------------------
+
+
+def bench_stream(smoke: bool = False):
+    from repro.core.cahn_hilliard import biharmonic_weights
+    from repro.kernels.ops import stencil_apply
+    from repro.kernels.ref import stencil2d_ref
+    from repro.launch.stream import stream_stencil_apply
+
+    rows = []
+    rng = np.random.default_rng(0)
+    n = 128 if smoke else 1024
+    n_chunks = 4 if smoke else 8
+    data = jnp.asarray(rng.standard_normal((n, n)))
+    w = jnp.asarray(biharmonic_weights().ravel())
+    kw = dict(left=2, right=2, top=2, bottom=2, bc="periodic")
+
+    mono = jax.jit(
+        lambda d: stencil_apply(d, w, backend="jnp", **kw)
+    )
+    us_mono = time_call(mono, data)
+    rows.append((f"stream_mono_{n}", us_mono, f"{n*n/us_mono:.1f}Mpt/s"))
+
+    for streams in (1, 2, 4):
+        fn = jax.jit(
+            lambda d, s=streams: stream_stencil_apply(
+                d, w, chunk_rows=n // n_chunks, streams=s, **kw
+            )
+        )
+        us = time_call(fn, data)
+        err = float(
+            jnp.abs(fn(data) - stencil2d_ref(data, coeffs=w, **kw)).max()
+        )
+        rows.append(
+            (
+                f"stream_{n_chunks}chunks_s{streams}_{n}",
+                us,
+                f"{n*n/us:.1f}Mpt/s;err={err:.1e}",
+            )
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # paper §IV.C — WENO advection step
 # ---------------------------------------------------------------------------
 
 
-def bench_weno_step():
+def bench_weno_step(smoke: bool = False):
     from repro.core.weno import (
         AdvectionConfig,
         WenoAdvection2D,
@@ -138,7 +200,7 @@ def bench_weno_step():
     )
 
     rows = []
-    for n in (256, 512):
+    for n in (64,) if smoke else (256, 512):
         cfg = AdvectionConfig(nx=n, ny=n, backend="jnp")
         solver = WenoAdvection2D(cfg)
         q = gaussian_blob(cfg, x0=np.pi, y0=np.pi, sigma=0.5)
@@ -155,7 +217,7 @@ def bench_weno_step():
 # ---------------------------------------------------------------------------
 
 
-def bench_cahn_hilliard_step():
+def bench_cahn_hilliard_step(smoke: bool = False):
     from repro.core.cahn_hilliard import (
         CahnHilliardADI,
         CHConfig,
@@ -163,7 +225,7 @@ def bench_cahn_hilliard_step():
     )
 
     rows = []
-    for n in (128, 256, 512):
+    for n in (64,) if smoke else (128, 256, 512):
         for mode in ("stencil", "fused"):
             cfg = CHConfig(nx=n, ny=n, dt=1e-3, rhs_mode=mode, backend="jnp")
             solver = CahnHilliardADI(cfg)
@@ -174,6 +236,19 @@ def bench_cahn_hilliard_step():
             rows.append(
                 (f"ch_step_{mode}_{n}", us, f"{n*n/us:.1f}Mpt/s")
             )
+        # the streamed full timestep (§III streaming wired into §V ADI)
+        cfg_s = CHConfig(
+            nx=n, ny=n, dt=1e-3, rhs_mode="fused", backend="jnp",
+            streams=2, max_tile_bytes=n * n * 8 // 4,
+        )
+        solver_s = CahnHilliardADI(cfg_s)
+        c0 = deep_quench_ic(n, n, seed=0)
+        c1 = solver_s.initial_step(c0)
+        fn = jax.jit(lambda a, b: solver_s.step(a, b))
+        us = time_call(fn, c1, c0)
+        rows.append(
+            (f"ch_step_streamed_{n}", us, f"{n*n/us:.1f}Mpt/s")
+        )
     return rows
 
 
@@ -182,7 +257,7 @@ def bench_cahn_hilliard_step():
 # ---------------------------------------------------------------------------
 
 
-def bench_coarsening_fig1():
+def bench_coarsening_fig1(smoke: bool = False):
     from repro.core.cahn_hilliard import (
         CahnHilliardADI,
         CHConfig,
@@ -215,7 +290,7 @@ def bench_coarsening_fig1():
 # ---------------------------------------------------------------------------
 
 
-def bench_roofline_table():
+def bench_roofline_table(smoke: bool = False):
     paths = sorted(
         glob.glob("artifacts/dryrun*/**/*.json", recursive=True)
         + glob.glob("artifacts/dryrun*/*.json")
@@ -246,6 +321,7 @@ BENCHMARKS = [
     ("stencil_sweep", bench_stencil_sweep, False),
     ("batch1d", bench_batch1d, False),
     ("penta_batch", bench_penta_batch, False),
+    ("stream", bench_stream, False),
     ("weno_step", bench_weno_step, False),
     ("cahn_hilliard_step", bench_cahn_hilliard_step, False),
     ("coarsening_fig1", bench_coarsening_fig1, True),  # heavy: --full
@@ -258,20 +334,52 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced sizes; write results to BENCH_smoke.json",
+    )
+    ap.add_argument(
+        "--out",
+        default="BENCH_smoke.json",
+        help="JSON output path for --smoke",
+    )
     args = ap.parse_args(argv)
 
+    collected = []
     print("name,us_per_call,derived")
     for name, fn, heavy in BENCHMARKS:
-        if heavy and not args.full:
+        if heavy and not (args.full and not args.smoke):
             continue
         if args.only and args.only != name:
             continue
         try:
-            for row in fn():
+            for row in fn(smoke=args.smoke):
                 print(",".join(str(x) for x in row))
                 sys.stdout.flush()
+                collected.append(
+                    {
+                        "name": row[0],
+                        "us_per_call": float(row[1]),
+                        "derived": str(row[2]),
+                    }
+                )
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}:{e}")
+            collected.append(
+                {"name": name, "error": f"{type(e).__name__}:{e}"}
+            )
+
+    if args.smoke:
+        payload = {
+            "mode": "smoke",
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "rows": collected,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out} ({len(collected)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

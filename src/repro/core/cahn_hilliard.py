@@ -41,13 +41,11 @@ import numpy as np
 
 from repro.core import metrics as _metrics
 from repro.core.adi import (
-    ADIOperator,
     apply_along_x,
     apply_along_y,
     make_adi_operator,
 )
 from repro.core.stencil import (
-    Stencil2D,
     stencil_create_1d_batch,
     stencil_create_2d,
 )
@@ -114,6 +112,9 @@ class CHConfig:
     dtype: str = "float64"
     rhs_mode: str = "fused"  # 'fused' | 'stencil' | 'batch1d'
     backend: str = "auto"  # kernel backend for stencils & penta
+    # streamed tiled execution (cuSten nStreams) for domains > one tile:
+    streams: Optional[int] = None
+    max_tile_bytes: Optional[int] = None
 
     @property
     def dx(self) -> float:
@@ -145,16 +146,19 @@ class CahnHilliardADI:
         beta_half = 0.5 * cfg.D * cfg.gamma * cfg.dt / h4
         self.op_full = make_adi_operator(
             cfg.ny, cfg.nx, beta_full, cyclic=True, dtype=dtype,
-            backend=cfg.backend,
+            backend=cfg.backend, streams=cfg.streams,
+            max_tile_bytes=cfg.max_tile_bytes,
         )
         self.op_half = make_adi_operator(
             cfg.ny, cfg.nx, beta_half, cyclic=True, dtype=dtype,
-            backend=cfg.backend,
+            backend=cfg.backend, streams=cfg.streams,
+            max_tile_bytes=cfg.max_tile_bytes,
         )
 
         # Create: the stencil plans (paper-faithful RHS path).
         mk = functools.partial(
-            stencil_create_2d, "xy", "periodic", backend=cfg.backend
+            stencil_create_2d, "xy", "periodic", backend=cfg.backend,
+            streams=cfg.streams, max_tile_bytes=cfg.max_tile_bytes,
         )
         self.plan_bih = mk(weights=jnp.asarray(biharmonic_weights(), dtype))
         self.plan_lap_cube = stencil_create_2d(
@@ -167,6 +171,8 @@ class CahnHilliardADI:
             num_sten_top=1,
             num_sten_bottom=1,
             backend=cfg.backend,
+            streams=cfg.streams,
+            max_tile_bytes=cfg.max_tile_bytes,
         )
         self.plan_init_a = mk(weights=jnp.asarray(init_explicit_weights_a(), dtype))
         self.plan_init_b = mk(weights=jnp.asarray(init_explicit_weights_b(), dtype))
@@ -174,7 +180,8 @@ class CahnHilliardADI:
         # Create: the batched-1D plans (per-direction RHS path).  Each is one
         # directional factor; apply_along_{x,y} runs it over all grid lines.
         mk1d = functools.partial(
-            stencil_create_1d_batch, "periodic", backend=cfg.backend
+            stencil_create_1d_batch, "periodic", backend=cfg.backend,
+            streams=cfg.streams, max_tile_bytes=cfg.max_tile_bytes,
         )
         self.plan_d4_1d = mk1d(weights=jnp.asarray(_D4, dtype))
         self.plan_d2_1d = mk1d(weights=jnp.asarray(_D2, dtype))
@@ -185,6 +192,8 @@ class CahnHilliardADI:
             num_sten_left=1,
             num_sten_right=1,
             backend=cfg.backend,
+            streams=cfg.streams,
+            max_tile_bytes=cfg.max_tile_bytes,
         )
 
     # -- batched-1D directional assembly (rhs_mode='batch1d') ----------------
@@ -211,6 +220,25 @@ class CahnHilliardADI:
     def rhs(self, c_n: jnp.ndarray, c_nm1: jnp.ndarray) -> jnp.ndarray:
         cfg = self.cfg
         if cfg.rhs_mode == "fused":
+            from repro.launch import stream as _stream
+
+            if _stream.should_stream(
+                c_n.shape,
+                c_n.dtype.itemsize,
+                streams=cfg.streams,
+                max_tile_bytes=cfg.max_tile_bytes,
+            ):
+                return _stream.stream_ch_rhs(
+                    c_n,
+                    c_nm1,
+                    dt=cfg.dt,
+                    D=cfg.D,
+                    gamma=cfg.gamma,
+                    inv_h2=self.inv_h2,
+                    inv_h4=self.inv_h4,
+                    streams=cfg.streams,
+                    max_tile_bytes=cfg.max_tile_bytes,
+                )
             return _ops.ch_rhs(
                 c_n,
                 c_nm1,

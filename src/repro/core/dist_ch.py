@@ -21,7 +21,7 @@ is collective-free).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -126,6 +126,33 @@ class DistributedCahnHilliard:
 
         (c_a, c_b), _ = jax.lax.scan(body, (c_n, c_nm1), None, length=n_steps)
         return c_a, c_b
+
+    def streamed_apply(
+        self,
+        plan,
+        field: jnp.ndarray,
+        out_init: Optional[jnp.ndarray] = None,
+        *,
+        streams: Optional[int] = None,
+        max_tile_bytes: Optional[int] = None,
+        chunk_rows: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """Apply a stencil plan to an oversized field through this solver's
+        mesh: y-chunks stream sequentially (cuSten's row-chunk streams),
+        each chunk's x extent is sharded over ``dd.x_axis`` inside
+        ``shard_map`` with ``ppermute`` halo exchange — the §VI.B multi-GPU
+        layout fused with the §III streaming machinery."""
+        from repro.launch.stream import stream_stencil_apply_dist
+
+        return stream_stencil_apply_dist(
+            plan,
+            field,
+            self.dd,
+            out_init,
+            streams=streams,
+            max_tile_bytes=max_tile_bytes,
+            chunk_rows=chunk_rows,
+        )
 
     def field_sharding(self) -> NamedSharding:
         return NamedSharding(self.dd.mesh, self.layouts.block)

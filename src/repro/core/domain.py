@@ -148,7 +148,6 @@ def distributed_stencil_apply(
     ``field``: (ny, nx) or (E, ny, nx) with ensemble axis; sharded (or
     shardable) as ``dd.field_spec``.
     """
-    ensemble = field.ndim == 3
     ny, nx = field.shape[-2:]
     ny_loc = ny // dd.n_shards(dd.y_axis)
     nx_loc = nx // dd.n_shards(dd.x_axis)

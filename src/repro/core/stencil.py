@@ -63,7 +63,12 @@ def _split_extents(n_points: int, lo: Optional[int], hi: Optional[int]):
 
 @dataclasses.dataclass(frozen=True)
 class Stencil2D:
-    """An immutable stencil plan (the ``cuSten_t`` analogue)."""
+    """An immutable stencil plan (the ``cuSten_t`` analogue).
+
+    ``streams`` / ``max_tile_bytes`` mirror cuSten's ``nStreams`` /
+    ``numStenTop`` streaming knobs: when set (and the field exceeds one
+    tile), Compute routes through the streamed tiled executor
+    (:mod:`repro.launch.stream`) instead of one monolithic kernel call."""
 
     direction: str
     bc: str
@@ -76,6 +81,8 @@ class Stencil2D:
     tile: Optional[Tuple[int, int]] = None
     backend: str = "auto"
     interpret: Optional[bool] = None
+    streams: Optional[int] = None
+    max_tile_bytes: Optional[int] = None
 
     # -- Compute ----------------------------------------------------------
     def apply(
@@ -85,6 +92,29 @@ class Stencil2D:
 
         For ``bc='np'`` the cells within the halo of the domain edge are
         copied from ``out_init`` (zeros if not given)."""
+        from repro.launch import stream as _stream
+
+        if _stream.should_stream(
+            data.shape,
+            jnp.dtype(data.dtype).itemsize,
+            streams=self.streams,
+            max_tile_bytes=self.max_tile_bytes,
+        ):
+            return _stream.stream_stencil_apply(
+                data,
+                self.coeffs,
+                out_init,
+                point_fn=self.point_fn,
+                left=self.left,
+                right=self.right,
+                top=self.top,
+                bottom=self.bottom,
+                bc=self.bc,
+                streams=self.streams,
+                max_tile_bytes=self.max_tile_bytes,
+                compute=_stream.resolve_compute(self.backend),
+                interpret=self.interpret,
+            )
         return ops.stencil_apply(
             data,
             self.coeffs,
@@ -125,6 +155,8 @@ def stencil_create_2d(
     tile: Optional[Tuple[int, int]] = None,
     backend: str = "auto",
     interpret: Optional[bool] = None,
+    streams: Optional[int] = None,
+    max_tile_bytes: Optional[int] = None,
 ) -> Stencil2D:
     """Create a stencil plan (the Create call).
 
@@ -136,6 +168,9 @@ def stencil_create_2d(
     coeffs)`` plus ``coeffs`` and the explicit extents.  ``windows`` is the
     row-major list of shifted views from the top-left of the stencil — the
     indexing convention of paper §V.B.
+
+    ``streams``/``max_tile_bytes`` enable the streamed tiled executor for
+    oversized domains (cuSten ``nStreams``; see :mod:`repro.launch.stream`).
     """
     if direction not in _DIRECTIONS:
         raise ValueError(f"direction must be one of {_DIRECTIONS}")
@@ -173,6 +208,8 @@ def stencil_create_2d(
             tile=tile,
             backend=backend,
             interpret=interpret,
+            streams=streams,
+            max_tile_bytes=max_tile_bytes,
         )
 
     # function-pointer mode
@@ -198,6 +235,8 @@ def stencil_create_2d(
         tile=tile,
         backend=backend,
         interpret=interpret,
+        streams=streams,
+        max_tile_bytes=max_tile_bytes,
     )
 
 
@@ -229,6 +268,8 @@ class StencilBatch1D:
     tile: Optional[Tuple[int, int]] = None  # (Tb, Tm)
     backend: str = "auto"
     interpret: Optional[bool] = None
+    streams: Optional[int] = None
+    max_tile_bytes: Optional[int] = None
 
     # -- Compute ----------------------------------------------------------
     def apply(
@@ -238,6 +279,27 @@ class StencilBatch1D:
 
         For ``bc='np'`` the ``left``/``right`` edge columns are copied from
         ``out_init`` (zeros if not given)."""
+        from repro.launch import stream as _stream
+
+        if _stream.should_stream(
+            data.shape,
+            jnp.dtype(data.dtype).itemsize,
+            streams=self.streams,
+            max_tile_bytes=self.max_tile_bytes,
+        ):
+            return _stream.stream_batch1d_apply(
+                data,
+                self.coeffs,
+                out_init,
+                point_fn=self.point_fn,
+                left=self.left,
+                right=self.right,
+                bc=self.bc,
+                streams=self.streams,
+                max_tile_bytes=self.max_tile_bytes,
+                compute=_stream.resolve_compute(self.backend),
+                interpret=self.interpret,
+            )
         return ops.stencil_apply_batch1d(
             data,
             self.coeffs,
@@ -273,6 +335,8 @@ def stencil_create_1d_batch(
     tile: Optional[Tuple[int, int]] = None,
     backend: str = "auto",
     interpret: Optional[bool] = None,
+    streams: Optional[int] = None,
+    max_tile_bytes: Optional[int] = None,
 ) -> StencilBatch1D:
     """Create a batched-1D stencil plan (cuSten ``custenCreate1DBatch*``).
 
@@ -302,6 +366,8 @@ def stencil_create_1d_batch(
             tile=tile,
             backend=backend,
             interpret=interpret,
+            streams=streams,
+            max_tile_bytes=max_tile_bytes,
         )
 
     # function-pointer mode
@@ -318,6 +384,8 @@ def stencil_create_1d_batch(
         tile=tile,
         backend=backend,
         interpret=interpret,
+        streams=streams,
+        max_tile_bytes=max_tile_bytes,
     )
 
 

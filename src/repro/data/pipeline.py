@@ -13,9 +13,8 @@ vocab-access pattern than uniform for embedding-gather benchmarking).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
-import jax
 import numpy as np
 
 from repro.configs import ArchConfig

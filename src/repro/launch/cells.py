@@ -17,12 +17,10 @@ model (32k) or all axes (500k) feeding the flash-decode shard_map.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchConfig, get_config

@@ -23,7 +23,6 @@ definition and gate the §Dry-run deliverable.
 """
 
 import argparse  # noqa: E402
-import dataclasses  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
@@ -34,12 +33,7 @@ import jax  # noqa: E402
 from repro.configs import get_config, list_archs  # noqa: E402
 from repro.launch import hlo_costs  # noqa: E402
 from repro.launch.cells import SHAPES, build_cell, cell_supported  # noqa: E402
-from repro.launch.hlo_analysis import (  # noqa: E402
-    HBM_BW,
-    ICI_BW,
-    PEAK_FLOPS,
-    RooflineTerms,
-)
+from repro.launch.hlo_analysis import RooflineTerms  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 
 V5E_HBM = 16 * 1024**3  # 16 GiB per chip
@@ -143,8 +137,6 @@ def run_cell(
 
 def run_ch_cell(name: str, *, multi_pod: bool, verbose: bool = True) -> dict:
     """Paper-native Cahn–Hilliard dry-run cells (beyond the 40 LM cells)."""
-    import jax.numpy as jnp
-
     from repro.core.cahn_hilliard import CHConfig
     from repro.core.dist_ch import DistributedCahnHilliard
     from repro.core.domain import DomainDecomposition

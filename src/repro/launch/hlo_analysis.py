@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import Counter
 from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12  # bf16 / chip

@@ -14,10 +14,7 @@ functions the launcher lowers for each (arch x shape) cell:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Callable, Optional
 
 from repro.configs import ArchConfig
 from repro.models import encdec as encdec_mod

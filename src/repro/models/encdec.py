@@ -8,8 +8,6 @@ positions, learned decoder positions, cross-attention in every decoder layer.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

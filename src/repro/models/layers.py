@@ -212,7 +212,6 @@ def softmax_cross_entropy(logits, labels, *, z_loss: float = 0.0):
     (no gather across the sharded vocab axis).  Returns per-token loss."""
     lf = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(lf, axis=-1)
-    V = logits.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
     label_logit = jnp.sum(
         jnp.where(iota == labels[..., None], lf, 0.0), axis=-1

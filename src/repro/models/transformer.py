@@ -14,9 +14,7 @@ Three entry points per model (the dry-run lowers each):
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -502,7 +500,6 @@ def decode_step(
         new_cache = tuple(new_cache)
 
     x = rmsnorm(params["ln_f"], x, eps=cfg.norm_eps)
-    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = (
         unembed_logits(x, params["embed"])
         if cfg.tie_embeddings

@@ -8,8 +8,6 @@ training; the f32 "master" lives implicitly in the moment buffers).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

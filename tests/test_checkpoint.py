@@ -1,6 +1,5 @@
 """Checkpointing: atomic commit, async writer, retention, exact resume."""
 
-import json
 import os
 
 import jax

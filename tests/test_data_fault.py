@@ -1,6 +1,5 @@
 """Data pipeline determinism + fault-tolerance machinery."""
 
-import os
 import time
 
 import numpy as np

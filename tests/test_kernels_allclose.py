@@ -3,7 +3,6 @@
 Every kernel is swept over shapes and dtypes with hypothesis and asserted
 allclose against its ref.py oracle, per the deliverable contract."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Batched-1D stencil subsystem: kernel<->oracle equivalence, plan API,
 dispatch contract, and the ADI/Cahn-Hilliard integration path."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -202,7 +201,6 @@ class TestPlanAPI:
 
 class TestADIIntegration:
     def test_apply_along_axes_match_2d_plans(self):
-        from repro.core.stencil import stencil_create_2d
         from repro.kernels.ref import stencil2d_ref
 
         rng = np.random.default_rng(9)

@@ -1,6 +1,5 @@
 """3D stencils (paper §VI.A future work, implemented)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 try:

@@ -1,7 +1,6 @@
 """End-to-end behaviour tests for the full system."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core.cahn_hilliard import (
