@@ -224,28 +224,33 @@ def bench_cahn_hilliard_step(smoke: bool = False):
         deep_quench_ic,
     )
 
+    # Create-time autotuning on (the PR-3 engine): plan creation measures
+    # its way to the solve/stream configuration, cached across runs.
     rows = []
     for n in (64,) if smoke else (128, 256, 512):
         for mode in ("stencil", "fused"):
-            cfg = CHConfig(nx=n, ny=n, dt=1e-3, rhs_mode=mode, backend="jnp")
+            cfg = CHConfig(
+                nx=n, ny=n, dt=1e-3, rhs_mode=mode, backend="jnp",
+                tune="cached",
+            )
             solver = CahnHilliardADI(cfg)
             c0 = deep_quench_ic(n, n, seed=0)
             c1 = solver.initial_step(c0)
             fn = jax.jit(lambda a, b: solver.step(a, b))
-            us = time_call(fn, c1, c0)
+            us = time_call(fn, c1, c0, repeat=31)
             rows.append(
                 (f"ch_step_{mode}_{n}", us, f"{n*n/us:.1f}Mpt/s")
             )
         # the streamed full timestep (§III streaming wired into §V ADI)
         cfg_s = CHConfig(
             nx=n, ny=n, dt=1e-3, rhs_mode="fused", backend="jnp",
-            streams=2, max_tile_bytes=n * n * 8 // 4,
+            streams=2, max_tile_bytes=n * n * 8 // 4, tune="cached",
         )
         solver_s = CahnHilliardADI(cfg_s)
         c0 = deep_quench_ic(n, n, seed=0)
         c1 = solver_s.initial_step(c0)
         fn = jax.jit(lambda a, b: solver_s.step(a, b))
-        us = time_call(fn, c1, c0)
+        us = time_call(fn, c1, c0, repeat=31)
         rows.append(
             (f"ch_step_streamed_{n}", us, f"{n*n/us:.1f}Mpt/s")
         )
@@ -317,19 +322,41 @@ def bench_roofline_table(smoke: bool = False):
     return rows
 
 
+# (name, fn, heavy, row-name prefixes) — the prefixes let --compare skip
+# whole benchmark functions whose rows cannot appear in the baseline
 BENCHMARKS = [
-    ("stencil_sweep", bench_stencil_sweep, False),
-    ("batch1d", bench_batch1d, False),
-    ("penta_batch", bench_penta_batch, False),
-    ("stream", bench_stream, False),
-    ("weno_step", bench_weno_step, False),
-    ("cahn_hilliard_step", bench_cahn_hilliard_step, False),
-    ("coarsening_fig1", bench_coarsening_fig1, True),  # heavy: --full
-    ("roofline_table", bench_roofline_table, False),
+    ("stencil_sweep", bench_stencil_sweep, False, ("stencil_",)),
+    ("batch1d", bench_batch1d, False, ("batch1d_",)),
+    ("penta_batch", bench_penta_batch, False, ("penta_",)),
+    ("stream", bench_stream, False, ("stream_",)),
+    ("weno_step", bench_weno_step, False, ("weno_",)),
+    ("cahn_hilliard_step", bench_cahn_hilliard_step, False, ("ch_step_",)),
+    ("coarsening_fig1", bench_coarsening_fig1, True, ("fig1_",)),  # --full
+    ("roofline_table", bench_roofline_table, False, ("roofline_",)),
 ]
 
 
-def main(argv=None) -> None:
+def load_baseline(path: str) -> dict:
+    """name -> us_per_call from a prior BENCH json (rows with errors skipped)."""
+    with open(path) as f:
+        payload = json.load(f)
+    return {
+        r["name"]: float(r["us_per_call"])
+        for r in payload.get("rows", [])
+        if "us_per_call" in r
+    }
+
+
+def parse_guards(specs):
+    """``PREFIX:MIN_SPEEDUP`` strings -> list of (prefix, min_speedup)."""
+    guards = []
+    for spec in specs or []:
+        prefix, _, ratio = spec.partition(":")
+        guards.append((prefix, float(ratio) if ratio else 1.0))
+    return guards
+
+
+def main(argv=None) -> int:
     jax.config.update("jax_enable_x64", True)  # the paper's solvers are f64
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -344,43 +371,107 @@ def main(argv=None) -> None:
         default="BENCH_smoke.json",
         help="JSON output path for --smoke",
     )
+    ap.add_argument(
+        "--compare",
+        default=None,
+        metavar="BASELINE.json",
+        help="A/B mode: rerun only the cases present in a prior BENCH "
+        "json and print/record per-row speedup (baseline_us / new_us)",
+    )
+    ap.add_argument(
+        "--guard",
+        action="append",
+        default=None,
+        metavar="PREFIX:MIN_SPEEDUP",
+        help="with --compare: exit non-zero if any compared row whose "
+        "name starts with PREFIX has speedup < MIN_SPEEDUP (e.g. "
+        "'ch_step_fused:0.75' fails a >25%% regression); repeatable",
+    )
     args = ap.parse_args(argv)
 
+    baseline = load_baseline(args.compare) if args.compare else None
+    guards = parse_guards(args.guard)
+    if guards and baseline is None:
+        ap.error("--guard requires --compare (a guard without a baseline "
+                 "would be silently ignored)")
+
     collected = []
-    print("name,us_per_call,derived")
-    for name, fn, heavy in BENCHMARKS:
+    header = "name,us_per_call,derived" + (",speedup" if baseline else "")
+    print(header)
+    for name, fn, heavy, prefixes in BENCHMARKS:
         if heavy and not (args.full and not args.smoke):
             continue
         if args.only and args.only != name:
             continue
+        if baseline is not None and not any(
+            bname.startswith(p) for bname in baseline for p in prefixes
+        ):
+            continue  # A/B mode: no baseline rows for this benchmark at all
         try:
             for row in fn(smoke=args.smoke):
-                print(",".join(str(x) for x in row))
+                rec = {
+                    "name": row[0],
+                    "us_per_call": float(row[1]),
+                    "derived": str(row[2]),
+                }
+                if baseline is not None:
+                    if row[0] not in baseline:
+                        continue  # A/B mode: only matching cases
+                    rec["baseline_us"] = baseline[row[0]]
+                    rec["speedup"] = rec["baseline_us"] / rec["us_per_call"]
+                    print(
+                        ",".join(str(x) for x in row)
+                        + f",{rec['speedup']:.3f}x"
+                    )
+                else:
+                    print(",".join(str(x) for x in row))
                 sys.stdout.flush()
-                collected.append(
-                    {
-                        "name": row[0],
-                        "us_per_call": float(row[1]),
-                        "derived": str(row[2]),
-                    }
-                )
+                collected.append(rec)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}:{e}")
             collected.append(
                 {"name": name, "error": f"{type(e).__name__}:{e}"}
             )
 
-    if args.smoke:
+    if args.smoke or args.compare:
         payload = {
-            "mode": "smoke",
+            "mode": "smoke" if args.smoke else "compare",
             "jax": jax.__version__,
             "backend": jax.default_backend(),
+            "baseline": args.compare,
+            # the estimator rows were timed with (PR <= 2 files used
+            # median-of-5; speedups vs those baselines partly reflect the
+            # estimator change — see benchmarks/timing.py)
+            "timing": "min-of-repeats (benchmarks.timing.time_call)",
             "rows": collected,
         }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.out} ({len(collected)} rows)", file=sys.stderr)
 
+    failures = []
+    if baseline is not None:
+        for prefix, min_speedup in guards:
+            matched = 0
+            for rec in collected:
+                if rec.get("name", "").startswith(prefix) and "speedup" in rec:
+                    matched += 1
+                    if rec["speedup"] < min_speedup:
+                        failures.append(
+                            f"{rec['name']}: speedup {rec['speedup']:.3f} "
+                            f"< {min_speedup} (guard {prefix})"
+                        )
+            if matched == 0:
+                # fail closed: a guard whose case errored out (or matched
+                # nothing) must not let CI pass with the row unmeasured
+                failures.append(
+                    f"{prefix}: no compared row matched this guard "
+                    f"(benchmark errored or baseline lacks the case)"
+                )
+    for msg in failures:
+        print(f"PERF GUARD FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

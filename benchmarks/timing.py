@@ -8,8 +8,15 @@ import time
 import jax
 
 
-def time_call(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
-    """Median microseconds per call of a jitted function."""
+def time_call(fn, *args, warmup: int = 3, repeat: int = 15) -> float:
+    """Minimum microseconds per call of a jitted function.
+
+    Min-of-repeats (the ``timeit`` convention): on shared/throttled CI
+    hosts scheduler preemption inflates individual calls severalfold, so
+    the minimum — not the median — estimates what the code actually
+    costs; the extra repeats make hitting at least one quiet window very
+    likely.
+    """
     for _ in range(warmup):
         out = fn(*args)
     jax.block_until_ready(out)
@@ -20,4 +27,4 @@ def time_call(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
         jax.block_until_ready(out)
         times.append((time.perf_counter() - t0) * 1e6)
     times.sort()
-    return times[len(times) // 2]
+    return times[0]

@@ -32,12 +32,17 @@ def main():
     ap.add_argument(
         "--rhs", choices=["fused", "stencil", "batch1d"], default="fused"
     )
+    ap.add_argument(
+        "--tune", choices=["off", "cached", "force"], default="off",
+        help="Create-time autotuning (cached results under "
+        "~/.cache/repro-tune or $REPRO_TUNE_CACHE)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = CHConfig(
         nx=args.n, ny=args.n, dt=args.dt, D=0.6, gamma=0.01,
-        rhs_mode=args.rhs, backend="jnp",
+        rhs_mode=args.rhs, backend="jnp", tune=args.tune,
     )
     solver = CahnHilliardADI(cfg)
     c0 = deep_quench_ic(args.n, args.n, seed=args.seed)

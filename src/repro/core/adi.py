@@ -6,17 +6,23 @@ Each ADI step inverts the per-direction implicit operator
 
 along x and then along y.  Following cuSten/cuPentBatch, the factorisation
 happens once at Create time (:class:`ADIOperator`); each Compute is a batched
-banded substitution.  Solves run along axis 0 with the batch on axis 1 (TPU
-lanes); the x-sweep transposes in/out — the same interleaving transpose the
-paper applies between sweeps.
+banded substitution.  Both sweeps are **transpose-free**: the y-sweep runs
+the column-layout substitution (systems along axis 0, batch on lanes) and
+the x-sweep the row-layout variant (batch along axis 0, recurrence along
+lanes) — both factored once at Create time, so no per-step interleaving
+transpose remains anywhere.
 
 The *explicit* side of each sweep is the same batched-1D picture: a purely
 directional stencil applied to every grid line at once.
 :func:`apply_along_x` / :func:`apply_along_y` run a
 :class:`~repro.core.stencil.StencilBatch1D` plan over the rows / columns of
-an ``(ny, nx)`` field (the y-path shares the x-solve's interleaving
-transpose), so per-direction RHS assembly never touches the full-2D stencil
-machinery.
+an ``(ny, nx)`` field, so per-direction RHS assembly never touches the
+full-2D stencil machinery.
+
+``tune='cached'|'force'`` on :func:`make_adi_operator` routes the backend /
+batch-tile / unroll choice for each sweep through the Create-time
+autotuner (:mod:`repro.tune`): candidates are measured once per
+(shape, dtype, backend, jax version) and remembered on disk.
 """
 
 from __future__ import annotations
@@ -24,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.stencil import StencilBatch1D
@@ -32,9 +39,11 @@ from repro.kernels.penta import (
     PentaFactors,
     cyclic_penta_factor,
     cyclic_penta_solve_factored,
+    cyclic_penta_solve_factored_rows,
     hyperdiffusion_diagonals,
     penta_factor,
     penta_solve_factored,
+    penta_solve_factored_rows,
 )
 
 
@@ -54,8 +63,8 @@ def apply_along_y(
     out_init: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Apply a batched-1D plan along the y (first) axis of an (ny, nx)
-    field: the nx columns are the batch (transposes in/out, like
-    :meth:`ADIOperator.solve_x` does for the implicit half)."""
+    field: the nx columns are the batch (the explicit path still
+    interleaves; the implicit sweeps do not)."""
     out_init_t = None if out_init is None else out_init.T
     return plan.apply(field.T, out_init_t).T
 
@@ -65,10 +74,15 @@ class ADIOperator:
     """Factored per-direction operators L = I + alpha/h^4 * delta^4.
 
     ``streams``/``max_tile_bytes`` route the batched substitutions through
-    the streamed executor (:func:`repro.launch.stream.stream_penta_solve`):
-    the independent-systems batch axis is cut into column chunks solved
-    pipeline-style, so the implicit half of an ADI step also runs on
-    domains exceeding one tile."""
+    the streamed executor (:mod:`repro.launch.stream`): the y-sweep cuts
+    its independent-systems batch into column chunks
+    (:func:`~repro.launch.stream.stream_penta_solve`), the x-sweep into
+    row chunks (:func:`~repro.launch.stream.stream_penta_solve_rows`) —
+    both transpose-free, so the implicit half of an ADI step runs on
+    domains exceeding one tile.
+
+    ``x_cfg``/``y_cfg`` are per-sweep overrides (``backend``, ``tb``/``tn``
+    batch tile, jnp ``unroll``) produced by the Create-time autotuner."""
 
     fac_x: CyclicPentaFactors | PentaFactors  # along x (length nx)
     fac_y: CyclicPentaFactors | PentaFactors  # along y (length ny)
@@ -76,10 +90,49 @@ class ADIOperator:
     backend: str = "auto"
     streams: Optional[int] = None
     max_tile_bytes: Optional[int] = None
+    x_cfg: Optional[dict] = None  # tuned x-sweep config
+    y_cfg: Optional[dict] = None  # tuned y-sweep config
 
-    def _solve(self, fac, rhs):
+    def _cfg(self, cfg: Optional[dict]):
+        cfg = cfg or {}
+        return cfg.get("backend", self.backend), cfg.get("unroll", 1), cfg
+
+    def solve_x(self, rhs: jnp.ndarray) -> jnp.ndarray:
+        """Solve L_x w = rhs along the x (last) axis of an (ny, nx) field —
+        row layout, transpose-free."""
         from repro.launch import stream as _stream
 
+        backend, unroll, cfg = self._cfg(self.x_cfg)
+        if rhs.ndim == 2 and _stream.should_stream(
+            rhs.shape,
+            rhs.dtype.itemsize,
+            streams=self.streams,
+            max_tile_bytes=self.max_tile_bytes,
+        ):
+            return _stream.stream_penta_solve_rows(
+                self.fac_x,
+                rhs,
+                cyclic=self.cyclic,
+                streams=self.streams,
+                max_tile_bytes=self.max_tile_bytes,
+                backend=backend,
+                unroll=unroll,
+            )
+        solve = (
+            cyclic_penta_solve_factored_rows
+            if self.cyclic
+            else penta_solve_factored_rows
+        )
+        return solve(
+            self.fac_x, rhs, backend=backend, tb=cfg.get("tb"), unroll=unroll
+        )
+
+    def solve_y(self, rhs: jnp.ndarray) -> jnp.ndarray:
+        """Solve L_y v = rhs along the y (first) axis of an (ny, nx) field —
+        column layout, native."""
+        from repro.launch import stream as _stream
+
+        backend, unroll, cfg = self._cfg(self.y_cfg)
         if rhs.ndim == 2 and _stream.should_stream(
             rhs.shape,
             rhs.dtype.itemsize,
@@ -87,24 +140,87 @@ class ADIOperator:
             max_tile_bytes=self.max_tile_bytes,
         ):
             return _stream.stream_penta_solve(
-                fac,
+                self.fac_y,
                 rhs,
                 cyclic=self.cyclic,
                 streams=self.streams,
                 max_tile_bytes=self.max_tile_bytes,
-                backend=self.backend,
+                backend=backend,
+                unroll=unroll,
             )
-        if self.cyclic:
-            return cyclic_penta_solve_factored(fac, rhs, backend=self.backend)
-        return penta_solve_factored(fac, rhs, backend=self.backend)
+        solve = (
+            cyclic_penta_solve_factored
+            if self.cyclic
+            else penta_solve_factored
+        )
+        return solve(
+            self.fac_y, rhs, backend=backend, tn=cfg.get("tn"), unroll=unroll
+        )
 
-    def solve_x(self, rhs: jnp.ndarray) -> jnp.ndarray:
-        """Solve L_x w = rhs along the x (last) axis of an (ny, nx) field."""
-        return self._solve(self.fac_x, rhs.T).T
 
-    def solve_y(self, rhs: jnp.ndarray) -> jnp.ndarray:
-        """Solve L_y v = rhs along the y (first) axis of an (ny, nx) field."""
-        return self._solve(self.fac_y, rhs)
+def _autotune_adi(op: ADIOperator, ny: int, nx: int, dtype, mode: str, cache):
+    """Measure per-sweep solve configurations and attach the winners."""
+    from repro.kernels import ops as _ops
+    from repro.tune import autotune
+    from repro.util import tile_candidates
+
+    rhs = jnp.zeros((ny, nx), dtype)
+
+    def candidates(batch: int):
+        cands = [{"backend": "jnp", "unroll": 1}, {"backend": "jnp", "unroll": 4}]
+        if _ops.on_tpu():
+            for t in tile_candidates(batch):
+                cands.append({"backend": "pallas", "tile": t})
+        return cands
+
+    def build_x(cfg):
+        solve = (
+            cyclic_penta_solve_factored_rows
+            if op.cyclic
+            else penta_solve_factored_rows
+        )
+
+        def f(r):
+            return solve(
+                op.fac_x, r, backend=cfg["backend"], tb=cfg.get("tile"),
+                unroll=cfg.get("unroll", 1),
+            )
+
+        return jax.jit(f)
+
+    def build_y(cfg):
+        solve = (
+            cyclic_penta_solve_factored
+            if op.cyclic
+            else penta_solve_factored
+        )
+
+        def f(r):
+            return solve(
+                op.fac_y, r, backend=cfg["backend"], tn=cfg.get("tile"),
+                unroll=cfg.get("unroll", 1),
+            )
+
+        return jax.jit(f)
+
+    extra = {"cyclic": op.cyclic}
+    best_x = autotune(
+        "adi_solve_x", candidates(ny), build_x, (rhs,),
+        shape=(ny, nx), dtype=dtype, backend=op.backend, extra=extra,
+        mode=mode, cache=cache,
+    )
+    best_y = autotune(
+        "adi_solve_y", candidates(nx), build_y, (rhs,),
+        shape=(ny, nx), dtype=dtype, backend=op.backend, extra=extra,
+        mode=mode, cache=cache,
+    )
+    x_cfg = {"backend": best_x["backend"], "unroll": best_x.get("unroll", 1)}
+    if "tile" in best_x:
+        x_cfg["tb"] = best_x["tile"]
+    y_cfg = {"backend": best_y["backend"], "unroll": best_y.get("unroll", 1)}
+    if "tile" in best_y:
+        y_cfg["tn"] = best_y["tile"]
+    return dataclasses.replace(op, x_cfg=x_cfg, y_cfg=y_cfg)
 
 
 def make_adi_operator(
@@ -118,19 +234,27 @@ def make_adi_operator(
     alpha_over_h4_y: Optional[float] = None,
     streams: Optional[int] = None,
     max_tile_bytes: Optional[int] = None,
+    tune: str = "off",
+    tune_cache=None,
 ) -> ADIOperator:
     """Create (factor) the ADI operator pair.
 
     ``alpha_over_h4`` is the full coefficient multiplying ``delta^4``
     (e.g. ``(2/3) * D * gamma * dt / h**4`` for the paper's full scheme, or
     ``0.5 * D * gamma * dt / h**4`` for the eq. (3) initial step).
+
+    ``tune`` (``'off'|'cached'|'force'``) runs the Create-time autotuner
+    over per-sweep backend / batch-tile / unroll candidates.
     """
     ax = alpha_over_h4
     ay = alpha_over_h4 if alpha_over_h4_y is None else alpha_over_h4_y
     factor = cyclic_penta_factor if cyclic else penta_factor
     fac_x = factor(*hyperdiffusion_diagonals(nx, ax, dtype))
     fac_y = factor(*hyperdiffusion_diagonals(ny, ay, dtype))
-    return ADIOperator(
+    op = ADIOperator(
         fac_x=fac_x, fac_y=fac_y, cyclic=cyclic, backend=backend,
         streams=streams, max_tile_bytes=max_tile_bytes,
     )
+    if tune != "off":
+        op = _autotune_adi(op, ny, nx, jnp.dtype(dtype), tune, tune_cache)
+    return op

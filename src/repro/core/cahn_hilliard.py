@@ -115,6 +115,9 @@ class CHConfig:
     # streamed tiled execution (cuSten nStreams) for domains > one tile:
     streams: Optional[int] = None
     max_tile_bytes: Optional[int] = None
+    # Create-time autotuning ('off' | 'cached' | 'force'): measure solve /
+    # stream configurations once at Create, remember them on disk
+    tune: str = "off"
 
     @property
     def dx(self) -> float:
@@ -127,6 +130,9 @@ class CHConfig:
     def validate(self):
         if abs(self.dx - self.dy) > 1e-12:
             raise ValueError("paper scheme assumes a uniform grid dx == dy")
+        from repro.tune import check_mode
+
+        check_mode(self.tune)
 
 
 class CahnHilliardADI:
@@ -142,23 +148,33 @@ class CahnHilliardADI:
         self.inv_h4 = 1.0 / h4
 
         # Create: factor the implicit operators once (cuPentBatch pattern).
+        # With tune != 'off' the solve configuration (per-sweep backend,
+        # batch tile, unroll) is *measured*; op_half shares op_full's cache
+        # entry — the key is (shape, dtype, backend), not the alpha value,
+        # because substitution cost does not depend on the coefficients.
         beta_full = (2.0 / 3.0) * cfg.D * cfg.gamma * cfg.dt / h4
         beta_half = 0.5 * cfg.D * cfg.gamma * cfg.dt / h4
         self.op_full = make_adi_operator(
             cfg.ny, cfg.nx, beta_full, cyclic=True, dtype=dtype,
             backend=cfg.backend, streams=cfg.streams,
-            max_tile_bytes=cfg.max_tile_bytes,
+            max_tile_bytes=cfg.max_tile_bytes, tune=cfg.tune,
         )
         self.op_half = make_adi_operator(
             cfg.ny, cfg.nx, beta_half, cyclic=True, dtype=dtype,
             backend=cfg.backend, streams=cfg.streams,
             max_tile_bytes=cfg.max_tile_bytes,
+            tune="cached" if cfg.tune == "force" else cfg.tune,
         )
+        # tuned x-sweep unroll feeds the fused RHS+sweep path too
+        self._unroll = (self.op_full.x_cfg or {}).get("unroll", 1)
+        self._streams_eff = cfg.streams
+        self._evolve_cache = {}  # chunk length -> compiled donated driver
 
         # Create: the stencil plans (paper-faithful RHS path).
         mk = functools.partial(
             stencil_create_2d, "xy", "periodic", backend=cfg.backend,
             streams=cfg.streams, max_tile_bytes=cfg.max_tile_bytes,
+            tune=cfg.tune, shape=(cfg.ny, cfg.nx),
         )
         self.plan_bih = mk(weights=jnp.asarray(biharmonic_weights(), dtype))
         self.plan_lap_cube = stencil_create_2d(
@@ -173,15 +189,23 @@ class CahnHilliardADI:
             backend=cfg.backend,
             streams=cfg.streams,
             max_tile_bytes=cfg.max_tile_bytes,
+            tune=cfg.tune,
+            shape=(cfg.ny, cfg.nx),
         )
         self.plan_init_a = mk(weights=jnp.asarray(init_explicit_weights_a(), dtype))
         self.plan_init_b = mk(weights=jnp.asarray(init_explicit_weights_b(), dtype))
 
         # Create: the batched-1D plans (per-direction RHS path).  Each is one
         # directional factor; apply_along_{x,y} runs it over all grid lines.
+        # These plans are applied in BOTH orientations ((ny, nx) rows and the
+        # (nx, ny) transpose for the y direction), so a tuned tile baked for
+        # one orientation would reject the other on rectangular domains —
+        # tune them only when the two orientations coincide.
+        tune_1d = cfg.tune if cfg.ny == cfg.nx else "off"
         mk1d = functools.partial(
             stencil_create_1d_batch, "periodic", backend=cfg.backend,
             streams=cfg.streams, max_tile_bytes=cfg.max_tile_bytes,
+            tune=tune_1d, shape=(cfg.ny, cfg.nx),
         )
         self.plan_d4_1d = mk1d(weights=jnp.asarray(_D4, dtype))
         self.plan_d2_1d = mk1d(weights=jnp.asarray(_D2, dtype))
@@ -194,7 +218,21 @@ class CahnHilliardADI:
             backend=cfg.backend,
             streams=cfg.streams,
             max_tile_bytes=cfg.max_tile_bytes,
+            tune=tune_1d,
+            shape=(cfg.ny, cfg.nx),
         )
+
+        # Tune the streamed fused hot path's pipeline width (chunks in
+        # flight) when streaming is on: the best group width is a property
+        # of the host, not of the PDE.
+        if cfg.tune != "off" and cfg.rhs_mode == "fused":
+            from repro.launch import stream as _stream
+
+            if _stream.should_stream(
+                (cfg.ny, cfg.nx), dtype.itemsize,
+                streams=cfg.streams, max_tile_bytes=cfg.max_tile_bytes,
+            ):
+                self._streams_eff = self._tune_streams(dtype)
 
     # -- batched-1D directional assembly (rhs_mode='batch1d') ----------------
     def _cross_batch1d(self, c: jnp.ndarray) -> jnp.ndarray:
@@ -280,11 +318,98 @@ class CahnHilliardADI:
             return lin + hyper + nonlin
         raise ValueError(f"unknown rhs_mode {cfg.rhs_mode!r}")
 
+    def _tune_streams(self, dtype):
+        """Measure candidate pipeline widths for the streamed fused sweep."""
+        from repro.launch import stream as _stream
+        from repro.tune import autotune
+
+        cfg = self.cfg
+        c = jnp.zeros((cfg.ny, cfg.nx), dtype)
+
+        def build(cand):
+            def f(a, b):
+                return _stream.stream_ch_rhs_xsweep(
+                    a, b, self.op_full.fac_x,
+                    dt=cfg.dt, D=cfg.D, gamma=cfg.gamma,
+                    inv_h2=self.inv_h2, inv_h4=self.inv_h4,
+                    streams=cand["streams"],
+                    max_tile_bytes=cfg.max_tile_bytes,
+                    unroll=self._unroll,
+                )
+
+            return jax.jit(f)
+
+        base = cfg.streams or 1
+        widths = sorted({1, 2, 4, 8, base})
+        best = autotune(
+            "ch_stream_groups",
+            [{"streams": s} for s in widths],
+            build,
+            (c, c),
+            shape=(cfg.ny, cfg.nx),
+            dtype=dtype,
+            backend=cfg.backend,
+            # streams is part of the key: it shapes the candidate list, so
+            # differing configs must not ping-pong one cache entry
+            extra={"max_tile_bytes": cfg.max_tile_bytes,
+                   "streams": cfg.streams},
+            mode=cfg.tune,
+            default={"streams": base},
+        )
+        return best["streams"]
+
+    # -- fused explicit RHS + transpose-free x-sweep (the hot loop) ---------
+    def _fused_xsweep(self, c_n: jnp.ndarray, c_nm1: jnp.ndarray) -> jnp.ndarray:
+        """``L_x^{-1} rhs(c_n, c_nm1)`` in one fused pass — the RHS feeds
+        the row-layout x-sweep in its native layout, streamed when the
+        domain exceeds one tile."""
+        cfg = self.cfg
+        from repro.launch import stream as _stream
+
+        if _stream.should_stream(
+            c_n.shape,
+            c_n.dtype.itemsize,
+            streams=cfg.streams,
+            max_tile_bytes=cfg.max_tile_bytes,
+        ):
+            return _stream.stream_ch_rhs_xsweep(
+                c_n,
+                c_nm1,
+                self.op_full.fac_x,
+                dt=cfg.dt,
+                D=cfg.D,
+                gamma=cfg.gamma,
+                inv_h2=self.inv_h2,
+                inv_h4=self.inv_h4,
+                streams=self._streams_eff,
+                max_tile_bytes=cfg.max_tile_bytes,
+                backend=cfg.backend,
+                unroll=self._unroll,
+            )
+        return _ops.ch_rhs_xsweep(
+            c_n,
+            c_nm1,
+            self.op_full.fac_x,
+            dt=cfg.dt,
+            D=cfg.D,
+            gamma=cfg.gamma,
+            inv_h2=self.inv_h2,
+            inv_h4=self.inv_h4,
+            backend=cfg.backend,
+            unroll=self._unroll,
+        )
+
     # -- one full scheme step (eq. 2) ---------------------------------------
     def step(
         self, c_n: jnp.ndarray, c_nm1: jnp.ndarray
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        w = self.op_full.solve_x(self.rhs(c_n, c_nm1))
+        """One full-scheme step.  Transpose-free end to end: the fused path
+        assembles the RHS straight into the x-sweep; both sweeps consume
+        their Create-time factors in their native layout."""
+        if self.cfg.rhs_mode == "fused":
+            w = self._fused_xsweep(c_n, c_nm1)
+        else:
+            w = self.op_full.solve_x(self.rhs(c_n, c_nm1))
         v = self.op_full.solve_y(w)
         c_np1 = 2.0 * c_n - c_nm1 + v
         return c_np1, c_n
@@ -333,6 +458,26 @@ class CahnHilliardADI:
 
         return body
 
+    def make_evolve(self, chunk: int) -> Callable:
+        """A compiled ``(c_n, c_nm1) -> (c_{n+chunk}, c_{n+chunk-1})``
+        multi-step driver with the scan carry *donated* through the jit
+        boundary: between chunks the two field buffers are double-buffered
+        in place (cuSten's pointer Swap across whole chunks of steps).
+        Compiled once per chunk length and cached on the solver."""
+        fn = self._evolve_cache.get(chunk)
+        if fn is None:
+            body = self.make_scan_step()
+
+            def evolve(c_n, c_nm1):
+                (a, b), _ = jax.lax.scan(
+                    body, (c_n, c_nm1), None, length=chunk
+                )
+                return a, b
+
+            fn = jax.jit(evolve, donate_argnums=(0, 1))
+            self._evolve_cache[chunk] = fn
+        return fn
+
     def run(
         self,
         c0: jnp.ndarray,
@@ -345,28 +490,44 @@ class CahnHilliardADI:
 
         Returns ``(c_final, history)`` where history is a list of
         ``(step, metrics_fn(c))`` collected every ``save_every`` steps.
+        Delegates to :func:`ch_evolve` (donated double-buffered carry).
         """
-        c1 = self.initial_step(c0)
-        carry = (c1, c0)
-        body = self.make_scan_step()
-        chunk = save_every if save_every else n_steps
-        scan = jax.jit(
-            lambda c, n=chunk: jax.lax.scan(body, c, None, length=n)[0]
+        return ch_evolve(
+            self, c0, n_steps, save_every=save_every, metrics_fn=metrics_fn
         )
-        history = []
-        done = 1  # initial step counts as step 1
-        while done < n_steps + 1:
-            todo = min(chunk, n_steps + 1 - done)
-            if todo != chunk:
-                carry = jax.jit(
-                    lambda c: jax.lax.scan(body, c, None, length=todo)[0]
-                )(carry)
-            else:
-                carry = scan(carry)
-            done += todo
-            if metrics_fn is not None:
-                history.append((done, metrics_fn(carry[0])))
-        return carry[0], history
+
+
+def ch_evolve(
+    solver: CahnHilliardADI,
+    c0: jnp.ndarray,
+    n_steps: int,
+    *,
+    save_every: int = 0,
+    metrics_fn: Optional[Callable] = None,
+):
+    """Multi-step driver with a donated, double-buffered scan carry.
+
+    Runs the bootstrap step, then advances in compiled chunks whose
+    ``(c_n, c_nm1)`` carry buffers are donated across the jit boundary:
+    on accelerators each chunk writes into the buffers the previous chunk
+    released (the Create/Compute-era pointer swap, across whole chunks).
+    ``c0`` is copied once on entry so the caller's array survives
+    donation.  Returns ``(c_final, history)`` with history a list of
+    ``(step, metrics_fn(c))`` every ``save_every`` steps.
+    """
+    c0 = jnp.array(c0)  # private copy: the carry buffers get donated
+    c1 = solver.initial_step(c0)
+    carry = (c1, c0)
+    chunk = save_every if save_every else n_steps
+    history = []
+    done = 1  # initial step counts as step 1
+    while done < n_steps + 1:
+        todo = min(chunk, n_steps + 1 - done)
+        carry = solver.make_evolve(todo)(*carry)
+        done += todo
+        if metrics_fn is not None:
+            history.append((done, metrics_fn(carry[0])))
+    return carry[0], history
 
 
 def deep_quench_ic(

@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -44,6 +45,66 @@ from repro.kernels.ref import weighted_point_fn
 
 _DIRECTIONS = ("x", "y", "xy")
 _BCS = ("periodic", "np")
+
+
+def _autotune_plan(plan, shape, mode: str, cache, *, kernel: str):
+    """Measure tile/backend candidates for a plan on a ``shape`` field and
+    return the plan with the winning configuration baked in.
+
+    Candidates: the plan's static-heuristic configuration plus (on TPU)
+    a small grid of aligned Pallas tiles.  Off-TPU there is a single
+    candidate and :func:`repro.tune.autotune` short-circuits without any
+    measurement — tuned and untuned plans are then identical by
+    construction (bit-match trivially holds).
+    """
+    from repro.tune import autotune, check_mode
+    from repro.util import tile_candidates
+
+    check_mode(mode)
+    if mode == "off":
+        return plan
+    if shape is None:
+        raise ValueError("tune != 'off' needs shape=(...) to measure with")
+    is_1d = kernel == "stencil1d_batch"
+    data = jnp.zeros(tuple(shape), plan.coeffs.dtype)
+    default = {"backend": plan.backend, "tile": None}
+    candidates = [default]
+    if ops.on_tpu():
+        d0, d1 = shape
+        for t0 in tile_candidates(d0):
+            for t1 in tile_candidates(d1):
+                candidates.append({"backend": "pallas", "tile": [t0, t1]})
+
+    def build(cfg):
+        tile = tuple(cfg["tile"]) if cfg.get("tile") else None
+        if is_1d:
+            def f(d):
+                return ops.stencil_apply_batch1d(
+                    d, plan.coeffs, None, point_fn=plan.point_fn,
+                    left=plan.left, right=plan.right, bc=plan.bc,
+                    tile=tile, backend=cfg["backend"],
+                )
+        else:
+            def f(d):
+                return ops.stencil_apply(
+                    d, plan.coeffs, None, point_fn=plan.point_fn,
+                    left=plan.left, right=plan.right, top=plan.top,
+                    bottom=plan.bottom, bc=plan.bc,
+                    tile=tile, backend=cfg["backend"],
+                )
+        return jax.jit(f)
+
+    extra = {
+        "halo": list(plan.halo),
+        "fn": getattr(plan.point_fn, "__name__", "fn"),
+    }
+    best = autotune(
+        kernel, candidates, build, (data,),
+        shape=shape, dtype=data.dtype, bc=plan.bc, backend=plan.backend,
+        extra=extra, mode=mode, default=default, cache=cache,
+    )
+    tile = tuple(best["tile"]) if best.get("tile") else None
+    return dataclasses.replace(plan, tile=tile, backend=best["backend"])
 
 
 def _split_extents(n_points: int, lo: Optional[int], hi: Optional[int]):
@@ -157,6 +218,9 @@ def stencil_create_2d(
     interpret: Optional[bool] = None,
     streams: Optional[int] = None,
     max_tile_bytes: Optional[int] = None,
+    tune: str = "off",
+    shape: Optional[Tuple[int, int]] = None,
+    tune_cache=None,
 ) -> Stencil2D:
     """Create a stencil plan (the Create call).
 
@@ -196,7 +260,7 @@ def stencil_create_2d(
                 raise ValueError("xy stencil weights must be 2D (sy, sx)")
             top, bottom = _split_extents(w.shape[0], num_sten_top, num_sten_bottom)
             left, right = _split_extents(w.shape[1], num_sten_left, num_sten_right)
-        return Stencil2D(
+        plan = Stencil2D(
             direction=direction,
             bc=bc,
             left=left,
@@ -211,6 +275,9 @@ def stencil_create_2d(
             streams=streams,
             max_tile_bytes=max_tile_bytes,
         )
+        return _autotune_plan(
+            plan, shape, tune, tune_cache, kernel="stencil2d"
+        )
 
     # function-pointer mode
     left = num_sten_left or 0
@@ -223,7 +290,7 @@ def stencil_create_2d(
         raise ValueError("y stencil cannot have left/right extents")
     if coeffs is None:
         coeffs = jnp.zeros((1,), jnp.float32)
-    return Stencil2D(
+    plan = Stencil2D(
         direction=direction,
         bc=bc,
         left=left,
@@ -238,6 +305,7 @@ def stencil_create_2d(
         streams=streams,
         max_tile_bytes=max_tile_bytes,
     )
+    return _autotune_plan(plan, shape, tune, tune_cache, kernel="stencil2d")
 
 
 def stencil_compute_2d(
@@ -337,6 +405,9 @@ def stencil_create_1d_batch(
     interpret: Optional[bool] = None,
     streams: Optional[int] = None,
     max_tile_bytes: Optional[int] = None,
+    tune: str = "off",
+    shape: Optional[Tuple[int, int]] = None,
+    tune_cache=None,
 ) -> StencilBatch1D:
     """Create a batched-1D stencil plan (cuSten ``custenCreate1DBatch*``).
 
@@ -357,7 +428,7 @@ def stencil_create_1d_batch(
         left, right = _split_extents(
             w.shape[0], num_sten_left, num_sten_right
         )
-        return StencilBatch1D(
+        plan = StencilBatch1D(
             bc=bc,
             left=left,
             right=right,
@@ -369,13 +440,16 @@ def stencil_create_1d_batch(
             streams=streams,
             max_tile_bytes=max_tile_bytes,
         )
+        return _autotune_plan(
+            plan, shape, tune, tune_cache, kernel="stencil1d_batch"
+        )
 
     # function-pointer mode
     left = num_sten_left or 0
     right = num_sten_right or 0
     if coeffs is None:
         coeffs = jnp.zeros((1,), jnp.float32)
-    return StencilBatch1D(
+    plan = StencilBatch1D(
         bc=bc,
         left=left,
         right=right,
@@ -386,6 +460,9 @@ def stencil_create_1d_batch(
         interpret=interpret,
         streams=streams,
         max_tile_bytes=max_tile_bytes,
+    )
+    return _autotune_plan(
+        plan, shape, tune, tune_cache, kernel="stencil1d_batch"
     )
 
 

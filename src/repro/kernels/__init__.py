@@ -11,9 +11,12 @@ Kernels:
 - ``stencil1d_batch`` — batched-1D stencil over a (B, M) stack (cuSten's
   ``1DBatch`` family): batch tiled over the grid, M on the lanes, halos
   along M only.
-- ``penta``      — batched pentadiagonal substitution (cuPentBatch), plus
-  Create-time LU factorisation and rank-4 Woodbury cyclic closure.
+- ``penta``      — batched pentadiagonal substitution (cuPentBatch) in both
+  layouts (column: batch on lanes; row: recurrence on lanes, the
+  transpose-free x-sweep), plus Create-time LU factorisation and rank-4
+  Woodbury cyclic closure evaluated as broadcast FMAs.
 - ``weno``       — WENO5 upwind advection RHS (the 2d_xyADVWENO_p variant).
 - ``fused_ch``   — beyond-paper: the whole Cahn–Hilliard explicit RHS fused
-  into one VMEM pass.
+  into one VMEM pass, and the RHS + implicit x-sweep fused into a single
+  ``pallas_call`` (``ch_rhs_xsweep_pallas``).
 """

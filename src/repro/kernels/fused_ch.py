@@ -1,4 +1,4 @@
-"""Fused Cahn–Hilliard explicit-RHS kernel (beyond-paper optimisation).
+"""Fused Cahn–Hilliard explicit-RHS kernels (beyond-paper optimisation).
 
 The paper's solver builds the RHS of scheme eq. (2a) from *four* separate
 stencil sweeps (two cuSten calls for the linear terms, one Fun call for the
@@ -12,6 +12,13 @@ full field through HBM.  On TPU the whole expression
 fits in one VMEM pass over a halo-2 3x3 tile neighbourhood of C^n and
 C^{n-1}: a ~4x cut in HBM traffic for the memory-bound explicit half of the
 ADI step.  The oracle is :func:`repro.kernels.ref.ch_rhs_ref`.
+
+:func:`ch_rhs_xsweep_pallas` goes one step further — the ADI hot loop's
+full explicit half *plus* the implicit x-sweep in one ``pallas_call``: the
+RHS tile is assembled in VMEM and immediately consumed by the row-layout
+(lane-recurrence) pentadiagonal substitution of
+:mod:`repro.kernels.penta`, Woodbury closure included.  The RHS never
+round-trips through HBM and no transpose appears anywhere.
 """
 
 from __future__ import annotations
@@ -21,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.penta import rows_substitute_refs, rows_woodbury_correct
 
 _H = 2  # biharmonic halo
 
@@ -127,6 +136,116 @@ def ch_rhs_pallas(
         grid=(gy, gx),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((ty, tx), lambda j, i: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((ny, nx), c_n.dtype),
+        interpret=interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Fused RHS + transpose-free x-sweep: the whole eq.-(2a) explicit half and
+# the L_x solve in one pallas_call (full-width row-band tiles, gx == 1)
+# ---------------------------------------------------------------------------
+
+
+def _ch_xsweep_kernel(
+    *refs, dt, D, gamma, inv_h2, inv_h4, ty, nx,
+):
+    # refs: 3 row-band tiles of c_n (dj = -1, 0, 1), 3 of c_nm1,
+    #       sub, low, inv_mu, al, be (each (nx,)), w (nx, 4), out (ty, nx)
+    cn_tiles = [r[...] for r in refs[:3]]
+    cm_tiles = [r[...] for r in refs[3:6]]
+    sub_ref, low_ref, imu_ref, al_ref, be_ref = refs[6:11]
+    w_ref = refs[11]
+    o_ref = refs[-1]
+
+    def assemble(tm1, t0, tp1):
+        band = jnp.concatenate([tm1[ty - _H :, :], t0, tp1[:_H, :]], axis=0)
+        return jnp.concatenate(
+            [band[:, nx - _H :], band, band[:, :_H]], axis=1
+        )  # periodic x wrap inside the full-width band
+
+    cn = assemble(*cn_tiles)  # (ty+4, nx+4)
+    cm = assemble(*cm_tiles)
+    cbar = 2.0 * cn - cm
+    nl = cn * cn * cn - cn
+
+    sh_cb = _band_window(cbar, ty, nx)
+    sh_nl = _band_window(nl, ty, nx)
+    sh_cn = _band_window(cn, ty, nx)
+    sh_cm = _band_window(cm, ty, nx)
+
+    lin = -(2.0 / 3.0) * (sh_cn(0, 0) - sh_cm(0, 0))
+    hyper = -(2.0 / 3.0) * dt * gamma * D * _biharmonic(sh_cb, inv_h4)
+    nonlin = (2.0 / 3.0) * D * dt * _laplacian(sh_nl, inv_h2)
+    o_ref[...] = (lin + hyper + nonlin).astype(o_ref.dtype)
+
+    # Row-layout substitution in place (the RHS never leaves VMEM), then
+    # the Woodbury closure — both shared with kernels/penta.py so the
+    # fused kernel stays in lockstep with the standalone solve.
+    rows_substitute_refs(
+        sub_ref, low_ref, imu_ref, al_ref, be_ref, o_ref, M=nx, Tb=ty
+    )
+    o_ref[...] = rows_woodbury_correct(o_ref[...], w_ref[...]).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dt", "D", "gamma", "inv_h2", "inv_h4", "ty", "interpret",
+    ),
+)
+def ch_rhs_xsweep_pallas(
+    c_n: jnp.ndarray,
+    c_nm1: jnp.ndarray,
+    fac_x,
+    *,
+    dt: float,
+    D: float,
+    gamma: float,
+    inv_h2: float,
+    inv_h4: float,
+    ty: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """One ``pallas_call`` computing ``L_x^{-1} rhs(c_n, c_nm1)``.
+
+    ``fac_x`` is a :class:`repro.kernels.penta.CyclicPentaFactors` of
+    length ``nx``.  Tiles are full-width row bands (the lane recurrence
+    needs the whole x extent in VMEM); the grid walks the y axis.
+    """
+    ny, nx = c_n.shape
+    if ny % ty:
+        raise ValueError(f"row tile {ty} must divide ny={ny}")
+    if ty < _H:
+        raise ValueError(f"row tile {ty} must be >= halo {_H}")
+    gy = ny // ty
+    wrap = lambda k: jnp.remainder(k, gy).astype(jnp.int32)  # noqa: E731
+
+    def spec(dj):
+        return pl.BlockSpec((ty, nx), lambda j, dj=dj: (wrap(j + dj), 0))
+
+    band = fac_x.band
+    vec_spec = pl.BlockSpec((nx,), lambda j: (0,))
+    in_specs = (
+        [spec(dj) for dj in (-1, 0, 1)] * 2
+        + [vec_spec] * 5
+        + [pl.BlockSpec((nx, 4), lambda j: (0, 0))]
+    )
+    operands = (
+        [c_n] * 3
+        + [c_nm1] * 3
+        + [band.sub, band.low, band.inv_mu, band.al, band.be, fac_x.w]
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _ch_xsweep_kernel, dt=dt, D=D, gamma=gamma,
+            inv_h2=inv_h2, inv_h4=inv_h4, ty=ty, nx=nx,
+        ),
+        grid=(gy,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((ty, nx), lambda j: (j, 0)),
         out_shape=jax.ShapeDtypeStruct((ny, nx), c_n.dtype),
         interpret=interpret,
     )(*operands)

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.stencil1d_batch import stencil1d_batch_pallas
 from repro.kernels.stencil2d import stencil2d_pallas
-from repro.util import pick_tile, pick_tile_any
+from repro.util import pick_tile, pick_tile_any, pick_tile_padded
 
 
 def on_tpu() -> bool:
@@ -37,6 +37,69 @@ def _should_interpret(interpret: Optional[bool]) -> bool:
 
 def _pallas_ok(ny, nx, ty, tx, hx, hy) -> bool:
     return (ny % ty == 0) and (nx % tx == 0) and hx <= tx and hy <= ty
+
+
+def _aligned(t: int, align: int = 8) -> bool:
+    """Sublane-aligned tile (the implicit-tile quality bar — an awkward
+    extent like 127 should pad to 128, not run as one misaligned tile)."""
+    return t % align == 0
+
+
+def _halo_pad_2d(data, *, top, bottom, left, right, bc):
+    """Halo-pad a field (wrap for periodic, zeros for np) — the streamed
+    executor's padding, reused for alignment-padded kernel dispatch."""
+    from repro.launch.stream import _pad_field
+
+    return _pad_field(
+        data, top=top, bottom=bottom, left=left, right=right, bc=bc
+    )
+
+
+def _stencil2d_pallas_padded(
+    data, coeffs, out_init, *, point_fn, left, right, top, bottom, bc,
+    ty, tx, py, px, interpret,
+):
+    """Pallas dispatch for awkward extents (prime/odd ``ny``/``nx``).
+
+    Rather than degrading to one misaligned mega-tile (or a degenerate
+    tile of 1), the field is halo-padded once (wrap or zeros by ``bc``)
+    and grown with zeros to the aligned ``(py, px)`` tile multiple; the
+    kernel runs in ``np`` mode — whose full-support interior is exactly
+    the original domain — and the result is sliced back out.  The
+    alignment zeros sit strictly beyond the halo ring, so no valid
+    output ever reads them.
+    """
+    ny, nx = data.shape
+    padded = _halo_pad_2d(
+        data, top=top, bottom=bottom, left=left, right=right, bc=bc
+    )
+    sy, sx = padded.shape
+    padded = jnp.pad(padded, ((0, py - sy), (0, px - sx)))
+    out = stencil2d_pallas(
+        padded,
+        coeffs,
+        jnp.zeros_like(padded),
+        point_fn=point_fn,
+        left=left,
+        right=right,
+        top=top,
+        bottom=bottom,
+        bc="np",
+        ty=ty,
+        tx=tx,
+        interpret=interpret,
+    )
+    out = jax.lax.slice(out, (top, left), (top + ny, left + nx))
+    if bc == "np":
+        if out_init is None:
+            out_init = jnp.zeros_like(data)
+        mask = jnp.asarray(
+            _ref.interior_mask(
+                (ny, nx), left=left, right=right, top=top, bottom=bottom
+            )
+        )
+        out = jnp.where(mask, out, out_init.astype(out.dtype))
+    return out
 
 
 # Module-level jitted oracle entry points: a fresh jit(partial(...)) per call
@@ -99,15 +162,44 @@ def stencil_apply(
     hx, hy = max(left, right), max(top, bottom)
     ty, tx = tile if tile is not None else (pick_tile(ny), pick_tile(nx))
 
+    # explicit tiles keep the historical contract (divide + cover halo);
+    # implicit tiles must additionally be sublane-aligned, else the
+    # alignment-padded dispatch below takes over
+    clean = _pallas_ok(ny, nx, ty, tx, hx, hy) and (
+        tile is not None or (_aligned(ty) and _aligned(tx))
+    )
     if backend == "auto":
         backend = (
-            "pallas" if on_tpu() and _pallas_ok(ny, nx, ty, tx, hx, hy) else "jnp"
+            "pallas"
+            if on_tpu()
+            and (clean or (tile is None and hy <= ny and hx <= nx))
+            else "jnp"
         )
     if backend == "pallas":
-        if not _pallas_ok(ny, nx, ty, tx, hx, hy):
-            raise ValueError(
-                f"pallas backend needs tile|field and halo<=tile; got "
-                f"field=({ny},{nx}) tile=({ty},{tx}) halo=({hy},{hx})"
+        if not clean:
+            if tile is not None:
+                raise ValueError(
+                    f"pallas backend needs tile|field and halo<=tile; got "
+                    f"field=({ny},{nx}) tile=({ty},{tx}) halo=({hy},{hx})"
+                )
+            # awkward extent (prime/odd): pad to an aligned tile multiple
+            # instead of degrading to a mega-tile / tile of 1
+            from repro.util import next_multiple
+
+            sy, sx = ny + top + bottom, nx + left + right
+            pty, py = pick_tile_padded(sy)
+            ptx, px = pick_tile_padded(sx)
+            if pty < hy:
+                pty = next_multiple(hy, 8)
+                py = next_multiple(sy, pty)
+            if ptx < hx:
+                ptx = next_multiple(hx, 8)
+                px = next_multiple(sx, ptx)
+            return _stencil2d_pallas_padded(
+                data, coeffs, out_init,
+                point_fn=point_fn, left=left, right=right, top=top,
+                bottom=bottom, bc=bc, ty=pty, tx=ptx, py=py, px=px,
+                interpret=_should_interpret(interpret),
             )
         return stencil2d_pallas(
             data,
@@ -136,6 +228,41 @@ def _pallas_ok_1d(B, M, tb, tm, hm) -> bool:
     return (B % tb == 0) and (M % tm == 0) and hm <= tm
 
 
+def _stencil1d_pallas_padded(
+    data, coeffs, out_init, *, point_fn, left, right, bc, tb, tm, pb, pm,
+    interpret,
+):
+    """Alignment-padded batched-1D dispatch (see
+    :func:`_stencil2d_pallas_padded`): halo-pad the line axis, zero-grow
+    both axes to tile multiples, run the kernel in ``np`` mode, slice the
+    original stack back out.  Padded rows are junk rows that rows of the
+    real stack never read (rows are independent)."""
+    B, M = data.shape
+    padded = _halo_pad_2d(data, top=0, bottom=0, left=left, right=right, bc=bc)
+    sb, sm = padded.shape
+    padded = jnp.pad(padded, ((0, pb - sb), (0, pm - sm)))
+    out = stencil1d_batch_pallas(
+        padded,
+        coeffs,
+        jnp.zeros_like(padded),
+        point_fn=point_fn,
+        left=left,
+        right=right,
+        bc="np",
+        tb=tb,
+        tm=tm,
+        interpret=interpret,
+    )
+    out = jax.lax.slice(out, (0, left), (B, left + M))
+    if bc == "np":
+        if out_init is None:
+            out_init = jnp.zeros_like(data)
+        cols = jnp.arange(M)
+        mask = ((cols >= left) & (cols < M - right))[None, :]
+        out = jnp.where(mask, out, out_init.astype(out.dtype))
+    return out
+
+
 def stencil_apply_batch1d(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
@@ -161,17 +288,35 @@ def stencil_apply_batch1d(
     hm = max(left, right)
     tb, tm = tile if tile is not None else (pick_tile_any(B), pick_tile_any(M))
 
+    clean = _pallas_ok_1d(B, M, tb, tm, hm) and (
+        tile is not None or (_aligned(tb) and _aligned(tm))
+    )
     if backend == "auto":
         backend = (
             "pallas"
-            if on_tpu() and _pallas_ok_1d(B, M, tb, tm, hm)
+            if on_tpu() and (clean or (tile is None and hm <= M))
             else "jnp"
         )
     if backend == "pallas":
-        if not _pallas_ok_1d(B, M, tb, tm, hm):
-            raise ValueError(
-                f"pallas backend needs tile|stack and halo<=tile; got "
-                f"stack=({B},{M}) tile=({tb},{tm}) halo={hm}"
+        if not clean:
+            if tile is not None:
+                raise ValueError(
+                    f"pallas backend needs tile|stack and halo<=tile; got "
+                    f"stack=({B},{M}) tile=({tb},{tm}) halo={hm}"
+                )
+            from repro.util import next_multiple
+
+            sm = M + left + right
+            ptb, pb = pick_tile_padded(B)
+            ptm, pm = pick_tile_padded(sm, target=256)
+            if ptm < hm:
+                ptm = next_multiple(hm, 8)
+                pm = next_multiple(sm, ptm)
+            return _stencil1d_pallas_padded(
+                data, coeffs, out_init,
+                point_fn=point_fn, left=left, right=right, bc=bc,
+                tb=ptb, tm=ptm, pb=pb, pm=pm,
+                interpret=_should_interpret(interpret),
             )
         return stencil1d_batch_pallas(
             data,
@@ -259,6 +404,12 @@ def weno_advect(
     raise ValueError(f"unknown backend {backend!r}")
 
 
+_ch_rhs_win_jnp = jax.jit(
+    _ref.ch_rhs_win,
+    static_argnames=("dt", "D", "gamma", "inv_h2", "inv_h4"),
+)
+
+
 def ch_rhs(
     c_n, c_nm1, *, dt, D, gamma, inv_h2, inv_h4,
     backend: str = "auto", tile: Optional[tuple] = None,
@@ -277,10 +428,48 @@ def ch_rhs(
             ty=ty, tx=tx, interpret=_should_interpret(interpret),
         )
     if backend == "jnp":
-        return jax.jit(
-            functools.partial(
-                _ref.ch_rhs_ref, dt=dt, D=D, gamma=gamma,
-                inv_h2=inv_h2, inv_h4=inv_h4,
-            )
-        )(c_n, c_nm1)
+        return _ch_rhs_win_jnp(
+            c_n, c_nm1, dt=float(dt), D=float(D), gamma=float(gamma),
+            inv_h2=float(inv_h2), inv_h4=float(inv_h4),
+        )
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def ch_rhs_xsweep(
+    c_n, c_nm1, fac_x, *, dt, D, gamma, inv_h2, inv_h4,
+    backend: str = "auto", ty: Optional[int] = None,
+    interpret: Optional[bool] = None, unroll: int = 1,
+):
+    """Fused explicit RHS + transpose-free implicit x-sweep:
+    ``L_x^{-1} rhs(c_n, c_nm1)`` with ``fac_x`` the Create-time cyclic
+    factors along x.  On TPU this is one ``pallas_call``
+    (:func:`repro.kernels.fused_ch.ch_rhs_xsweep_pallas`); the jnp path
+    composes the windowed RHS with the row-layout substitution — in both
+    cases the RHS feeds the sweep in its native row layout with no
+    intermediate transpose.
+    """
+    from repro.kernels.fused_ch import ch_rhs_xsweep_pallas
+    from repro.kernels.penta import cyclic_penta_solve_factored_rows
+
+    ny, nx = c_n.shape
+    ty = ty if ty is not None else pick_tile(ny)
+    if backend == "auto":
+        backend = (
+            "pallas" if on_tpu() and ny % ty == 0 and ty >= 2 else "jnp"
+        )
+    if backend == "pallas":
+        return ch_rhs_xsweep_pallas(
+            c_n, c_nm1, fac_x,
+            dt=float(dt), D=float(D), gamma=float(gamma),
+            inv_h2=float(inv_h2), inv_h4=float(inv_h4),
+            ty=ty, interpret=_should_interpret(interpret),
+        )
+    if backend == "jnp":
+        rhs = _ch_rhs_win_jnp(
+            c_n, c_nm1, dt=float(dt), D=float(D), gamma=float(gamma),
+            inv_h2=float(inv_h2), inv_h4=float(inv_h4),
+        )
+        return cyclic_penta_solve_factored_rows(
+            fac_x, rhs, backend="jnp", unroll=unroll
+        )
     raise ValueError(f"unknown backend {backend!r}")

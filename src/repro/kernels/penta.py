@@ -18,9 +18,24 @@ cuSten/cuPentBatch split Create/Compute:
   solves and 4x4 capacitance inverse are precomputed at Create-time:
   each Compute is then one banded substitution + two tiny matmuls.
 
-Layout convention: systems run along axis 0 (length M), batch along axis 1
-(length N).  The ADI y-sweep is then transpose-free; the x-sweep transposes
-in/out, mirroring the paper's interleaving transpose.
+Two substitution layouts are provided, so a full ADI step is
+**transpose-free** (both sweeps consume Create-time factors in their
+native layout):
+
+- *column layout* (:func:`penta_solve_factored`): systems along axis 0
+  (length M), batch along axis 1 — the y-sweep of an ``(ny, nx)`` field.
+- *row layout* (:func:`penta_solve_factored_rows`): batch along axis 0,
+  recurrence along axis 1 (TPU lanes) — the x-sweep, with no
+  interleaving transpose at all.  The Pallas variant carries two
+  previous *columns* in vector registers and strides the recurrence
+  across lanes; the jnp variant walks the lanes with a ``fori_loop`` of
+  dynamic column slices.
+
+The rank-4 Woodbury correction is evaluated as four explicit outer
+products (broadcast FMAs) rather than ``dot``s: the (M, 4) x (4, N)
+contraction is far too small for a matmul unit and on BLAS-less XLA CPU
+builds a ``dot_general`` of this shape costs more than the entire banded
+substitution.
 """
 
 from __future__ import annotations
@@ -49,6 +64,8 @@ class CyclicPentaFactors(NamedTuple):
     band: PentaFactors
     z: jnp.ndarray  # (M, 4)  A^{-1} U, precomputed
     s_inv: jnp.ndarray  # (4, 4)  inv(I + V^T A^{-1} U)
+    w: jnp.ndarray  # (M, 4)  Z S^{-1}, precomputed: Compute-time correction
+    #                 is then 4 broadcast FMAs, x = y - W (V^T y)
 
 
 def penta_factor(l2, l1, d, u1, u2) -> PentaFactors:
@@ -89,8 +106,15 @@ def penta_factor(l2, l1, d, u1, u2) -> PentaFactors:
 # ---------------------------------------------------------------------------
 
 
-def _substitute_jnp(fac: PentaFactors, rhs: jnp.ndarray) -> jnp.ndarray:
-    """Forward/backward substitution on (M, N) rhs via two scans."""
+def _substitute_jnp(
+    fac: PentaFactors, rhs: jnp.ndarray, unroll: int = 1
+) -> jnp.ndarray:
+    """Forward/backward substitution on (M, N) rhs via two scans.
+
+    ``unroll`` is a tuner knob: some hosts amortise scan overhead with an
+    unrolled loop body, others (notably BLAS-less CPU builds) run the
+    rolled loop fastest.
+    """
 
     def fwd(carry, row):
         z1, z2 = carry
@@ -100,7 +124,9 @@ def _substitute_jnp(fac: PentaFactors, rhs: jnp.ndarray) -> jnp.ndarray:
 
     N = rhs.shape[1]
     z0 = jnp.zeros((N,), rhs.dtype)
-    _, z = jax.lax.scan(fwd, (z0, z0), (fac.sub, fac.low, fac.inv_mu, rhs))
+    _, z = jax.lax.scan(
+        fwd, (z0, z0), (fac.sub, fac.low, fac.inv_mu, rhs), unroll=unroll
+    )
 
     def bwd(carry, row):
         x1, x2 = carry
@@ -108,10 +134,61 @@ def _substitute_jnp(fac: PentaFactors, rhs: jnp.ndarray) -> jnp.ndarray:
         x = z_i - al_i * x1 - be_i * x2
         return (x, x1), x
 
+    # explicit flips rather than scan(reverse=True): the reverse-scan's
+    # internal index arithmetic miscompiles under the SPMD partitioner on
+    # jax 0.4.37 (s64/s32 compare in the while body at 8 host devices)
     _, xr = jax.lax.scan(
-        bwd, (z0, z0), (fac.al[::-1], fac.be[::-1], z[::-1])
+        bwd, (z0, z0), (fac.al[::-1], fac.be[::-1], z[::-1]), unroll=unroll
     )
     return xr[::-1]
+
+
+def _substitute_rows_jnp(
+    fac: PentaFactors, rhs: jnp.ndarray, unroll: int = 1
+) -> jnp.ndarray:
+    """Row-layout substitution on (B, M) rhs — recurrence along axis 1.
+
+    The transpose-free x-sweep: each row is one system, the recurrence
+    walks the columns with dynamic slices and the batch stays contiguous
+    on axis 0.  No transpose of the field appears anywhere.
+    """
+    B, M = rhs.shape
+    zero = jnp.zeros((B,), rhs.dtype)
+    # pack the per-column factor scalars so each iteration gathers once
+    fwd_fac = jnp.stack([fac.sub, fac.low, fac.inv_mu], axis=1)  # (M, 3)
+    bwd_fac = jnp.stack([fac.al, fac.be], axis=1)  # (M, 2)
+
+    def col(arr, i):
+        return jax.lax.dynamic_slice_in_dim(arr, i, 1, axis=1)[:, 0]
+
+    # the intermediate z is stored recurrence-major (M, B): the forward
+    # pass then writes contiguous rows and the backward pass reads them
+    # back contiguously — only one strided access per column remains in
+    # each loop (the rhs read / the x write), halving the strided traffic
+    def fwd(i, carry):
+        z1, z2, out = carry
+        f = jax.lax.dynamic_slice_in_dim(fwd_fac, i, 1, axis=0)[0]
+        z = (col(rhs, i) - f[0] * z2 - f[1] * z1) * f[2]
+        out = jax.lax.dynamic_update_slice_in_dim(out, z[None, :], i, axis=0)
+        return (z, z1, out)
+
+    _, _, z_t = jax.lax.fori_loop(
+        0, M, fwd, (zero, zero, jnp.zeros((M, B), rhs.dtype)), unroll=unroll
+    )
+
+    def bwd(t, carry):
+        x1, x2, out = carry
+        i = M - 1 - t
+        f = jax.lax.dynamic_slice_in_dim(bwd_fac, i, 1, axis=0)[0]
+        z = jax.lax.dynamic_slice_in_dim(z_t, i, 1, axis=0)[0]
+        x = z - f[0] * x1 - f[1] * x2
+        out = jax.lax.dynamic_update_slice_in_dim(out, x[:, None], i, axis=1)
+        return (x, x1, out)
+
+    _, _, x = jax.lax.fori_loop(
+        0, M, bwd, (zero, zero, jnp.zeros_like(rhs)), unroll=unroll
+    )
+    return x
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +242,89 @@ def _substitute_pallas(
     )(fac.sub, fac.low, fac.inv_mu, fac.al, fac.be, rhs)
 
 
+def rows_substitute_refs(
+    sub_ref, low_ref, imu_ref, al_ref, be_ref, o_ref, *, M, Tb
+):
+    """In-place row-layout substitution on Pallas refs: ``o_ref`` holds the
+    (Tb, M) right-hand side on entry and the solution on exit.  The
+    recurrence strides the lanes (axis 1), carrying two previous *columns*
+    in vector registers.  Shared by the standalone row-layout kernel and
+    the fused RHS+x-sweep kernel so the two stay in lockstep."""
+    zero = jnp.zeros((Tb, 1), o_ref.dtype)
+
+    def fwd(i, carry):
+        z1, z2 = carry
+        r = pl.load(o_ref, (slice(None), pl.ds(i, 1)))
+        e = pl.load(sub_ref, (pl.ds(i, 1),))
+        lo = pl.load(low_ref, (pl.ds(i, 1),))
+        im = pl.load(imu_ref, (pl.ds(i, 1),))
+        z = (r - e * z2 - lo * z1) * im
+        pl.store(o_ref, (slice(None), pl.ds(i, 1)), z)
+        return (z, z1)
+
+    jax.lax.fori_loop(0, M, fwd, (zero, zero))
+
+    def bwd(t, carry):
+        x1, x2 = carry
+        i = M - 1 - t
+        z = pl.load(o_ref, (slice(None), pl.ds(i, 1)))
+        al = pl.load(al_ref, (pl.ds(i, 1),))
+        be = pl.load(be_ref, (pl.ds(i, 1),))
+        x = z - al * x1 - be * x2
+        pl.store(o_ref, (slice(None), pl.ds(i, 1)), x)
+        return (x, x1)
+
+    jax.lax.fori_loop(0, M, bwd, (zero, zero))
+
+
+def rows_woodbury_correct(y: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Row-layout Woodbury closure ``x = y - W (V^T y)`` on a (B, M) band
+    solution, as four broadcast FMAs (``w`` is the Create-time (M, 4)
+    ``Z S^{-1}``).  Shared by the jnp solve and the fused Pallas kernel."""
+    M = y.shape[1]
+    return y - (
+        y[:, M - 2][:, None] * w[None, :, 0]
+        + y[:, M - 1][:, None] * w[None, :, 1]
+        + y[:, 0][:, None] * w[None, :, 2]
+        + y[:, 1][:, None] * w[None, :, 3]
+    )
+
+
+def _substitute_rows_kernel(
+    sub_ref, low_ref, imu_ref, al_ref, be_ref, r_ref, o_ref, *, M, Tb
+):
+    """Row-layout kernel: copy the RHS tile into the output ref, then run
+    the shared in-place lane recurrence."""
+    o_ref[...] = r_ref[...]
+    rows_substitute_refs(
+        sub_ref, low_ref, imu_ref, al_ref, be_ref, o_ref, M=M, Tb=Tb
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def _substitute_rows_pallas(
+    fac: PentaFactors, rhs: jnp.ndarray, *, tb: int, interpret: bool
+) -> jnp.ndarray:
+    B, M = rhs.shape
+    if B % tb:
+        raise ValueError(f"batch tile {tb} must divide B={B}")
+    vec_spec = pl.BlockSpec((M,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_substitute_rows_kernel, M=M, Tb=tb),
+        grid=(B // tb,),
+        in_specs=[vec_spec] * 5 + [pl.BlockSpec((tb, M), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tb, M), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, M), rhs.dtype),
+        interpret=interpret,
+    )(fac.sub, fac.low, fac.inv_mu, fac.al, fac.be, rhs)
+
+
+_substitute_jnp_jit = jax.jit(_substitute_jnp, static_argnames=("unroll",))
+_substitute_rows_jnp_jit = jax.jit(
+    _substitute_rows_jnp, static_argnames=("unroll",)
+)
+
+
 def penta_solve_factored(
     fac: PentaFactors,
     rhs: jnp.ndarray,
@@ -172,6 +332,7 @@ def penta_solve_factored(
     backend: str = "auto",
     tn: Optional[int] = None,
     interpret: Optional[bool] = None,
+    unroll: int = 1,
 ) -> jnp.ndarray:
     """Solve ``A x = rhs`` given Create-time factors.  rhs: (M,) or (M, N)."""
     from repro.kernels import ops  # cycle-free: ops imports names only
@@ -189,10 +350,45 @@ def penta_solve_factored(
             interpret=(not ops.on_tpu()) if interpret is None else interpret,
         )
     elif backend == "jnp":
-        out = jax.jit(_substitute_jnp)(fac, rhs)
+        out = _substitute_jnp_jit(fac, rhs, unroll=unroll)
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return out[:, 0] if squeeze else out
+
+
+def penta_solve_factored_rows(
+    fac: PentaFactors,
+    rhs: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    tb: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """Row-layout solve: ``rhs`` is (B, M) (or (M,)), each *row* one system.
+
+    The transpose-free x-sweep — same factors as
+    :func:`penta_solve_factored`, recurrence along axis 1.
+    """
+    from repro.kernels import ops
+
+    squeeze = rhs.ndim == 1
+    if squeeze:
+        rhs = rhs[None, :]
+    B, M = rhs.shape
+    tb = tb if tb is not None else pick_tile(B)
+    if backend == "auto":
+        backend = "pallas" if ops.on_tpu() and B % tb == 0 else "jnp"
+    if backend == "pallas":
+        out = _substitute_rows_pallas(
+            fac, rhs, tb=tb,
+            interpret=(not ops.on_tpu()) if interpret is None else interpret,
+        )
+    elif backend == "jnp":
+        out = _substitute_rows_jnp_jit(fac, rhs, unroll=unroll)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return out[0] if squeeze else out
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +422,7 @@ def cyclic_penta_factor(l2, l1, d, u1, u2) -> CyclicPentaFactors:
     vt_rows = jnp.stack([z[M - 2], z[M - 1], z[0], z[1]])  # V^T Z  (4, 4)
     s = jnp.eye(4, dtype=dt) + vt_rows
     s_inv = jnp.linalg.inv(s)
-    return CyclicPentaFactors(band=band, z=z, s_inv=s_inv)
+    return CyclicPentaFactors(band=band, z=z, s_inv=s_inv, w=z @ s_inv)
 
 
 def cyclic_penta_solve_factored(
@@ -236,18 +432,48 @@ def cyclic_penta_solve_factored(
     backend: str = "auto",
     tn: Optional[int] = None,
     interpret: Optional[bool] = None,
+    unroll: int = 1,
 ) -> jnp.ndarray:
-    """Woodbury: x = y - Z (I + V^T Z)^{-1} V^T y with y = A^{-1} rhs."""
+    """Woodbury: x = y - W V^T y with y = A^{-1} rhs, W = Z S^{-1}
+    (Create-time).  The correction is four broadcast FMAs — no ``dot``."""
     squeeze = rhs.ndim == 1
     if squeeze:
         rhs = rhs[:, None]
     y = penta_solve_factored(
-        fac.band, rhs, backend=backend, tn=tn, interpret=interpret
+        fac.band, rhs, backend=backend, tn=tn, interpret=interpret,
+        unroll=unroll,
     )
     M = y.shape[0]
-    vt_y = jnp.stack([y[M - 2], y[M - 1], y[0], y[1]])  # (4, N)
-    x = y - fac.z @ (fac.s_inv @ vt_y)
+    w = fac.w
+    x = y - (
+        w[:, 0:1] * y[M - 2][None, :]
+        + w[:, 1:2] * y[M - 1][None, :]
+        + w[:, 2:3] * y[0][None, :]
+        + w[:, 3:4] * y[1][None, :]
+    )
     return x[:, 0] if squeeze else x
+
+
+def cyclic_penta_solve_factored_rows(
+    fac: CyclicPentaFactors,
+    rhs: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    tb: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """Row-layout Woodbury solve on a (B, M) rhs (each row one cyclic
+    system) — the transpose-free x-sweep of a periodic ADI step."""
+    squeeze = rhs.ndim == 1
+    if squeeze:
+        rhs = rhs[None, :]
+    y = penta_solve_factored_rows(
+        fac.band, rhs, backend=backend, tb=tb, interpret=interpret,
+        unroll=unroll,
+    )
+    x = rows_woodbury_correct(y, fac.w)
+    return x[0] if squeeze else x
 
 
 def hyperdiffusion_diagonals(M: int, alpha, dtype=jnp.float64):

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 from typing import Callable, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -270,6 +271,70 @@ def ch_rhs_ref(c_n, c_nm1, *, dt, D, gamma, inv_h2, inv_h4):
     hyper = -(2.0 / 3.0) * dt * gamma * D * biharmonic_ref(cbar, inv_h4)
     nonlin = (2.0 / 3.0) * D * dt * laplacian_ref(c_n**3 - c_n, inv_h2)
     return lin + hyper + nonlin
+
+
+def _wrap_pad2(x: jnp.ndarray, h: int) -> jnp.ndarray:
+    """Periodic halo pad on both axes (halo ``h``)."""
+    x = jnp.concatenate([x[-h:], x, x[:h]], axis=0)
+    return jnp.concatenate([x[:, -h:], x, x[:, :h]], axis=1)
+
+
+def ch_rhs_win(c_n, c_nm1, *, dt, D, gamma, inv_h2, inv_h4):
+    """Production jnp path for the fused explicit RHS: same math as
+    :func:`ch_rhs_ref`, evaluated on *one* halo-padded copy of each field
+    with shifted-slice windows instead of per-term ``jnp.roll``s.  Rolls
+    are concatenations XLA cannot fuse away; a single pad plus slice
+    windows turns the whole RHS into one fused elementwise loop
+    (~3x fewer ops on CPU, and the exact structure the Pallas kernel
+    uses in VMEM).  Matches :func:`ch_rhs_ref` to rounding."""
+    ny, nx = c_n.shape
+    return ch_rhs_band(
+        _wrap_pad2(c_n, 2), _wrap_pad2(c_nm1, 2), ny, nx,
+        dt=dt, D=D, gamma=gamma, inv_h2=inv_h2, inv_h4=inv_h4,
+    )
+
+
+def ch_rhs_band(pn, pm, ny, nx, *, dt, D, gamma, inv_h2, inv_h4):
+    """The windowed RHS on *already halo-padded* ``(ny+4, nx+4)`` bands —
+    the per-slab evaluator of the streamed fused path (a chunk's slab is
+    exactly such a band).
+
+    The biharmonic is evaluated *separably*: with ``u = delta_x^2 cbar``
+    and ``t = delta_y^2 cbar`` on the inner halo-1 band,
+
+        grad^4 cbar = delta_x^2 u + delta_y^2 t + 2 delta_x^2 t,
+
+    which costs ~18 flops/point against ~32 for the expanded 13-point
+    form — the hot explicit half is flop-bound on scalar CPU backends.
+    """
+    h = 2
+    cbar = 2.0 * pn - pm
+    nl = pn * pn * pn - pn  # (C^3 - C) on the padded band
+
+    def d2x(a):  # delta_x^2, shrinks axis 1 by 2
+        n = a.shape[1]
+        return a[:, : n - 2] - 2.0 * a[:, 1 : n - 1] + a[:, 2:]
+
+    def d2y(a):  # delta_y^2, shrinks axis 0 by 2
+        n = a.shape[0]
+        return a[: n - 2, :] - 2.0 * a[1 : n - 1, :] + a[2:, :]
+
+    # inner halo-1 bands of the directional second differences of cbar
+    u = d2x(cbar)[1:-1, :]  # (ny+2, nx+2): delta_x^2 on rows 1..ny+2
+    t = d2y(cbar)[:, 1:-1]  # (ny+2, nx+2)
+    bih = d2x(u + 2.0 * t)[1:-1, :] + d2y(t[:, 1:-1])  # (ny, nx)
+
+    lap = d2x(nl)[2:-2, 1:-1] + d2y(nl)[1:-1, 2:-2]  # (ny, nx), units h^-2
+
+    def centre(a):
+        return jax.lax.slice(a, (h, h), (h + ny, h + nx))
+
+    k_lin = -(2.0 / 3.0)
+    k_bih = -(2.0 / 3.0) * dt * gamma * D * inv_h4
+    k_lap = (2.0 / 3.0) * D * dt * inv_h2
+    return (
+        k_lin * (centre(pn) - centre(pm)) + k_bih * bih + k_lap * lap
+    )
 
 
 # ---------------------------------------------------------------------------

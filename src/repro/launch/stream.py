@@ -405,6 +405,7 @@ def stream_penta_solve(
     chunk_cols: Optional[int] = None,
     backend: str = "jnp",
     interpret: Optional[bool] = None,
+    unroll: int = 1,
 ) -> jnp.ndarray:
     """Streamed batched pentadiagonal substitution on an ``(M, N)`` RHS.
 
@@ -429,7 +430,7 @@ def stream_penta_solve(
     n_chunks = N // cols
     if n_chunks == 1:
         solve = cyclic_penta_solve_factored if cyclic else penta_solve_factored
-        out = solve(fac, rhs, backend=backend, interpret=interpret)
+        out = solve(fac, rhs, backend=backend, interpret=interpret, unroll=unroll)
         return out[:, 0] if squeeze else out
 
     out = _penta_stream_exec(
@@ -441,17 +442,18 @@ def stream_penta_solve(
         cyclic=cyclic,
         backend=backend,
         interpret=interpret,
+        unroll=unroll,
     )
     return out[:, 0] if squeeze else out
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cols", "group", "cyclic", "backend", "interpret"),
+    static_argnames=("cols", "group", "cyclic", "backend", "interpret", "unroll"),
     donate_argnums=(2,),
 )
 def _penta_stream_exec(
-    fac, rhs, out_buf, *, cols, group, cyclic, backend, interpret
+    fac, rhs, out_buf, *, cols, group, cyclic, backend, interpret, unroll=1
 ):
     """Module-level jit of the column-chunk pipeline (a per-call closure
     would retrace on every Compute — this is the ADI hot path)."""
@@ -462,27 +464,129 @@ def _penta_stream_exec(
 
     solve = cyclic_penta_solve_factored if cyclic else penta_solve_factored
     M, N = rhs.shape
-    n_chunks = N // cols
-    starts = jnp.arange(n_chunks, dtype=jnp.int32) * cols
-    groups = starts.reshape(n_chunks // group, group)
+    gcols = cols * group  # columns per scan step (one group-slab)
+    n_steps = N // gcols
+    starts = jnp.arange(n_steps, dtype=jnp.int32) * gcols
 
-    def one(start):
+    # group chunks are one contiguous (M, group * cols) slab of independent
+    # systems: the batched substitution is the group's parallelism, so the
+    # whole group is a single solve (a vmap stage would re-run the
+    # M-length recurrence loop per chunk for no working-set benefit)
+    def body(out, start):
         chunk = jax.lax.dynamic_slice(
-            rhs, (jnp.zeros_like(start), start), (M, cols)
+            rhs, (jnp.zeros_like(start), start), (M, gcols)
         )
-        return solve(fac, chunk, backend=backend, interpret=interpret)
+        val = solve(
+            fac, chunk, backend=backend, interpret=interpret, unroll=unroll
+        )
+        return jax.lax.dynamic_update_slice(
+            out, val, (jnp.zeros_like(start), start)
+        ), None
 
-    def body(out, g):
-        vals = jax.vmap(one)(g)
+    out, _ = jax.lax.scan(body, out_buf, starts)
+    return out
 
-        def write(k, o):
-            return jax.lax.dynamic_update_slice(
-                o, vals[k], (jnp.zeros_like(g[k]), g[k])
-            )
 
-        return jax.lax.fori_loop(0, group, write, out), None
+def stream_penta_solve_rows(
+    fac,
+    rhs: jnp.ndarray,
+    *,
+    cyclic: bool,
+    streams: Optional[int] = None,
+    max_tile_bytes: Optional[int] = None,
+    chunk_rows: Optional[int] = None,
+    backend: str = "jnp",
+    interpret: Optional[bool] = None,
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """Streamed *row-layout* pentadiagonal solve on a ``(B, M)`` RHS.
 
-    out, _ = jax.lax.scan(body, out_buf, groups)
+    The transpose-free x-sweep counterpart of :func:`stream_penta_solve`:
+    every row is one independent system (recurrence along axis 1), so the
+    batch axis streams as plain row chunks with no halo at all.
+    """
+    from repro.kernels.penta import (
+        cyclic_penta_solve_factored_rows,
+        penta_solve_factored_rows,
+    )
+
+    squeeze = rhs.ndim == 1
+    if squeeze:
+        rhs = rhs[None, :]
+    B, M = rhs.shape
+    rows = chunk_rows or choose_chunk_rows(
+        B, M, jnp.dtype(rhs.dtype).itemsize,
+        max_tile_bytes=max_tile_bytes, streams=streams,
+    )
+    if B % rows:
+        raise ValueError(f"chunk_rows={rows} must divide B={B}")
+    n_chunks = B // rows
+    if n_chunks == 1:
+        solve = (
+            cyclic_penta_solve_factored_rows
+            if cyclic
+            else penta_solve_factored_rows
+        )
+        out = solve(fac, rhs, backend=backend, interpret=interpret, unroll=unroll)
+        return out[0] if squeeze else out
+
+    out = _penta_stream_rows_exec(
+        fac,
+        rhs,
+        jnp.zeros_like(rhs),
+        rows=rows,
+        group=_effective_streams(streams, n_chunks),
+        cyclic=cyclic,
+        backend=backend,
+        interpret=interpret,
+        unroll=unroll,
+    )
+    return out[0] if squeeze else out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "group", "cyclic", "backend", "interpret", "unroll"),
+    donate_argnums=(2,),
+)
+def _penta_stream_rows_exec(
+    fac, rhs, out_buf, *, rows, group, cyclic, backend, interpret, unroll=1
+):
+    """Row-chunk pipeline for the transpose-free x-sweep.
+
+    Unlike the column pipeline there is no vmapped group stage: ``group``
+    row chunks are one contiguous ``(group * rows, M)`` slab of
+    independent systems, so the whole group is a *single* batched solve —
+    the substitution itself is the group's parallelism (its batch axis is
+    what vmap would have added, minus the gather/scatter it would cost).
+    """
+    from repro.kernels.penta import (
+        cyclic_penta_solve_factored_rows,
+        penta_solve_factored_rows,
+    )
+
+    solve = (
+        cyclic_penta_solve_factored_rows
+        if cyclic
+        else penta_solve_factored_rows
+    )
+    B, M = rhs.shape
+    grows = rows * group  # rows per scan step (one group-slab)
+    n_steps = B // grows
+    starts = jnp.arange(n_steps, dtype=jnp.int32) * grows
+
+    def body(out, start):
+        chunk = jax.lax.dynamic_slice(
+            rhs, (start, jnp.zeros_like(start)), (grows, M)
+        )
+        val = solve(
+            fac, chunk, backend=backend, interpret=interpret, unroll=unroll
+        )
+        return jax.lax.dynamic_update_slice(
+            out, val, (start, jnp.zeros_like(start))
+        ), None
+
+    out, _ = jax.lax.scan(body, out_buf, starts)
     return out
 
 
@@ -577,6 +681,113 @@ def _ch_rhs_stream_exec(
 
     out, _ = jax.lax.scan(body, out_buf, groups)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Streamed fused RHS + transpose-free x-sweep (the ADI hot loop, chunked)
+# ---------------------------------------------------------------------------
+
+
+def stream_ch_rhs_xsweep(
+    c_n: jnp.ndarray,
+    c_nm1: jnp.ndarray,
+    fac_x,
+    *,
+    dt: float,
+    D: float,
+    gamma: float,
+    inv_h2: float,
+    inv_h4: float,
+    streams: Optional[int] = None,
+    max_tile_bytes: Optional[int] = None,
+    chunk_rows: Optional[int] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """Streamed ``L_x^{-1} rhs(c_n, c_nm1)``: each row chunk assembles its
+    explicit RHS from the halo-padded slabs and feeds it *directly* into
+    the row-layout x-sweep — the RHS never exists as a full-field
+    intermediate, and no transpose appears anywhere.  One streamed pass
+    replaces the old rhs-pass + transpose + column-solve + transpose
+    chain."""
+    ny, nx = c_n.shape
+    h = 2  # biharmonic halo
+    rows = chunk_rows or choose_chunk_rows(
+        ny, nx, jnp.dtype(c_n.dtype).itemsize,
+        top=h, bottom=h, left=h, right=h,
+        max_tile_bytes=max_tile_bytes, streams=streams,
+    )
+    if ny % rows:
+        raise ValueError(f"chunk_rows={rows} must divide ny={ny}")
+    n_chunks = ny // rows
+
+    pad = functools.partial(
+        _pad_field, top=h, bottom=h, left=h, right=h, bc="periodic"
+    )
+    return _ch_xsweep_stream_exec(
+        pad(c_n),
+        pad(c_nm1),
+        fac_x,
+        jnp.zeros_like(c_n),
+        rows=rows,
+        group=_effective_streams(streams, n_chunks),
+        dt=float(dt),
+        D=float(D),
+        gamma=float(gamma),
+        inv_h2=float(inv_h2),
+        inv_h4=float(inv_h4),
+        backend=resolve_compute(backend),
+        interpret=interpret,
+        unroll=unroll,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rows", "group", "dt", "D", "gamma", "inv_h2", "inv_h4",
+        "backend", "interpret", "unroll",
+    ),
+    donate_argnums=(3,),
+)
+def _ch_xsweep_stream_exec(
+    p_n, p_nm1, fac_x, out_buf, *, rows, group, dt, D, gamma, inv_h2,
+    inv_h4, backend="jnp", interpret=None, unroll=1,
+):
+    """Chunk pipeline: slab -> windowed RHS into the donated buffer, then
+    one in-place row-layout solve.
+
+    Only the RHS assembly needs row-chunk streaming (its halo-2 slabs are
+    the bounded working set); the x-sweep substitution that consumes the
+    buffer is *inherently* streaming along the recurrence axis — each
+    iteration touches one rhs column plus two carry columns — so chunking
+    its batch would only multiply the sequential-loop overhead by the
+    chunk count for zero working-set benefit."""
+    from repro.kernels.penta import cyclic_penta_solve_factored_rows
+    from repro.kernels.ref import ch_rhs_band
+
+    h = 2
+    ny, nx = out_buf.shape
+    grows = rows * group  # rows per scan step (one group-slab)
+    n_steps = ny // grows
+    starts = jnp.arange(n_steps, dtype=jnp.int32) * grows
+
+    def body(out, start):
+        size = (grows + 2 * h, nx + 2 * h)
+        zero = jnp.zeros_like(start)
+        s_n = jax.lax.dynamic_slice(p_n, (start, zero), size)
+        s_m = jax.lax.dynamic_slice(p_nm1, (start, zero), size)
+        rhs = ch_rhs_band(
+            s_n, s_m, grows, nx, dt=dt, D=D, gamma=gamma,
+            inv_h2=inv_h2, inv_h4=inv_h4,
+        )
+        return jax.lax.dynamic_update_slice(out, rhs, (start, zero)), None
+
+    out, _ = jax.lax.scan(body, out_buf, starts)
+    return cyclic_penta_solve_factored_rows(
+        fac_x, out, backend=backend, interpret=interpret, unroll=unroll
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,31 @@
+"""Create-time autotuning: measured kernel configuration + persistent cache.
+
+See :mod:`repro.tune.autotuner` for the measurement loop and
+:mod:`repro.tune.cache` for the on-disk cache (``~/.cache/repro-tune`` or
+``$REPRO_TUNE_CACHE``).
+"""
+
+from repro.tune.autotuner import (
+    MODES,
+    TuneStats,
+    autotune,
+    check_mode,
+    measure,
+    reset_stats,
+    stats,
+)
+from repro.tune.cache import ENV_VAR, TuneCache, cache_dir, tune_key
+
+__all__ = [
+    "MODES",
+    "TuneStats",
+    "autotune",
+    "check_mode",
+    "measure",
+    "reset_stats",
+    "stats",
+    "ENV_VAR",
+    "TuneCache",
+    "cache_dir",
+    "tune_key",
+]

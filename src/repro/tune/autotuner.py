@@ -1,0 +1,143 @@
+"""Create-time autotuner: measure candidate configurations, keep the winner.
+
+The plan layer (``stencil_create_2d``, ``stencil_create_1d_batch``,
+``make_adi_operator``, ``CHConfig``) passes a ``tune`` knob through to
+:func:`autotune`:
+
+- ``'off'``     — no measurement; static heuristics (``pick_tile`` & co)
+  choose the configuration, exactly the pre-tuner behaviour.
+- ``'cached'``  — look the problem up in the persistent cache
+  (:mod:`repro.tune.cache`); measure only on a miss and store the winner,
+  so repeated plan creation is free.
+- ``'force'``   — always re-measure (and refresh the cache entry).
+
+Candidates are plain dicts of knob values; the caller supplies a
+``build(config) -> callable`` factory producing a ready-to-time closure
+over representative arguments (or ``None`` / raising to declare the
+config infeasible).  Timing is a short median-of-repeats wall-clock
+measurement with ``block_until_ready`` — crude, but these kernels differ
+by integer factors, which is all Create-time selection needs.
+
+Module-level :data:`stats` counts measurement runs and cache hits/misses
+so tests (and curious users) can verify that a cached Create performs no
+measurement work at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+
+from repro.tune.cache import TuneCache, tune_key
+
+MODES = ("off", "cached", "force")
+
+
+@dataclasses.dataclass
+class TuneStats:
+    """Instrumentation counters (reset with :func:`reset_stats`)."""
+
+    measure_runs: int = 0  # individual candidate timings executed
+    cache_hits: int = 0
+    cache_misses: int = 0
+    tuned: int = 0  # autotune() calls that produced a winner
+
+
+stats = TuneStats()
+
+
+def reset_stats() -> TuneStats:
+    """Zero the counters in place (the module-level object stays valid)."""
+    stats.measure_runs = 0
+    stats.cache_hits = 0
+    stats.cache_misses = 0
+    stats.tuned = 0
+    return stats
+
+
+def check_mode(mode: str) -> str:
+    if mode not in MODES:
+        raise ValueError(f"tune must be one of {MODES}, got {mode!r}")
+    return mode
+
+
+def measure(fn: Callable, *args, warmup: int = 1, repeat: int = 3) -> float:
+    """Median microseconds per call (counts toward ``stats.measure_runs``)."""
+    stats.measure_runs += 1
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def autotune(
+    kernel: str,
+    candidates: Sequence[dict],
+    build: Callable[[dict], Optional[Callable]],
+    args: Sequence,
+    *,
+    shape,
+    dtype,
+    bc: Optional[str] = None,
+    backend: Optional[str] = None,
+    extra=None,
+    mode: str = "cached",
+    default: Optional[dict] = None,
+    cache: Optional[TuneCache] = None,
+) -> dict:
+    """Pick the fastest candidate configuration for one kernel problem.
+
+    Returns the winning config dict.  ``mode='off'`` (or an empty/single
+    candidate list) short-circuits to ``default`` (or the first
+    candidate) without any measurement.  Infeasible candidates —
+    ``build`` returning ``None`` or the timed call raising — are skipped;
+    if every candidate is infeasible the default is returned.
+    """
+    check_mode(mode)
+    candidates = list(candidates)
+    fallback = default if default is not None else (candidates[0] if candidates else {})
+    if mode == "off" or len(candidates) <= 1:
+        return dict(fallback)
+
+    key = tune_key(
+        kernel, shape=shape, dtype=dtype, bc=bc, backend=backend, extra=extra
+    )
+    cache = cache if cache is not None else TuneCache()
+
+    if mode == "cached":
+        best = cache.get(key)
+        if isinstance(best, dict) and best in candidates:
+            stats.cache_hits += 1
+            return dict(best)
+        stats.cache_misses += 1
+
+    best, best_us = None, float("inf")
+    for config in candidates:
+        try:
+            fn = build(dict(config))
+        except Exception:  # noqa: BLE001 — infeasible candidate
+            continue
+        if fn is None:
+            continue
+        try:
+            us = measure(fn, *args)
+        except Exception:  # noqa: BLE001 — candidate fails at run time
+            continue
+        if us < best_us:
+            best, best_us = dict(config), us
+    if best is None:
+        return dict(fallback)
+    stats.tuned += 1
+    cache.put(key, best, us=best_us)
+    return best

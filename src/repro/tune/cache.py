@@ -1,0 +1,107 @@
+"""Persistent on-disk cache for Create-time autotuning results.
+
+cuSten's contract is that every expensive decision happens once at Create
+time.  The autotuner keeps that promise across *processes*: measured
+winners are stored as JSON under ``~/.cache/repro-tune/`` (override with
+``REPRO_TUNE_CACHE``), keyed by everything that could change the answer —
+kernel name, shape, dtype, boundary condition, backend request, and the
+jax version — so a second Create of an identical plan never re-measures.
+
+Cache entries are one file per key (atomic ``os.replace`` writes, so
+concurrent Creates can race harmlessly).  A corrupted, truncated, or
+foreign file is treated as a miss, never an error: the tuner just
+re-measures and rewrites it.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ENV_VAR = "REPRO_TUNE_CACHE"
+SCHEMA_VERSION = 1
+
+
+def cache_dir() -> Path:
+    """Cache root: ``$REPRO_TUNE_CACHE`` or ``~/.cache/repro-tune``."""
+    root = os.environ.get(ENV_VAR)
+    if root:
+        return Path(root)
+    return Path.home() / ".cache" / "repro-tune"
+
+
+def tune_key(
+    kernel: str,
+    *,
+    shape,
+    dtype,
+    bc: Optional[str] = None,
+    backend: Optional[str] = None,
+    extra=None,
+) -> str:
+    """Canonical cache key for one tuning problem.
+
+    Deterministic across processes and hosts running the same software:
+    a sorted-key JSON document of (schema, kernel, shape, dtype, bc,
+    backend, jax version, extra).  ``extra`` carries kernel-specific
+    discriminators (halo extents, cyclic flag, ...) and must be
+    JSON-serialisable.
+    """
+    doc = {
+        "schema": SCHEMA_VERSION,
+        "kernel": str(kernel),
+        "shape": [int(s) for s in shape],
+        "dtype": str(jnp.dtype(dtype)),
+        "bc": bc,
+        "backend": backend,
+        "jax": jax.__version__,
+        "extra": extra,
+    }
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+
+
+class TuneCache:
+    """One JSON file per key under ``root`` (see :func:`cache_dir`)."""
+
+    def __init__(self, root=None):
+        self.root = Path(root) if root is not None else cache_dir()
+
+    def path_for(self, key: str) -> Path:
+        digest = hashlib.sha256(key.encode("utf-8")).hexdigest()[:32]
+        return self.root / f"{digest}.json"
+
+    def get(self, key: str):
+        """The stored winner config for ``key``, or None on miss.
+
+        Unreadable / corrupted / mismatched files are misses, not errors.
+        """
+        try:
+            with open(self.path_for(key), "r", encoding="utf-8") as f:
+                payload = json.load(f)
+        except (OSError, ValueError, UnicodeDecodeError):
+            return None
+        if not isinstance(payload, dict) or payload.get("key") != key:
+            return None  # truncated rewrite or (vanishingly rare) collision
+        return payload.get("best")
+
+    def put(self, key: str, best, *, us: Optional[float] = None) -> None:
+        """Store ``best`` for ``key`` atomically (temp file + rename)."""
+        self.root.mkdir(parents=True, exist_ok=True)
+        payload = {"key": key, "best": best, "us": us}
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, self.path_for(key))
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass

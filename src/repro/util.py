@@ -49,18 +49,63 @@ def pick_tile_any(n: int, target: int = 256) -> int:
     return best
 
 
-def tolerance_for(dtype) -> dict:
-    """Sensible allclose tolerances per dtype for kernel<->oracle checks."""
+def next_multiple(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is ``>= n``."""
+    return ceil_div(n, m) * m
+
+
+def pick_tile_padded(n: int, target: int = 128, align: int = 8):
+    """Tile choice with padding for awkward extents: ``(tile, n_padded)``.
+
+    :func:`pick_tile_any` degrades on prime/odd extents — a 127-wide field
+    gets a single misaligned 127 mega-tile, a 509-wide one a degenerate
+    tile of 1.  Instead of accepting that, pick a hardware-aligned tile
+    and report the padded extent the kernel wrapper should grow the field
+    to (``n_padded == n`` means no padding needed).  Among the aligned
+    candidate tiles the one wasting the least padding wins, largest tile
+    on ties.
+    """
+    t = pick_tile_any(n, target)
+    if t % align == 0:
+        return t, n  # cleanly tiled and aligned as-is
+    best_tile, best_pad = align, next_multiple(n, align)
+    cand = align
+    while cand * 2 <= target:
+        cand *= 2
+        padded = next_multiple(n, cand)
+        if padded <= best_pad:  # ties -> larger tile
+            best_tile, best_pad = cand, padded
+    return best_tile, best_pad
+
+
+def tile_candidates(n: int, cap: int = 256, limit: int = 3):
+    """A few aligned divisor tiles of ``n`` for the autotuner's candidate
+    space, largest first (shared by the plan and ADI tuners)."""
+    cands = [t for t in (256, 128, 64, 32, 16, 8) if t <= cap and n % t == 0]
+    return cands[:limit]
+
+
+def tolerance_for(dtype, scale: float = 1.0) -> dict:
+    """Sensible allclose tolerances per dtype for kernel<->oracle checks.
+
+    ``scale`` loosens both tolerances by a factor for paths with a longer
+    rounding chain (interpret-mode substitution recurrences, chunked
+    pipelines) while keeping the per-dtype baseline in one place.
+    """
     dtype = jnp.dtype(dtype)
     if dtype == jnp.float64:
-        return dict(rtol=1e-12, atol=1e-12)
-    if dtype == jnp.float32:
-        return dict(rtol=1e-5, atol=1e-5)
-    if dtype == jnp.bfloat16:
-        return dict(rtol=2e-2, atol=2e-2)
-    if dtype == jnp.float16:
-        return dict(rtol=2e-3, atol=2e-3)
-    return dict(rtol=1e-5, atol=1e-5)
+        tol = dict(rtol=1e-12, atol=1e-12)
+    elif dtype == jnp.float32:
+        tol = dict(rtol=1e-5, atol=1e-5)
+    elif dtype == jnp.bfloat16:
+        tol = dict(rtol=2e-2, atol=2e-2)
+    elif dtype == jnp.float16:
+        tol = dict(rtol=2e-3, atol=2e-3)
+    else:
+        tol = dict(rtol=1e-5, atol=1e-5)
+    if scale != 1.0:
+        tol = {k: v * scale for k, v in tol.items()}
+    return tol
 
 
 def human_bytes(n: float) -> str:

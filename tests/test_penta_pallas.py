@@ -21,8 +21,12 @@ from repro.kernels.penta import (
 )
 from repro.kernels.ops import penta_solve
 from repro.launch.stream import stream_penta_solve
+from repro.util import tolerance_for
 
-TOL = dict(rtol=1e-11, atol=1e-11)
+# shared helpers: base fp64 tolerance, scaled for the longer rounding
+# chains of interpret-mode recurrences / random (non-SPD) bands
+TOL = tolerance_for(jnp.float64, scale=10)
+TOL_RAND = tolerance_for(jnp.float64, scale=1000)
 
 
 def _rand(rng, shape):
@@ -41,7 +45,7 @@ class TestCyclicPallasInterpret:
             fac, rhs, backend="pallas", interpret=True
         )
         x_ref = R.penta_solve_ref(l2, l1, d, u1, u2, rhs, cyclic=True)
-        np.testing.assert_allclose(x, x_ref, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(x, x_ref, **TOL_RAND)
 
     def test_cyclic_vector_rhs(self):
         m = 64
@@ -54,7 +58,7 @@ class TestCyclicPallasInterpret:
         )
         assert x.shape == (m,)
         A = R.penta_dense_cyclic(*diags)
-        np.testing.assert_allclose(A @ x, b, atol=1e-10)
+        np.testing.assert_allclose(A @ x, b, **tolerance_for(jnp.float64, scale=100))
 
     def test_hyperdiffusion_roundtrip_pallas(self):
         # the exact ADI operator: A x == b after a pallas-interpret solve
@@ -67,7 +71,7 @@ class TestCyclicPallasInterpret:
         out = cyclic_penta_solve_factored(
             fac, b, backend="pallas", interpret=True
         )
-        np.testing.assert_allclose(out, x, atol=1e-10)
+        np.testing.assert_allclose(out, x, **tolerance_for(jnp.float64, scale=100))
 
     def test_one_shot_wrapper_pallas(self):
         m = 32
@@ -80,7 +84,7 @@ class TestCyclicPallasInterpret:
             backend="pallas", interpret=True,
         )
         ref = R.penta_solve_ref(l2, l1, d, u1, u2, rhs, cyclic=True)
-        np.testing.assert_allclose(out, ref, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(out, ref, **TOL_RAND)
 
     def test_non_divisible_batch_tile_errors(self):
         m = 16

@@ -10,6 +10,7 @@ import pytest
 from repro.core.stencil import stencil_create_1d_batch, stencil_create_2d
 from repro.kernels import ops
 from repro.kernels.ref import stencil1d_batch_ref, stencil2d_ref
+from repro.util import tolerance_for
 from repro.launch.stream import (
     _effective_streams,
     choose_chunk_rows,
@@ -23,7 +24,7 @@ from repro.launch.stream import (
     stream_stencil_apply_dist,
 )
 
-TOL = dict(rtol=1e-12, atol=1e-12)
+TOL = tolerance_for(jnp.float64)  # shared fp64 equivalence tolerance
 
 
 def _rand(rng, shape, dtype=jnp.float64):

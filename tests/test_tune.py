@@ -1,0 +1,222 @@
+"""Create-time autotuner: cache hit/miss behaviour, key stability across
+processes, force re-measurement, bit-identical tuned plans at fp64, and
+corrupted-cache resilience."""
+
+import json
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tune as T
+from repro.core.adi import make_adi_operator
+from repro.core.cahn_hilliard import CahnHilliardADI, CHConfig, deep_quench_ic
+from repro.core.stencil import stencil_create_1d_batch, stencil_create_2d
+
+
+@pytest.fixture()
+def cache(tmp_path, monkeypatch):
+    """A fresh, empty cache dir wired in through the env var."""
+    root = tmp_path / "tune-cache"
+    monkeypatch.setenv(T.ENV_VAR, str(root))
+    T.reset_stats()
+    return T.TuneCache(root)
+
+
+def _toy_candidates():
+    return [{"w": 1}, {"w": 2}]
+
+
+def _toy_build(cfg):
+    w = cfg["w"]
+
+    def f(x):
+        return x * w
+
+    return jax.jit(f)
+
+
+ARGS = (jnp.ones((8,)),)
+KEY_KW = dict(shape=(8,), dtype=jnp.float32, bc="periodic", backend="auto")
+
+
+class TestCacheHitMiss:
+    def test_miss_measures_then_hit_does_not(self, cache):
+        best = T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached", **KEY_KW
+        )
+        assert best in _toy_candidates()
+        assert T.stats.cache_misses == 1
+        assert T.stats.measure_runs >= 2  # both candidates timed
+
+        runs_before = T.stats.measure_runs
+        again = T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached", **KEY_KW
+        )
+        assert again == best
+        assert T.stats.cache_hits == 1
+        assert T.stats.measure_runs == runs_before  # no re-measurement
+
+    def test_force_remeasures(self, cache):
+        T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached", **KEY_KW
+        )
+        runs_before = T.stats.measure_runs
+        T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="force", **KEY_KW
+        )
+        assert T.stats.measure_runs > runs_before
+
+    def test_off_never_measures(self, cache):
+        best = T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="off", **KEY_KW
+        )
+        assert best == _toy_candidates()[0]
+        assert T.stats.measure_runs == 0
+
+    def test_single_candidate_short_circuits(self, cache):
+        best = T.autotune(
+            "toy", [{"w": 7}], _toy_build, ARGS, mode="cached", **KEY_KW
+        )
+        assert best == {"w": 7}
+        assert T.stats.measure_runs == 0
+
+    def test_stale_cache_entry_not_in_candidates_is_miss(self, cache):
+        key = T.tune_key("toy", extra=None, **KEY_KW)
+        cache.put(key, {"w": 999})  # config no longer offered
+        best = T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached", **KEY_KW
+        )
+        assert best in _toy_candidates()
+        assert T.stats.cache_misses == 1
+
+
+class TestSecondCreateIsFree:
+    def test_adi_create_cached_performs_no_measurement(self, cache):
+        # the acceptance case: second creation of an identical plan with
+        # tune='cached' performs no measurement runs at all
+        make_adi_operator(32, 32, 0.3, cyclic=True, tune="cached")
+        assert T.stats.measure_runs > 0
+        runs_before = T.stats.measure_runs
+        op2 = make_adi_operator(32, 32, 0.3, cyclic=True, tune="cached")
+        assert T.stats.measure_runs == runs_before
+        assert T.stats.cache_hits >= 2  # both sweeps hit
+        assert op2.x_cfg is not None and op2.y_cfg is not None
+
+    def test_ch_solver_second_create_is_free(self, cache):
+        cfg = CHConfig(nx=32, ny=32, dt=1e-3, backend="jnp", tune="cached")
+        CahnHilliardADI(cfg)
+        runs_before = T.stats.measure_runs
+        CahnHilliardADI(cfg)
+        assert T.stats.measure_runs == runs_before
+
+
+class TestKeyStability:
+    def test_key_is_deterministic_across_processes(self, cache):
+        kw = dict(
+            shape=(64, 32), dtype=jnp.float64, bc="periodic", backend="auto",
+            extra={"cyclic": True},
+        )
+        key_here = T.tune_key("adi_solve_x", **kw)
+        code = (
+            "import jax.numpy as jnp; from repro.tune import tune_key; "
+            "print(tune_key('adi_solve_x', shape=(64, 32), "
+            "dtype=jnp.float64, bc='periodic', backend='auto', "
+            "extra={'cyclic': True}), end='')"
+        )
+        key_there = subprocess.run(
+            [sys.executable, "-c", code],
+            capture_output=True, text=True, check=True,
+        ).stdout
+        assert key_here == key_there
+
+    def test_key_discriminates(self):
+        base = T.tune_key("k", shape=(8,), dtype=jnp.float32)
+        assert base != T.tune_key("k2", shape=(8,), dtype=jnp.float32)
+        assert base != T.tune_key("k", shape=(16,), dtype=jnp.float32)
+        assert base != T.tune_key("k", shape=(8,), dtype=jnp.float64)
+        assert base != T.tune_key("k", shape=(8,), dtype=jnp.float32, bc="np")
+
+
+class TestBitMatch:
+    def test_tuned_plans_bit_match_untuned_fp64(self, cache):
+        # tuning must be result-invariant: at fp64 a tuned plan's Compute
+        # is bit-identical to the untuned plan's
+        rng = np.random.default_rng(0)
+        data = jnp.asarray(rng.standard_normal((32, 32)))
+        w = jnp.asarray(rng.standard_normal((5, 5)))
+        p0 = stencil_create_2d("xy", "periodic", weights=w, backend="jnp")
+        p1 = stencil_create_2d(
+            "xy", "periodic", weights=w, backend="jnp",
+            tune="cached", shape=(32, 32),
+        )
+        np.testing.assert_array_equal(p0.apply(data), p1.apply(data))
+
+        w1 = jnp.asarray(rng.standard_normal((5,)))
+        b0 = stencil_create_1d_batch("periodic", weights=w1, backend="jnp")
+        b1 = stencil_create_1d_batch(
+            "periodic", weights=w1, backend="jnp",
+            tune="cached", shape=(32, 32),
+        )
+        np.testing.assert_array_equal(b0.apply(data), b1.apply(data))
+
+    def test_tuned_ch_step_matches_untuned_fp64(self, cache):
+        c0 = deep_quench_ic(32, 32, seed=1)
+        base = CHConfig(nx=32, ny=32, dt=1e-3, backend="jnp")
+        s0 = CahnHilliardADI(base)
+        s1 = CahnHilliardADI(
+            CHConfig(nx=32, ny=32, dt=1e-3, backend="jnp", tune="cached")
+        )
+        c1 = s0.initial_step(c0)
+        a0, _ = s0.step(c1, c0)
+        a1, _ = s1.step(c1, c0)
+        # off-TPU the candidate space is backend-preserving (jnp), where
+        # the unroll knob does not change the arithmetic: bitwise equal
+        np.testing.assert_array_equal(a0, a1)
+
+    def test_tune_needs_shape(self):
+        with pytest.raises(ValueError):
+            stencil_create_2d(
+                "xy", "periodic", weights=jnp.ones((3, 3)), tune="cached"
+            )
+
+    def test_bad_mode_rejected(self):
+        with pytest.raises(ValueError):
+            make_adi_operator(16, 16, 0.1, tune="always")
+        with pytest.raises(ValueError):
+            CHConfig(nx=16, ny=16, tune="sometimes").validate()
+
+
+class TestCorruptedCache:
+    def test_corrupted_file_is_ignored_not_fatal(self, cache):
+        key = T.tune_key("toy", extra=None, **KEY_KW)
+        T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached", **KEY_KW
+        )
+        path = cache.path_for(key)
+        assert path.exists()
+        path.write_bytes(b"{ not json at all \x00\xff")
+        T.reset_stats()
+        again = T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached", **KEY_KW
+        )
+        assert again in _toy_candidates()
+        assert T.stats.cache_misses == 1  # treated as a miss, re-measured
+        # and the rewrite healed the file (winner may legitimately differ
+        # between measurements of two near-identical toy candidates)
+        healed = json.loads(path.read_text())
+        assert healed["key"] == key and healed["best"] in _toy_candidates()
+
+    def test_foreign_key_file_is_miss(self, cache):
+        key = T.tune_key("toy", extra=None, **KEY_KW)
+        path = cache.path_for(key)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps({"key": "something-else", "best": {"w": 5}}))
+        assert cache.get(key) is None
+
+    def test_missing_dir_is_miss(self, tmp_path):
+        c = T.TuneCache(tmp_path / "never-created")
+        assert c.get("whatever") is None
