@@ -187,6 +187,38 @@ def bench_stream(smoke: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# paper §VI.A — 3D stencil apply + 3D ADI step (the PR-4 subsystem)
+# ---------------------------------------------------------------------------
+
+
+def bench_stencil3d(smoke: bool = False):
+    from repro.core.adi import make_adi_operator_3d
+    from repro.core.stencil import laplacian3d_weights, stencil_create_3d
+
+    rows = []
+    rng = np.random.default_rng(0)
+    nz, ny, nx = (16, 32, 32) if smoke else (64, 128, 128)
+    data = jnp.asarray(rng.standard_normal((nz, ny, nx)))
+    npts = nz * ny * nx
+
+    # 7-point Laplacian through the plan API (periodic + np)
+    w = jnp.asarray(laplacian3d_weights())
+    for bc in ("periodic", "np"):
+        plan = stencil_create_3d("xyz", bc, weights=w, backend="jnp")
+        us = time_call(jax.jit(plan.apply), data)
+        rows.append(
+            (f"stencil3d_lap_{bc}_{nz}x{ny}x{nx}", us, f"{npts/us:.1f}Mpt/s")
+        )
+
+    # full 3D ADI step: x, y, z implicit sweeps back to back
+    op = make_adi_operator_3d(nz, ny, nx, 0.2, cyclic=True, backend="jnp")
+    step = jax.jit(lambda c: op.solve_z(op.solve_y(op.solve_x(c))))
+    us = time_call(step, data)
+    rows.append((f"adi3d_step_{nz}x{ny}x{nx}", us, f"{npts/us:.1f}Mpt/s"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # paper §IV.C — WENO advection step
 # ---------------------------------------------------------------------------
 
@@ -328,6 +360,7 @@ BENCHMARKS = [
     ("stencil_sweep", bench_stencil_sweep, False, ("stencil_",)),
     ("batch1d", bench_batch1d, False, ("batch1d_",)),
     ("penta_batch", bench_penta_batch, False, ("penta_",)),
+    ("stencil3d", bench_stencil3d, False, ("stencil3d_", "adi3d_")),
     ("stream", bench_stream, False, ("stream_",)),
     ("weno_step", bench_weno_step, False, ("weno_",)),
     ("cahn_hilliard_step", bench_cahn_hilliard_step, False, ("ch_step_",)),
@@ -354,6 +387,50 @@ def parse_guards(specs):
         prefix, _, ratio = spec.partition(":")
         guards.append((prefix, float(ratio) if ratio else 1.0))
     return guards
+
+
+def parse_ratio_guards(specs):
+    """``NUM:DEN:MAX_RATIO`` strings -> list of (num_row, den_row, max).
+
+    A *within-run* guard: both rows are measured in this invocation on
+    this machine, so the assertion (``us[NUM]/us[DEN] <= MAX``) is a
+    statement about the code, not the host — a slow CI runner scales both
+    sides equally and cannot flap it (ROADMAP "CI perf-guard
+    portability").
+    """
+    guards = []
+    for spec in specs or []:
+        parts = spec.split(":")
+        if len(parts) != 3:
+            raise ValueError(
+                f"--ratio-guard wants NUM_ROW:DEN_ROW:MAX_RATIO, got {spec!r}"
+            )
+        guards.append((parts[0], parts[1], float(parts[2])))
+    return guards
+
+
+def check_ratio_guards(guards, collected):
+    """Within-run ratio assertions over the collected rows (fail closed:
+    a missing or errored row fails the guard rather than skipping it)."""
+    us = {
+        r["name"]: r["us_per_call"] for r in collected if "us_per_call" in r
+    }
+    failures = []
+    for num, den, max_ratio in guards:
+        missing = [name for name in (num, den) if name not in us]
+        if missing:
+            failures.append(
+                f"{num}/{den}: row(s) {missing} not measured "
+                f"(benchmark errored or case renamed)"
+            )
+            continue
+        ratio = us[num] / us[den]
+        if ratio > max_ratio:
+            failures.append(
+                f"{num}/{den}: within-run ratio {ratio:.3f} > {max_ratio} "
+                f"({us[num]:.1f}us vs {us[den]:.1f}us)"
+            )
+    return failures
 
 
 def main(argv=None) -> int:
@@ -387,10 +464,33 @@ def main(argv=None) -> int:
         "name starts with PREFIX has speedup < MIN_SPEEDUP (e.g. "
         "'ch_step_fused:0.75' fails a >25%% regression); repeatable",
     )
+    ap.add_argument(
+        "--ratio-guard",
+        action="append",
+        default=None,
+        metavar="NUM_ROW:DEN_ROW:MAX_RATIO",
+        help="host-portable perf guard: exit non-zero if "
+        "us[NUM_ROW]/us[DEN_ROW] measured *within this run* exceeds "
+        "MAX_RATIO (e.g. 'ch_step_fused_64:ch_step_stencil_64:0.85' "
+        "asserts the fused step stays >=1.18x faster than the stencil "
+        "step on whatever machine runs this); repeatable",
+    )
+    ap.add_argument(
+        "--retune",
+        action="store_true",
+        help="force re-measurement of every tune='cached' Create this run "
+        "(sets REPRO_TUNE_FORCE; the warm-cache escape hatch)",
+    )
     args = ap.parse_args(argv)
+
+    if args.retune:
+        from repro.tune import enable_force
+
+        enable_force()
 
     baseline = load_baseline(args.compare) if args.compare else None
     guards = parse_guards(args.guard)
+    ratio_guards = parse_ratio_guards(args.ratio_guard)
     if guards and baseline is None:
         ap.error("--guard requires --compare (a guard without a baseline "
                  "would be silently ignored)")
@@ -468,6 +568,7 @@ def main(argv=None) -> int:
                     f"{prefix}: no compared row matched this guard "
                     f"(benchmark errored or baseline lacks the case)"
                 )
+    failures.extend(check_ratio_guards(ratio_guards, collected))
     for msg in failures:
         print(f"PERF GUARD FAIL: {msg}", file=sys.stderr)
     return 1 if failures else 0

@@ -37,8 +37,20 @@ def main():
         help="Create-time autotuning (cached results under "
         "~/.cache/repro-tune or $REPRO_TUNE_CACHE)",
     )
+    ap.add_argument(
+        "--retune", action="store_true",
+        help="force re-measurement even on a warm tune cache — the "
+        "escape hatch for caches shipped from another host "
+        "(sets REPRO_TUNE_FORCE)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.retune:
+        from repro.tune import enable_force
+
+        enable_force()
+        if args.tune == "off":
+            args.tune = "cached"
 
     cfg = CHConfig(
         nx=args.n, ny=args.n, dt=args.dt, D=0.6, gamma=0.01,

@@ -27,7 +27,9 @@ from repro import _compat
 _compat.install()  # backport newer-jax API points onto the pinned jax
 
 from repro.core.stencil import (  # noqa: F401,E402
+    PlanCore,
     Stencil2D,
+    Stencil3D,
     StencilBatch1D,
     stencil_create_2d,
     stencil_compute_2d,
@@ -35,5 +37,8 @@ from repro.core.stencil import (  # noqa: F401,E402
     stencil_create_1d_batch,
     stencil_compute_1d_batch,
     stencil_destroy_1d_batch,
+    stencil_create_3d,
+    stencil_compute_3d,
+    stencil_destroy_3d,
     DoubleBuffer,
 )

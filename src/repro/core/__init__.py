@@ -1,9 +1,12 @@
-"""The paper's primary contribution: the plan-based 2D + batched-1D stencil
-engine, its distributed domain decomposition, and the ADI / Cahn–Hilliard /
-WENO solver stack built on top of it."""
+"""The paper's primary contribution: the plan-based 2D + batched-1D + 3D
+stencil engine (one dimension-agnostic plan core, three geometry wrappers),
+its distributed domain decomposition, and the ADI / Cahn–Hilliard / WENO
+solver stack built on top of it."""
 
 from repro.core.stencil import (  # noqa: F401
+    PlanCore,
     Stencil2D,
+    Stencil3D,
     StencilBatch1D,
     stencil_create_2d,
     stencil_compute_2d,
@@ -11,6 +14,10 @@ from repro.core.stencil import (  # noqa: F401
     stencil_create_1d_batch,
     stencil_compute_1d_batch,
     stencil_destroy_1d_batch,
+    stencil_create_3d,
+    stencil_compute_3d,
+    stencil_destroy_3d,
     DoubleBuffer,
     central_difference_weights,
+    laplacian3d_weights,
 )

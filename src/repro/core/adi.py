@@ -22,7 +22,16 @@ full-2D stencil machinery.
 ``tune='cached'|'force'`` on :func:`make_adi_operator` routes the backend /
 batch-tile / unroll choice for each sweep through the Create-time
 autotuner (:mod:`repro.tune`): candidates are measured once per
-(shape, dtype, backend, jax version) and remembered on disk.
+(shape, dtype, backend, jax version, host) and remembered on disk.
+
+**3D** (:class:`ADIOperator3D`, :func:`make_adi_operator_3d`): the same
+Create/Compute split on ``(nz, ny, nx)`` fields with *three* transpose-free
+sweeps — x as a row-layout solve of the ``(nz*ny, nx)`` reshape, z as a
+column-layout solve of the ``(nz, ny*nx)`` reshape, and y through the new
+plane-layout substitution (recurrence along the middle axis), so a full 3D
+splitting step performs zero transposes.  ``operator='diffusion'`` swaps
+the hyperdiffusion band for the backward-Euler heat operator
+``I - alpha delta^2`` (tridiagonal riding the pentadiagonal machinery).
 """
 
 from __future__ import annotations
@@ -39,12 +48,20 @@ from repro.kernels.penta import (
     PentaFactors,
     cyclic_penta_factor,
     cyclic_penta_solve_factored,
+    cyclic_penta_solve_factored_mid,
     cyclic_penta_solve_factored_rows,
+    diffusion_diagonals,
     hyperdiffusion_diagonals,
     penta_factor,
     penta_solve_factored,
+    penta_solve_factored_mid,
     penta_solve_factored_rows,
 )
+
+_OPERATORS = {
+    "hyperdiffusion": hyperdiffusion_diagonals,  # I + alpha delta^4
+    "diffusion": diffusion_diagonals,  # I - alpha delta^2
+}
 
 
 def apply_along_x(
@@ -158,20 +175,34 @@ class ADIOperator:
         )
 
 
-def _autotune_adi(op: ADIOperator, ny: int, nx: int, dtype, mode: str, cache):
-    """Measure per-sweep solve configurations and attach the winners."""
+def _sweep_candidates(batch: int):
+    """The per-sweep solve candidate space: jnp rolled/unrolled loops plus
+    (on TPU) aligned Pallas batch tiles — shared by the 2D and 3D ADI
+    tuners."""
     from repro.kernels import ops as _ops
-    from repro.tune import autotune
     from repro.util import tile_candidates
 
-    rhs = jnp.zeros((ny, nx), dtype)
+    cands = [{"backend": "jnp", "unroll": 1}, {"backend": "jnp", "unroll": 4}]
+    if _ops.on_tpu():
+        for t in tile_candidates(batch):
+            cands.append({"backend": "pallas", "tile": t})
+    return cands
 
-    def candidates(batch: int):
-        cands = [{"backend": "jnp", "unroll": 1}, {"backend": "jnp", "unroll": 4}]
-        if _ops.on_tpu():
-            for t in tile_candidates(batch):
-                cands.append({"backend": "pallas", "tile": t})
-        return cands
+
+def _sweep_cfg(best: dict, tile_key: str) -> dict:
+    """Winning autotune config -> the per-sweep override dict solve_*
+    consumes (shared by the 2D and 3D ADI tuners)."""
+    cfg = {"backend": best["backend"], "unroll": best.get("unroll", 1)}
+    if "tile" in best:
+        cfg[tile_key] = best["tile"]
+    return cfg
+
+
+def _autotune_adi(op: ADIOperator, ny: int, nx: int, dtype, mode: str, cache):
+    """Measure per-sweep solve configurations and attach the winners."""
+    from repro.tune import autotune
+
+    rhs = jnp.zeros((ny, nx), dtype)
 
     def build_x(cfg):
         solve = (
@@ -205,22 +236,18 @@ def _autotune_adi(op: ADIOperator, ny: int, nx: int, dtype, mode: str, cache):
 
     extra = {"cyclic": op.cyclic}
     best_x = autotune(
-        "adi_solve_x", candidates(ny), build_x, (rhs,),
+        "adi_solve_x", _sweep_candidates(ny), build_x, (rhs,),
         shape=(ny, nx), dtype=dtype, backend=op.backend, extra=extra,
         mode=mode, cache=cache,
     )
     best_y = autotune(
-        "adi_solve_y", candidates(nx), build_y, (rhs,),
+        "adi_solve_y", _sweep_candidates(nx), build_y, (rhs,),
         shape=(ny, nx), dtype=dtype, backend=op.backend, extra=extra,
         mode=mode, cache=cache,
     )
-    x_cfg = {"backend": best_x["backend"], "unroll": best_x.get("unroll", 1)}
-    if "tile" in best_x:
-        x_cfg["tb"] = best_x["tile"]
-    y_cfg = {"backend": best_y["backend"], "unroll": best_y.get("unroll", 1)}
-    if "tile" in best_y:
-        y_cfg["tn"] = best_y["tile"]
-    return dataclasses.replace(op, x_cfg=x_cfg, y_cfg=y_cfg)
+    return dataclasses.replace(
+        op, x_cfg=_sweep_cfg(best_x, "tb"), y_cfg=_sweep_cfg(best_y, "tn")
+    )
 
 
 def make_adi_operator(
@@ -236,25 +263,263 @@ def make_adi_operator(
     max_tile_bytes: Optional[int] = None,
     tune: str = "off",
     tune_cache=None,
+    operator: str = "hyperdiffusion",
 ) -> ADIOperator:
     """Create (factor) the ADI operator pair.
 
     ``alpha_over_h4`` is the full coefficient multiplying ``delta^4``
     (e.g. ``(2/3) * D * gamma * dt / h**4`` for the paper's full scheme, or
     ``0.5 * D * gamma * dt / h**4`` for the eq. (3) initial step).
+    ``operator='diffusion'`` factors ``I - alpha delta^2`` instead (the
+    backward-Euler diffusion sweep; ``alpha`` is then ``D dt / h**2``).
 
     ``tune`` (``'off'|'cached'|'force'``) runs the Create-time autotuner
     over per-sweep backend / batch-tile / unroll candidates.
     """
+    diagonals = _OPERATORS[operator]
     ax = alpha_over_h4
     ay = alpha_over_h4 if alpha_over_h4_y is None else alpha_over_h4_y
     factor = cyclic_penta_factor if cyclic else penta_factor
-    fac_x = factor(*hyperdiffusion_diagonals(nx, ax, dtype))
-    fac_y = factor(*hyperdiffusion_diagonals(ny, ay, dtype))
+    fac_x = factor(*diagonals(nx, ax, dtype))
+    fac_y = factor(*diagonals(ny, ay, dtype))
     op = ADIOperator(
         fac_x=fac_x, fac_y=fac_y, cyclic=cyclic, backend=backend,
         streams=streams, max_tile_bytes=max_tile_bytes,
     )
     if tune != "off":
         op = _autotune_adi(op, ny, nx, jnp.dtype(dtype), tune, tune_cache)
+    return op
+
+
+# ---------------------------------------------------------------------------
+# 3D ADI (thesis follow-on / paper §VI.A): x/y/z sweeps on (nz, ny, nx)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ADIOperator3D:
+    """Factored per-direction operators for 3D ADI sweeps, every sweep
+    **transpose-free** on an ``(nz, ny, nx)`` field:
+
+    - :meth:`solve_x` — row layout on the ``(nz*ny, nx)`` reshape (the
+      batch axes are contiguous; a reshape is free, a transpose is not);
+    - :meth:`solve_y` — *plane* layout
+      (:func:`~repro.kernels.penta.penta_solve_factored_mid`): recurrence
+      along the middle axis, batch on planes × lanes;
+    - :meth:`solve_z` — column layout on the ``(nz, ny*nx)`` reshape.
+
+    ``streams``/``max_tile_bytes`` route each sweep through the streamed
+    executor: x chunks rows, y chunks z-planes, z chunks columns — the
+    whole implicit half of a 3D ADI step runs on domains exceeding one
+    tile.  ``x_cfg``/``y_cfg``/``z_cfg`` are per-sweep overrides produced
+    by the Create-time autotuner."""
+
+    fac_x: CyclicPentaFactors | PentaFactors  # along x (length nx)
+    fac_y: CyclicPentaFactors | PentaFactors  # along y (length ny)
+    fac_z: CyclicPentaFactors | PentaFactors  # along z (length nz)
+    cyclic: bool
+    backend: str = "auto"
+    streams: Optional[int] = None
+    max_tile_bytes: Optional[int] = None
+    x_cfg: Optional[dict] = None
+    y_cfg: Optional[dict] = None
+    z_cfg: Optional[dict] = None
+
+    def _cfg(self, cfg: Optional[dict]):
+        cfg = cfg or {}
+        return cfg.get("backend", self.backend), cfg.get("unroll", 1), cfg
+
+    def _should_stream(self, rhs) -> bool:
+        from repro.launch import stream as _stream
+
+        return _stream.should_stream(
+            rhs.shape,
+            rhs.dtype.itemsize,
+            streams=self.streams,
+            max_tile_bytes=self.max_tile_bytes,
+        )
+
+    def solve_x(self, rhs: jnp.ndarray) -> jnp.ndarray:
+        """Solve L_x w = rhs along the x (last) axis — row layout on the
+        flattened (nz*ny, nx) batch, transpose-free."""
+        from repro.launch import stream as _stream
+
+        backend, unroll, cfg = self._cfg(self.x_cfg)
+        nz, ny, nx = rhs.shape
+        flat = rhs.reshape(nz * ny, nx)
+        if self._should_stream(rhs):
+            out = _stream.stream_penta_solve_rows(
+                self.fac_x,
+                flat,
+                cyclic=self.cyclic,
+                streams=self.streams,
+                max_tile_bytes=self.max_tile_bytes,
+                backend=backend,
+                unroll=unroll,
+            )
+        else:
+            solve = (
+                cyclic_penta_solve_factored_rows
+                if self.cyclic
+                else penta_solve_factored_rows
+            )
+            out = solve(
+                self.fac_x, flat, backend=backend, tb=cfg.get("tb"),
+                unroll=unroll,
+            )
+        return out.reshape(rhs.shape)
+
+    def solve_y(self, rhs: jnp.ndarray) -> jnp.ndarray:
+        """Solve L_y v = rhs along the y (middle) axis — plane layout,
+        transpose-free."""
+        from repro.launch import stream as _stream
+
+        backend, unroll, cfg = self._cfg(self.y_cfg)
+        if self._should_stream(rhs):
+            return _stream.stream_penta_solve_mid(
+                self.fac_y,
+                rhs,
+                cyclic=self.cyclic,
+                streams=self.streams,
+                max_tile_bytes=self.max_tile_bytes,
+                backend=backend,
+                unroll=unroll,
+            )
+        solve = (
+            cyclic_penta_solve_factored_mid
+            if self.cyclic
+            else penta_solve_factored_mid
+        )
+        return solve(
+            self.fac_y, rhs, backend=backend, tn=cfg.get("tn"), unroll=unroll
+        )
+
+    def solve_z(self, rhs: jnp.ndarray) -> jnp.ndarray:
+        """Solve L_z u = rhs along the z (first) axis — column layout on
+        the (nz, ny*nx) reshape, transpose-free."""
+        from repro.launch import stream as _stream
+
+        backend, unroll, cfg = self._cfg(self.z_cfg)
+        nz, ny, nx = rhs.shape
+        flat = rhs.reshape(nz, ny * nx)
+        if self._should_stream(rhs):
+            out = _stream.stream_penta_solve(
+                self.fac_z,
+                flat,
+                cyclic=self.cyclic,
+                streams=self.streams,
+                max_tile_bytes=self.max_tile_bytes,
+                backend=backend,
+                unroll=unroll,
+            )
+        else:
+            solve = (
+                cyclic_penta_solve_factored
+                if self.cyclic
+                else penta_solve_factored
+            )
+            out = solve(
+                self.fac_z, flat, backend=backend, tn=cfg.get("tn"),
+                unroll=unroll,
+            )
+        return out.reshape(rhs.shape)
+
+
+def _autotune_adi3d(
+    op: ADIOperator3D, nz: int, ny: int, nx: int, dtype, mode: str, cache
+):
+    """Measure per-sweep solve configurations and attach the winners —
+    the 3D twin of :func:`_autotune_adi`, sharing its candidate space."""
+    from repro.tune import autotune
+
+    rhs = jnp.zeros((nz, ny, nx), dtype)
+    extra = {"cyclic": op.cyclic}
+    kw = dict(
+        shape=(nz, ny, nx), dtype=dtype, backend=op.backend, extra=extra,
+        mode=mode, cache=cache,
+    )
+
+    # measure the *monolithic* solves (streams knocked out): the streamed
+    # executor ignores per-sweep tiles, so routing candidates through it
+    # would time the identical call per tile and cache a winner the
+    # operator never applies
+    mono = dataclasses.replace(op, streams=None, max_tile_bytes=None)
+
+    def build(solve_name, tile_key):
+        def builder(cfg):
+            op2 = dataclasses.replace(
+                mono, **{solve_name + "_cfg": _sweep_cfg(cfg, tile_key)}
+            )
+            return jax.jit(getattr(op2, "solve_" + solve_name))
+
+        return builder
+
+    best_x = autotune(
+        "adi3d_solve_x", _sweep_candidates(nz * ny), build("x", "tb"),
+        (rhs,), **kw
+    )
+    best_y = autotune(
+        "adi3d_solve_y", _sweep_candidates(nx), build("y", "tn"),
+        (rhs,), **kw
+    )
+    best_z = autotune(
+        "adi3d_solve_z", _sweep_candidates(ny * nx), build("z", "tn"),
+        (rhs,), **kw
+    )
+    return dataclasses.replace(
+        op,
+        x_cfg=_sweep_cfg(best_x, "tb"),
+        y_cfg=_sweep_cfg(best_y, "tn"),
+        z_cfg=_sweep_cfg(best_z, "tn"),
+    )
+
+
+def make_adi_operator_3d(
+    nz: int,
+    ny: int,
+    nx: int,
+    alpha,
+    *,
+    cyclic: bool = True,
+    dtype=jnp.float64,
+    backend: str = "auto",
+    alpha_y: Optional[float] = None,
+    alpha_z: Optional[float] = None,
+    streams: Optional[int] = None,
+    max_tile_bytes: Optional[int] = None,
+    tune: str = "off",
+    tune_cache=None,
+    operator: str = "hyperdiffusion",
+) -> ADIOperator3D:
+    """Create (factor) the 3D ADI operator triple.
+
+    ``alpha`` multiplies the per-direction difference operator:
+    ``I + alpha delta^4`` for ``operator='hyperdiffusion'`` (the
+    Cahn–Hilliard-style splitting), ``I - alpha delta^2`` for
+    ``operator='diffusion'`` (backward-Euler heat sweeps,
+    ``alpha = D dt / h^2``).  ``alpha_y``/``alpha_z`` override the x
+    coefficient per direction on anisotropic grids.
+
+    ``tune`` (``'off'|'cached'|'force'``) runs the Create-time autotuner
+    over per-sweep backend / batch-tile / unroll candidates, reusing the
+    2D tuner's candidate space and cache keying.
+    """
+    diagonals = _OPERATORS[operator]
+    ax = alpha
+    ay = alpha if alpha_y is None else alpha_y
+    az = alpha if alpha_z is None else alpha_z
+    factor = cyclic_penta_factor if cyclic else penta_factor
+    op = ADIOperator3D(
+        fac_x=factor(*diagonals(nx, ax, dtype)),
+        fac_y=factor(*diagonals(ny, ay, dtype)),
+        fac_z=factor(*diagonals(nz, az, dtype)),
+        cyclic=cyclic,
+        backend=backend,
+        streams=streams,
+        max_tile_bytes=max_tile_bytes,
+    )
+    if tune != "off":
+        op = _autotune_adi3d(
+            op, nz, ny, nx, jnp.dtype(dtype), tune, tune_cache
+        )
     return op

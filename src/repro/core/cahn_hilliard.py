@@ -168,6 +168,7 @@ class CahnHilliardADI:
         # tuned x-sweep unroll feeds the fused RHS+sweep path too
         self._unroll = (self.op_full.x_cfg or {}).get("unroll", 1)
         self._streams_eff = cfg.streams
+        self._chunk_rows_eff = None  # None -> choose_chunk_rows heuristic
         self._evolve_cache = {}  # chunk length -> compiled donated driver
 
         # Create: the stencil plans (paper-faithful RHS path).
@@ -222,9 +223,11 @@ class CahnHilliardADI:
             shape=(cfg.ny, cfg.nx),
         )
 
-        # Tune the streamed fused hot path's pipeline width (chunks in
-        # flight) when streaming is on: the best group width is a property
-        # of the host, not of the PDE.
+        # Tune the streamed fused hot path's geometry — pipeline width
+        # (chunks in flight) x chunk height (rows per slab) — when
+        # streaming is on: both are properties of the host, not of the
+        # PDE, and the 2D grid subsumes choose_chunk_rows' divisor
+        # heuristic (ROADMAP "tuned streaming geometry").
         if cfg.tune != "off" and cfg.rhs_mode == "fused":
             from repro.launch import stream as _stream
 
@@ -232,7 +235,9 @@ class CahnHilliardADI:
                 (cfg.ny, cfg.nx), dtype.itemsize,
                 streams=cfg.streams, max_tile_bytes=cfg.max_tile_bytes,
             ):
-                self._streams_eff = self._tune_streams(dtype)
+                self._streams_eff, self._chunk_rows_eff = (
+                    self._tune_stream_geometry(dtype)
+                )
 
     # -- batched-1D directional assembly (rhs_mode='batch1d') ----------------
     def _cross_batch1d(self, c: jnp.ndarray) -> jnp.ndarray:
@@ -318,8 +323,15 @@ class CahnHilliardADI:
             return lin + hyper + nonlin
         raise ValueError(f"unknown rhs_mode {cfg.rhs_mode!r}")
 
-    def _tune_streams(self, dtype):
-        """Measure candidate pipeline widths for the streamed fused sweep."""
+    def _tune_stream_geometry(self, dtype):
+        """Measure the (pipeline width x chunk height) candidate grid for
+        the streamed fused sweep and return ``(streams, chunk_rows)``.
+
+        ``chunk_rows=None`` in a candidate means "let
+        :func:`~repro.launch.stream.choose_chunk_rows` decide" — the
+        pre-grid heuristic stays in the race as one contender among the
+        measured divisor heights, so tuning can only match or beat it.
+        """
         from repro.launch import stream as _stream
         from repro.tune import autotune
 
@@ -333,6 +345,7 @@ class CahnHilliardADI:
                     dt=cfg.dt, D=cfg.D, gamma=cfg.gamma,
                     inv_h2=self.inv_h2, inv_h4=self.inv_h4,
                     streams=cand["streams"],
+                    chunk_rows=cand.get("chunk_rows"),
                     max_tile_bytes=cfg.max_tile_bytes,
                     unroll=self._unroll,
                 )
@@ -341,9 +354,33 @@ class CahnHilliardADI:
 
         base = cfg.streams or 1
         widths = sorted({1, 2, 4, 8, base})
+        # divisor chunk heights around the byte-budget heuristic (None) —
+        # heights whose halo-padded slab would bust the user's byte budget
+        # are excluded, so tuning cannot un-bound the working set
+        budget = cfg.max_tile_bytes
+        heights = [None] + sorted(
+            {
+                r
+                for r in (cfg.ny // k for k in (4, 8, 16))
+                if r > 0
+                and cfg.ny % r == 0
+                and (
+                    budget is None
+                    or _stream.slab_bytes(
+                        r, cfg.nx, dtype.itemsize,
+                        top=2, bottom=2, left=2, right=2,
+                    ) <= budget
+                )
+            },
+            reverse=True,
+        )
         best = autotune(
-            "ch_stream_groups",
-            [{"streams": s} for s in widths],
+            "ch_stream_geometry",
+            [
+                {"streams": s, "chunk_rows": r}
+                for s in widths
+                for r in heights
+            ],
             build,
             (c, c),
             shape=(cfg.ny, cfg.nx),
@@ -354,9 +391,9 @@ class CahnHilliardADI:
             extra={"max_tile_bytes": cfg.max_tile_bytes,
                    "streams": cfg.streams},
             mode=cfg.tune,
-            default={"streams": base},
+            default={"streams": base, "chunk_rows": None},
         )
-        return best["streams"]
+        return best["streams"], best.get("chunk_rows")
 
     # -- fused explicit RHS + transpose-free x-sweep (the hot loop) ---------
     def _fused_xsweep(self, c_n: jnp.ndarray, c_nm1: jnp.ndarray) -> jnp.ndarray:
@@ -382,6 +419,7 @@ class CahnHilliardADI:
                 inv_h2=self.inv_h2,
                 inv_h4=self.inv_h4,
                 streams=self._streams_eff,
+                chunk_rows=self._chunk_rows_eff,
                 max_tile_bytes=cfg.max_tile_bytes,
                 backend=cfg.backend,
                 unroll=self._unroll,

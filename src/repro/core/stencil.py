@@ -19,6 +19,15 @@ passes the output buffer through untouched on the boundary — the caller
 applies their own boundary conditions afterwards, exactly the cuSten
 semantics.
 
+**The dimension-agnostic core.** Every plan family shares one Create/Compute
+skeleton — halo bookkeeping, ``auto|pallas|jnp`` dispatch, streamed-vs-
+monolithic routing, the Create-time ``tune=`` hook, Destroy semantics —
+and only the geometry differs.  That skeleton lives once in
+:class:`PlanCore`; :class:`Stencil2D`, :class:`StencilBatch1D` and
+:class:`Stencil3D` are thin geometry wrappers declaring their kernel entry
+points and halo vocabulary.  Adding a new dimensionality is a new wrapper,
+not a new engine.
+
 **Batched 1D** (:class:`StencilBatch1D`, :func:`stencil_create_1d_batch`,
 :func:`stencil_compute_1d_batch`, :func:`stencil_destroy_1d_batch`): the
 same Create/Compute/Destroy contract for applying one 1D stencil to every
@@ -29,12 +38,20 @@ grid with ``M`` on the lanes, so the whole batch tile advances per VPU op;
 through from ``out_init``.  Typical uses: per-direction explicit RHS
 assembly inside ADI sweeps (:mod:`repro.core.adi`), ensembles of independent
 1D PDEs, Fourier-space line operators.
+
+**3D** (:class:`Stencil3D`, :func:`stencil_create_3d`,
+:func:`stencil_compute_3d`, :func:`stencil_destroy_3d`): the paper's §VI.A
+extension on ``(nz, ny, nx)`` fields.  Halos are
+``front/back`` (z), ``top/bottom`` (y), ``left/right`` (x); direction
+``'x'|'y'|'z'`` takes 1D weights, ``'xyz'`` a full ``(sz, sy, sx)`` box.
+Oversized domains stream as z-slabs through
+:func:`repro.launch.stream.stream_stencil3d_apply`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, ClassVar, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,67 +61,8 @@ from repro.kernels import ops
 from repro.kernels.ref import weighted_point_fn
 
 _DIRECTIONS = ("x", "y", "xy")
+_DIRECTIONS_3D = ("x", "y", "z", "xyz")
 _BCS = ("periodic", "np")
-
-
-def _autotune_plan(plan, shape, mode: str, cache, *, kernel: str):
-    """Measure tile/backend candidates for a plan on a ``shape`` field and
-    return the plan with the winning configuration baked in.
-
-    Candidates: the plan's static-heuristic configuration plus (on TPU)
-    a small grid of aligned Pallas tiles.  Off-TPU there is a single
-    candidate and :func:`repro.tune.autotune` short-circuits without any
-    measurement — tuned and untuned plans are then identical by
-    construction (bit-match trivially holds).
-    """
-    from repro.tune import autotune, check_mode
-    from repro.util import tile_candidates
-
-    check_mode(mode)
-    if mode == "off":
-        return plan
-    if shape is None:
-        raise ValueError("tune != 'off' needs shape=(...) to measure with")
-    is_1d = kernel == "stencil1d_batch"
-    data = jnp.zeros(tuple(shape), plan.coeffs.dtype)
-    default = {"backend": plan.backend, "tile": None}
-    candidates = [default]
-    if ops.on_tpu():
-        d0, d1 = shape
-        for t0 in tile_candidates(d0):
-            for t1 in tile_candidates(d1):
-                candidates.append({"backend": "pallas", "tile": [t0, t1]})
-
-    def build(cfg):
-        tile = tuple(cfg["tile"]) if cfg.get("tile") else None
-        if is_1d:
-            def f(d):
-                return ops.stencil_apply_batch1d(
-                    d, plan.coeffs, None, point_fn=plan.point_fn,
-                    left=plan.left, right=plan.right, bc=plan.bc,
-                    tile=tile, backend=cfg["backend"],
-                )
-        else:
-            def f(d):
-                return ops.stencil_apply(
-                    d, plan.coeffs, None, point_fn=plan.point_fn,
-                    left=plan.left, right=plan.right, top=plan.top,
-                    bottom=plan.bottom, bc=plan.bc,
-                    tile=tile, backend=cfg["backend"],
-                )
-        return jax.jit(f)
-
-    extra = {
-        "halo": list(plan.halo),
-        "fn": getattr(plan.point_fn, "__name__", "fn"),
-    }
-    best = autotune(
-        kernel, candidates, build, (data,),
-        shape=shape, dtype=data.dtype, bc=plan.bc, backend=plan.backend,
-        extra=extra, mode=mode, default=default, cache=cache,
-    )
-    tile = tuple(best["tile"]) if best.get("tile") else None
-    return dataclasses.replace(plan, tile=tile, backend=best["backend"])
 
 
 def _split_extents(n_points: int, lo: Optional[int], hi: Optional[int]):
@@ -122,28 +80,68 @@ def _split_extents(n_points: int, lo: Optional[int], hi: Optional[int]):
     return lo, hi
 
 
-@dataclasses.dataclass(frozen=True)
-class Stencil2D:
-    """An immutable stencil plan (the ``cuSten_t`` analogue).
+# ---------------------------------------------------------------------------
+# The dimension-agnostic plan core
+# ---------------------------------------------------------------------------
 
-    ``streams`` / ``max_tile_bytes`` mirror cuSten's ``nStreams`` /
-    ``numStenTop`` streaming knobs: when set (and the field exceeds one
-    tile), Compute routes through the streamed tiled executor
-    (:mod:`repro.launch.stream`) instead of one monolithic kernel call."""
 
-    direction: str
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class PlanCore:
+    """Shared Create/Compute machinery of every stencil plan family.
+
+    Holds everything a Compute needs that is *not* geometry: the boundary
+    mode, coefficients / function pointer, kernel tile and backend request,
+    and the streaming knobs (``streams`` / ``max_tile_bytes`` mirror
+    cuSten's ``nStreams`` / ``numStenTop``: when set and the field exceeds
+    one tile, Compute routes through the streamed tiled executor in
+    :mod:`repro.launch.stream` instead of one monolithic kernel call).
+
+    Subclasses declare their geometry (the halo fields), the tune-cache
+    kernel name, and three hooks:
+
+    - :meth:`_halo_kwargs` — the per-family halo keyword vocabulary,
+      passed verbatim to both the monolithic and streamed entry points;
+    - :meth:`_mono_apply` / :meth:`_stream_apply` — the kernel entry
+      points (:mod:`repro.kernels.ops` / :mod:`repro.launch.stream`);
+    - :meth:`_pallas_tile_grid` — the Pallas tile candidate space the
+      Create-time autotuner measures on TPU.
+
+    Everything else — stream-vs-monolithic dispatch, the ``tune=`` hook,
+    Destroy semantics — is inherited, so no plan family carries its own
+    copy of the engine.
+    """
+
     bc: str
-    left: int
-    right: int
-    top: int
-    bottom: int
     coeffs: jnp.ndarray  # stencil weights (weighted mode) or fn coefficients
     point_fn: Callable = weighted_point_fn
-    tile: Optional[Tuple[int, int]] = None
+    tile: Optional[Tuple[int, ...]] = None
     backend: str = "auto"
     interpret: Optional[bool] = None
     streams: Optional[int] = None
     max_tile_bytes: Optional[int] = None
+
+    kernel_name: ClassVar[str] = "plan"
+
+    # -- geometry hooks (per-family) --------------------------------------
+    def _halo_kwargs(self) -> dict:
+        raise NotImplementedError
+
+    def _mono_apply(self, *args, **kwargs):
+        raise NotImplementedError
+
+    def _stream_apply(self, *args, **kwargs):
+        raise NotImplementedError
+
+    def _pallas_tile_grid(self, shape):
+        """Aligned Pallas tile candidates for the autotuner (TPU only)."""
+        from repro.util import tile_candidates
+
+        d0, d1 = shape[0], shape[1]
+        return [
+            (t0, t1)
+            for t0 in tile_candidates(d0)
+            for t1 in tile_candidates(d1)
+        ]
 
     # -- Compute ----------------------------------------------------------
     def apply(
@@ -161,37 +159,122 @@ class Stencil2D:
             streams=self.streams,
             max_tile_bytes=self.max_tile_bytes,
         ):
-            return _stream.stream_stencil_apply(
+            return self._stream_apply(
                 data,
                 self.coeffs,
                 out_init,
                 point_fn=self.point_fn,
-                left=self.left,
-                right=self.right,
-                top=self.top,
-                bottom=self.bottom,
                 bc=self.bc,
                 streams=self.streams,
                 max_tile_bytes=self.max_tile_bytes,
                 compute=_stream.resolve_compute(self.backend),
                 interpret=self.interpret,
+                **self._halo_kwargs(),
             )
-        return ops.stencil_apply(
+        return self._mono_apply(
             data,
             self.coeffs,
             out_init,
             point_fn=self.point_fn,
-            left=self.left,
-            right=self.right,
-            top=self.top,
-            bottom=self.bottom,
             bc=self.bc,
             tile=self.tile,
             backend=self.backend,
             interpret=self.interpret,
+            **self._halo_kwargs(),
         )
 
-    __call__ = apply
+    def __call__(
+        self, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        return self.apply(data, out_init)
+
+    # -- Create-time autotuning (the tune= hook) ---------------------------
+    def tuned(self, shape, mode: str, cache) -> "PlanCore":
+        """Measure tile/backend candidates on a ``shape`` field and return
+        the plan with the winning configuration baked in.
+
+        Candidates: the plan's static-heuristic configuration plus (on TPU)
+        the family's :meth:`_pallas_tile_grid`.  Off-TPU there is a single
+        candidate and :func:`repro.tune.autotune` short-circuits without any
+        measurement — tuned and untuned plans are then identical by
+        construction (bit-match trivially holds).
+        """
+        from repro.tune import autotune, check_mode
+
+        check_mode(mode)
+        if mode == "off":
+            return self
+        if shape is None:
+            raise ValueError("tune != 'off' needs shape=(...) to measure with")
+        data = jnp.zeros(tuple(shape), self.coeffs.dtype)
+        default = {"backend": self.backend, "tile": None}
+        candidates = [default]
+        if ops.on_tpu():
+            for t in self._pallas_tile_grid(shape):
+                candidates.append({"backend": "pallas", "tile": list(t)})
+
+        halo_kwargs = self._halo_kwargs()
+
+        def build(cfg):
+            tile = tuple(cfg["tile"]) if cfg.get("tile") else None
+
+            def f(d):
+                return self._mono_apply(
+                    d, self.coeffs, None, point_fn=self.point_fn,
+                    bc=self.bc, tile=tile, backend=cfg["backend"],
+                    interpret=self.interpret, **halo_kwargs,
+                )
+
+            return jax.jit(f)
+
+        extra = {
+            "halo": [int(h) for h in self.halo],
+            "fn": getattr(self.point_fn, "__name__", "fn"),
+        }
+        best = autotune(
+            self.kernel_name, candidates, build, (data,),
+            shape=shape, dtype=data.dtype, bc=self.bc, backend=self.backend,
+            extra=extra, mode=mode, default=default, cache=cache,
+        )
+        tile = tuple(best["tile"]) if best.get("tile") else None
+        return dataclasses.replace(self, tile=tile, backend=best["backend"])
+
+
+def plan_destroy(plan: PlanCore) -> None:
+    """API-parity Destroy.  JAX buffers are reference counted; nothing to
+    do — shared by every plan family's ``stencil_destroy_*``."""
+    del plan
+
+
+# ---------------------------------------------------------------------------
+# 2D plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class Stencil2D(PlanCore):
+    """An immutable 2D stencil plan (the ``cuSten_t`` analogue)."""
+
+    direction: str
+    left: int
+    right: int
+    top: int
+    bottom: int
+
+    kernel_name: ClassVar[str] = "stencil2d"
+
+    def _halo_kwargs(self) -> dict:
+        return dict(
+            left=self.left, right=self.right, top=self.top, bottom=self.bottom
+        )
+
+    def _mono_apply(self, *args, **kwargs):
+        return ops.stencil_apply(*args, **kwargs)
+
+    def _stream_apply(self, *args, **kwargs):
+        from repro.launch import stream as _stream
+
+        return _stream.stream_stencil_apply(*args, **kwargs)
 
     @property
     def num_sten(self) -> int:
@@ -260,36 +343,21 @@ def stencil_create_2d(
                 raise ValueError("xy stencil weights must be 2D (sy, sx)")
             top, bottom = _split_extents(w.shape[0], num_sten_top, num_sten_bottom)
             left, right = _split_extents(w.shape[1], num_sten_left, num_sten_right)
-        plan = Stencil2D(
-            direction=direction,
-            bc=bc,
-            left=left,
-            right=right,
-            top=top,
-            bottom=bottom,
-            coeffs=w.ravel(),
-            point_fn=weighted_point_fn,
-            tile=tile,
-            backend=backend,
-            interpret=interpret,
-            streams=streams,
-            max_tile_bytes=max_tile_bytes,
-        )
-        return _autotune_plan(
-            plan, shape, tune, tune_cache, kernel="stencil2d"
-        )
+        coeffs, point_fn = w.ravel(), weighted_point_fn
+    else:
+        # function-pointer mode
+        left = num_sten_left or 0
+        right = num_sten_right or 0
+        top = num_sten_top or 0
+        bottom = num_sten_bottom or 0
+        if direction == "x" and (top or bottom):
+            raise ValueError("x stencil cannot have top/bottom extents")
+        if direction == "y" and (left or right):
+            raise ValueError("y stencil cannot have left/right extents")
+        if coeffs is None:
+            coeffs = jnp.zeros((1,), jnp.float32)
+        coeffs, point_fn = jnp.asarray(coeffs), func
 
-    # function-pointer mode
-    left = num_sten_left or 0
-    right = num_sten_right or 0
-    top = num_sten_top or 0
-    bottom = num_sten_bottom or 0
-    if direction == "x" and (top or bottom):
-        raise ValueError("x stencil cannot have top/bottom extents")
-    if direction == "y" and (left or right):
-        raise ValueError("y stencil cannot have left/right extents")
-    if coeffs is None:
-        coeffs = jnp.zeros((1,), jnp.float32)
     plan = Stencil2D(
         direction=direction,
         bc=bc,
@@ -297,15 +365,15 @@ def stencil_create_2d(
         right=right,
         top=top,
         bottom=bottom,
-        coeffs=jnp.asarray(coeffs),
-        point_fn=func,
+        coeffs=coeffs,
+        point_fn=point_fn,
         tile=tile,
         backend=backend,
         interpret=interpret,
         streams=streams,
         max_tile_bytes=max_tile_bytes,
     )
-    return _autotune_plan(plan, shape, tune, tune_cache, kernel="stencil2d")
+    return plan.tuned(shape, tune, tune_cache)
 
 
 def stencil_compute_2d(
@@ -315,73 +383,37 @@ def stencil_compute_2d(
     return plan.apply(data, out_init)
 
 
-def stencil_destroy_2d(plan: Stencil2D) -> None:
-    """API-parity Destroy.  JAX buffers are reference counted; nothing to do."""
-    del plan
+stencil_destroy_2d = plan_destroy
 
 
-@dataclasses.dataclass(frozen=True)
-class StencilBatch1D:
+# ---------------------------------------------------------------------------
+# Batched-1D plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class StencilBatch1D(PlanCore):
     """An immutable batched-1D stencil plan (cuSten's ``1DBatch`` family).
 
     Applies one 1D stencil (extents ``left``/``right``) along axis 1 of a
     ``(B, M)`` stack, every row independently.
     """
 
-    bc: str
     left: int
     right: int
-    coeffs: jnp.ndarray  # stencil weights (weighted mode) or fn coefficients
-    point_fn: Callable = weighted_point_fn
-    tile: Optional[Tuple[int, int]] = None  # (Tb, Tm)
-    backend: str = "auto"
-    interpret: Optional[bool] = None
-    streams: Optional[int] = None
-    max_tile_bytes: Optional[int] = None
 
-    # -- Compute ----------------------------------------------------------
-    def apply(
-        self, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
-    ) -> jnp.ndarray:
-        """Apply the stencil to every row of ``data`` (the Compute call).
+    kernel_name: ClassVar[str] = "stencil1d_batch"
 
-        For ``bc='np'`` the ``left``/``right`` edge columns are copied from
-        ``out_init`` (zeros if not given)."""
+    def _halo_kwargs(self) -> dict:
+        return dict(left=self.left, right=self.right)
+
+    def _mono_apply(self, *args, **kwargs):
+        return ops.stencil_apply_batch1d(*args, **kwargs)
+
+    def _stream_apply(self, *args, **kwargs):
         from repro.launch import stream as _stream
 
-        if _stream.should_stream(
-            data.shape,
-            jnp.dtype(data.dtype).itemsize,
-            streams=self.streams,
-            max_tile_bytes=self.max_tile_bytes,
-        ):
-            return _stream.stream_batch1d_apply(
-                data,
-                self.coeffs,
-                out_init,
-                point_fn=self.point_fn,
-                left=self.left,
-                right=self.right,
-                bc=self.bc,
-                streams=self.streams,
-                max_tile_bytes=self.max_tile_bytes,
-                compute=_stream.resolve_compute(self.backend),
-                interpret=self.interpret,
-            )
-        return ops.stencil_apply_batch1d(
-            data,
-            self.coeffs,
-            out_init,
-            point_fn=self.point_fn,
-            left=self.left,
-            right=self.right,
-            bc=self.bc,
-            tile=self.tile,
-            backend=self.backend,
-            interpret=self.interpret,
-        )
-
-    __call__ = apply
+        return _stream.stream_batch1d_apply(*args, **kwargs)
 
     @property
     def num_sten(self) -> int:
@@ -428,42 +460,28 @@ def stencil_create_1d_batch(
         left, right = _split_extents(
             w.shape[0], num_sten_left, num_sten_right
         )
-        plan = StencilBatch1D(
-            bc=bc,
-            left=left,
-            right=right,
-            coeffs=w,
-            point_fn=weighted_point_fn,
-            tile=tile,
-            backend=backend,
-            interpret=interpret,
-            streams=streams,
-            max_tile_bytes=max_tile_bytes,
-        )
-        return _autotune_plan(
-            plan, shape, tune, tune_cache, kernel="stencil1d_batch"
-        )
+        coeffs, point_fn = w, weighted_point_fn
+    else:
+        # function-pointer mode
+        left = num_sten_left or 0
+        right = num_sten_right or 0
+        if coeffs is None:
+            coeffs = jnp.zeros((1,), jnp.float32)
+        coeffs, point_fn = jnp.asarray(coeffs), func
 
-    # function-pointer mode
-    left = num_sten_left or 0
-    right = num_sten_right or 0
-    if coeffs is None:
-        coeffs = jnp.zeros((1,), jnp.float32)
     plan = StencilBatch1D(
         bc=bc,
         left=left,
         right=right,
-        coeffs=jnp.asarray(coeffs),
-        point_fn=func,
+        coeffs=coeffs,
+        point_fn=point_fn,
         tile=tile,
         backend=backend,
         interpret=interpret,
         streams=streams,
         max_tile_bytes=max_tile_bytes,
     )
-    return _autotune_plan(
-        plan, shape, tune, tune_cache, kernel="stencil1d_batch"
-    )
+    return plan.tuned(shape, tune, tune_cache)
 
 
 def stencil_compute_1d_batch(
@@ -475,9 +493,186 @@ def stencil_compute_1d_batch(
     return plan.apply(data, out_init)
 
 
-def stencil_destroy_1d_batch(plan: StencilBatch1D) -> None:
-    """API-parity Destroy.  JAX buffers are reference counted; nothing to do."""
-    del plan
+stencil_destroy_1d_batch = plan_destroy
+
+
+# ---------------------------------------------------------------------------
+# 3D plans (paper §VI.A, the plan core's first new client)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class Stencil3D(PlanCore):
+    """An immutable 3D stencil plan on ``(nz, ny, nx)`` fields.
+
+    Halos follow the :func:`repro.kernels.ref.stencil3d_ref` convention:
+    ``front/back`` along z, ``top/bottom`` along y, ``left/right`` along x.
+    Oversized domains stream as z-slab chunks
+    (:func:`repro.launch.stream.stream_stencil3d_apply`).
+    """
+
+    direction: str
+    front: int
+    back: int
+    top: int
+    bottom: int
+    left: int
+    right: int
+
+    kernel_name: ClassVar[str] = "stencil3d"
+
+    def _halo_kwargs(self) -> dict:
+        return dict(halos=self.halos)
+
+    def _mono_apply(self, *args, **kwargs):
+        return ops.stencil_apply_3d(*args, **kwargs)
+
+    def _stream_apply(self, *args, **kwargs):
+        from repro.launch import stream as _stream
+
+        return _stream.stream_stencil3d_apply(*args, **kwargs)
+
+    def _pallas_tile_grid(self, shape):
+        # blocks carry the full x row; candidates tile (z, y) only.  z is
+        # the outer (unaligned) axis so small divisors suffice; y rides the
+        # sublanes and keeps the aligned candidate set.
+        from repro.util import tile_candidates
+
+        nz, ny = shape[0], shape[1]
+        tzs = [t for t in (16, 8, 4) if nz % t == 0][:2] or [1]
+        return [(tz, ty) for tz in tzs for ty in tile_candidates(ny)]
+
+    @property
+    def num_sten(self) -> int:
+        return (
+            (self.front + self.back + 1)
+            * (self.top + self.bottom + 1)
+            * (self.left + self.right + 1)
+        )
+
+    @property
+    def halo(self) -> Tuple[int, int, int, int, int, int]:
+        return self.halos
+
+    @property
+    def halos(self) -> Tuple[int, int, int, int, int, int]:
+        """(front, back, top, bottom, left, right) — the kernel's order."""
+        return (
+            self.front, self.back, self.top, self.bottom,
+            self.left, self.right,
+        )
+
+
+def stencil_create_3d(
+    direction: str,
+    bc: str,
+    *,
+    weights=None,
+    func: Optional[Callable] = None,
+    coeffs=None,
+    num_sten_front: Optional[int] = None,
+    num_sten_back: Optional[int] = None,
+    num_sten_top: Optional[int] = None,
+    num_sten_bottom: Optional[int] = None,
+    num_sten_left: Optional[int] = None,
+    num_sten_right: Optional[int] = None,
+    tile: Optional[Tuple[int, int]] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+    streams: Optional[int] = None,
+    max_tile_bytes: Optional[int] = None,
+    tune: str = "off",
+    shape: Optional[Tuple[int, int, int]] = None,
+    tune_cache=None,
+) -> Stencil3D:
+    """Create a 3D stencil plan (the §VI.A Create call).
+
+    Weighted mode: 1D ``weights`` for directions ``'x'|'y'|'z'`` (symmetric
+    split inferred for odd lengths, or the explicit extent pair), or a 3D
+    ``(sz, sy, sx)`` box for ``'xyz'``.  Function mode: ``func(windows,
+    coeffs)`` plus the explicit extents; windows are enumerated z-major,
+    then row-major over (y, x) — the §V.B convention lifted to 3D.
+
+    ``tile`` is the Pallas ``(tz, ty)`` block of the (z, y) grid (each
+    block carries the full x row).  ``streams``/``max_tile_bytes`` stream
+    oversized domains as z-slab chunks.
+    """
+    if direction not in _DIRECTIONS_3D:
+        raise ValueError(f"direction must be one of {_DIRECTIONS_3D}")
+    if bc not in _BCS:
+        raise ValueError(f"bc must be one of {_BCS}")
+    if (weights is None) == (func is None):
+        raise ValueError("exactly one of weights / func must be given")
+
+    front = back = top = bottom = left = right = 0
+    if weights is not None:
+        w = jnp.asarray(weights)
+        if direction == "xyz":
+            if w.ndim != 3:
+                raise ValueError("xyz stencil weights must be 3D (sz, sy, sx)")
+            front, back = _split_extents(w.shape[0], num_sten_front, num_sten_back)
+            top, bottom = _split_extents(w.shape[1], num_sten_top, num_sten_bottom)
+            left, right = _split_extents(w.shape[2], num_sten_left, num_sten_right)
+        else:
+            if w.ndim != 1:
+                raise ValueError(f"{direction} stencil weights must be 1D")
+            if direction == "x":
+                left, right = _split_extents(w.shape[0], num_sten_left, num_sten_right)
+            elif direction == "y":
+                top, bottom = _split_extents(w.shape[0], num_sten_top, num_sten_bottom)
+            else:  # z
+                front, back = _split_extents(w.shape[0], num_sten_front, num_sten_back)
+        coeffs, point_fn = w.ravel(), weighted_point_fn
+    else:
+        # function-pointer mode
+        front = num_sten_front or 0
+        back = num_sten_back or 0
+        top = num_sten_top or 0
+        bottom = num_sten_bottom or 0
+        left = num_sten_left or 0
+        right = num_sten_right or 0
+        off_axis = {
+            "x": front or back or top or bottom,
+            "y": front or back or left or right,
+            "z": top or bottom or left or right,
+            "xyz": 0,
+        }[direction]
+        if off_axis:
+            raise ValueError(
+                f"{direction} stencil cannot have off-axis extents"
+            )
+        if coeffs is None:
+            coeffs = jnp.zeros((1,), jnp.float32)
+        coeffs, point_fn = jnp.asarray(coeffs), func
+
+    plan = Stencil3D(
+        direction=direction,
+        bc=bc,
+        front=front,
+        back=back,
+        top=top,
+        bottom=bottom,
+        left=left,
+        right=right,
+        coeffs=coeffs,
+        point_fn=point_fn,
+        tile=tile,
+        backend=backend,
+        interpret=interpret,
+        streams=streams,
+        max_tile_bytes=max_tile_bytes,
+    )
+    return plan.tuned(shape, tune, tune_cache)
+
+
+def stencil_compute_3d(
+    plan: Stencil3D, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    """Functional alias for :meth:`Stencil3D.apply` (cuSten Compute)."""
+    return plan.apply(data, out_init)
+
+
+stencil_destroy_3d = plan_destroy
 
 
 class DoubleBuffer:
@@ -519,3 +714,13 @@ def central_difference_weights(order: int, derivative: int, h: float = 1.0):
     b[derivative] = _math.factorial(derivative)
     w = np.linalg.solve(A, b)
     return w / h**derivative
+
+
+def laplacian3d_weights(h: float = 1.0) -> np.ndarray:
+    """7-point 3D Laplacian as a ``(3, 3, 3)`` box (units ``h^-2``)."""
+    w = np.zeros((3, 3, 3))
+    w[1, 1, 0] = w[1, 1, 2] = 1.0
+    w[1, 0, 1] = w[1, 2, 1] = 1.0
+    w[0, 1, 1] = w[2, 1, 1] = 1.0
+    w[1, 1, 1] = -6.0
+    return w / h**2

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.stencil1d_batch import stencil1d_batch_pallas
 from repro.kernels.stencil2d import stencil2d_pallas
+from repro.kernels.stencil3d import stencil3d_pallas
 from repro.util import pick_tile, pick_tile_any, pick_tile_padded
 
 
@@ -334,6 +335,166 @@ def stencil_apply_batch1d(
         return _stencil1d_batch_jnp(
             data, coeffs, out_init,
             point_fn=point_fn, left=left, right=right, bc=bc,
+        )
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# 3D stencils (paper §VI.A) — same dispatch contract as the 2D/1D families
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("point_fn", "halos", "bc"))
+def _stencil3d_jnp(data, coeffs, out_init, *, point_fn, halos, bc):
+    return _ref.stencil3d_ref(
+        data,
+        bc=bc,
+        halos=halos,
+        point_fn=point_fn,
+        coeffs=coeffs,
+        out_init=out_init,
+    )
+
+
+def _pallas_ok_3d(nz, ny, nx, tz, ty, hz, hy, hx) -> bool:
+    return (
+        nz % tz == 0 and ny % ty == 0 and hz <= tz and hy <= ty and hx <= nx
+    )
+
+
+def _interior_mask_3d(shape, halos):
+    nz, ny, nx = shape
+    fr, bk, tp, bt, lf, rt = halos
+    zz = jnp.arange(nz)[:, None, None]
+    yy = jnp.arange(ny)[None, :, None]
+    xx = jnp.arange(nx)[None, None, :]
+    return (
+        (zz >= fr) & (zz < nz - bk)
+        & (yy >= tp) & (yy < ny - bt)
+        & (xx >= lf) & (xx < nx - rt)
+    )
+
+
+def _stencil3d_pallas_padded(
+    data, coeffs, out_init, *, point_fn, halos, bc, tz, ty, pz, py, interpret,
+):
+    """Pallas dispatch for awkward 3D extents (prime/odd ``nz``/``ny``).
+
+    The 2D alignment-padded trick lifted to 3D: halo-pad the field once
+    (wrap or zeros by ``bc``) on all three axes, zero-grow z and y to the
+    aligned ``(pz, py)`` tile multiples (x needs no growth — each block
+    carries the full row), run the kernel in ``np`` mode — whose
+    full-support interior is exactly the original domain — and slice the
+    result back out.  The alignment zeros sit strictly beyond the halo
+    ring, so no valid output ever reads them.
+    """
+    from repro.launch.stream import _pad_field_3d
+
+    nz, ny, nx = data.shape
+    fr, bk, tp, bt, lf, rt = halos
+    padded = _pad_field_3d(data, halos=halos, bc=bc)
+    sz, sy, sx = padded.shape
+    padded = jnp.pad(padded, ((0, pz - sz), (0, py - sy), (0, 0)))
+    out = stencil3d_pallas(
+        padded,
+        coeffs,
+        jnp.zeros_like(padded),
+        point_fn=point_fn,
+        halos=halos,
+        bc="np",
+        tz=tz,
+        ty=ty,
+        interpret=interpret,
+    )
+    out = jax.lax.slice(out, (fr, tp, lf), (fr + nz, tp + ny, lf + nx))
+    if bc == "np":
+        if out_init is None:
+            out_init = jnp.zeros_like(data)
+        mask = _interior_mask_3d(data.shape, halos)
+        out = jnp.where(mask, out, out_init.astype(out.dtype))
+    return out
+
+
+def stencil_apply_3d(
+    data: jnp.ndarray,
+    coeffs: jnp.ndarray,
+    out_init: Optional[jnp.ndarray] = None,
+    *,
+    point_fn: Callable = _ref.weighted_point_fn,
+    halos=(0, 0, 0, 0, 0, 0),  # (front, back, top, bottom, left, right)
+    bc: str = "periodic",
+    tile: Optional[tuple] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Apply a 3D stencil on an ``(nz, ny, nx)`` field — the 3D Compute
+    primitive.
+
+    Same backend contract as :func:`stencil_apply`: ``auto`` picks the
+    Pallas kernel when its structural constraints hold on a TPU (awkward
+    prime/odd z/y extents route through the alignment-padded dispatch),
+    otherwise the jnp oracle.  ``tile`` is the ``(tz, ty)`` block of the
+    (z, y) Pallas grid; each block carries the full x row.
+    """
+    halos = tuple(int(h) for h in halos)  # hashable for the jit static arg
+    nz, ny, nx = data.shape
+    fr, bk, tp, bt, lf, rt = halos
+    hz, hy, hx = max(fr, bk), max(tp, bt), max(lf, rt)
+    tz, ty = (
+        tile
+        if tile is not None
+        else (pick_tile_any(nz, target=8), pick_tile_any(ny, target=8))
+    )
+
+    clean = _pallas_ok_3d(nz, ny, nx, tz, ty, hz, hy, hx) and (
+        tile is not None or (_aligned(ty) and _aligned(tz, 4))
+    )
+    if backend == "auto":
+        backend = (
+            "pallas"
+            if on_tpu()
+            and (clean or (tile is None and hz <= nz and hy <= ny and hx <= nx))
+            else "jnp"
+        )
+    if backend == "pallas":
+        if not clean:
+            if tile is not None:
+                raise ValueError(
+                    f"pallas backend needs tile|field and halo<=tile; got "
+                    f"field=({nz},{ny},{nx}) tile=({tz},{ty}) "
+                    f"halo=({hz},{hy},{hx})"
+                )
+            from repro.util import next_multiple
+
+            sz, sy = nz + fr + bk, ny + tp + bt
+            ptz, pz = pick_tile_padded(sz, target=8)
+            pty, py = pick_tile_padded(sy, target=8)
+            if ptz < hz:
+                ptz = next_multiple(hz, 8)
+                pz = next_multiple(sz, ptz)
+            if pty < hy:
+                pty = next_multiple(hy, 8)
+                py = next_multiple(sy, pty)
+            return _stencil3d_pallas_padded(
+                data, coeffs, out_init,
+                point_fn=point_fn, halos=halos, bc=bc,
+                tz=ptz, ty=pty, pz=pz, py=py,
+                interpret=_should_interpret(interpret),
+            )
+        return stencil3d_pallas(
+            data,
+            coeffs,
+            out_init,
+            point_fn=point_fn,
+            halos=halos,
+            bc=bc,
+            tz=tz,
+            ty=ty,
+            interpret=_should_interpret(interpret),
+        )
+    if backend == "jnp":
+        return _stencil3d_jnp(
+            data, coeffs, out_init, point_fn=point_fn, halos=halos, bc=bc
         )
     raise ValueError(f"unknown backend {backend!r}")
 

@@ -18,18 +18,26 @@ cuSten/cuPentBatch split Create/Compute:
   solves and 4x4 capacitance inverse are precomputed at Create-time:
   each Compute is then one banded substitution + two tiny matmuls.
 
-Two substitution layouts are provided, so a full ADI step is
-**transpose-free** (both sweeps consume Create-time factors in their
-native layout):
+Three substitution layouts are provided, so a full ADI step — 2D *or*
+3D — is **transpose-free** (every sweep consumes Create-time factors in
+its native layout):
 
 - *column layout* (:func:`penta_solve_factored`): systems along axis 0
-  (length M), batch along axis 1 — the y-sweep of an ``(ny, nx)`` field.
+  (length M), batch along axis 1 — the y-sweep of an ``(ny, nx)`` field
+  and (reshaped to ``(nz, ny*nx)``) the z-sweep of an ``(nz, ny, nx)``
+  one.
 - *row layout* (:func:`penta_solve_factored_rows`): batch along axis 0,
   recurrence along axis 1 (TPU lanes) — the x-sweep, with no
   interleaving transpose at all.  The Pallas variant carries two
   previous *columns* in vector registers and strides the recurrence
   across lanes; the jnp variant walks the lanes with a ``fori_loop`` of
-  dynamic column slices.
+  dynamic column slices.  Reshaped to ``(nz*ny, nx)`` it is also the 3D
+  x-sweep.
+- *plane layout* (:func:`penta_solve_factored_mid`): batch along axes 0
+  and 2 of a ``(P, M, N)`` stack, recurrence along the *middle* axis —
+  the y-sweep of a 3D field, where neither reshape nor transpose can
+  bring the systems to an edge axis.  The carry is a full (P, N) plane;
+  the Pallas variant runs one z-plane × lane-tile per grid step.
 
 The rank-4 Woodbury correction is evaluated as four explicit outer
 products (broadcast FMAs) rather than ``dot``s: the (M, 4) x (4, N)
@@ -191,6 +199,68 @@ def _substitute_rows_jnp(
     return x
 
 
+def _substitute_mid_jnp(
+    fac: PentaFactors, rhs: jnp.ndarray, unroll: int = 1
+) -> jnp.ndarray:
+    """Plane-layout substitution on (P, M, N) rhs — recurrence along the
+    *middle* axis, batch on the outer planes × lanes.
+
+    The transpose-free y-sweep of a 3D field: each (z, :, x) line is one
+    system; the recurrence walks axis 1 with dynamic slices carrying a
+    full (P, N) plane, and no transpose of the field appears anywhere
+    (the row-layout lane recurrence generalised to batched planes).
+    """
+    P, M, N = rhs.shape
+    zero = jnp.zeros((P, N), rhs.dtype)
+    # pack the per-plane factor scalars so each iteration gathers once
+    fwd_fac = jnp.stack([fac.sub, fac.low, fac.inv_mu], axis=1)  # (M, 3)
+    bwd_fac = jnp.stack([fac.al, fac.be], axis=1)  # (M, 2)
+
+    def plane(arr, i):
+        return jax.lax.dynamic_slice_in_dim(arr, i, 1, axis=1)[:, 0, :]
+
+    def put(out, val, i):
+        return jax.lax.dynamic_update_slice_in_dim(
+            out, val[:, None, :], i, axis=1
+        )
+
+    def fwd(i, carry):
+        z1, z2, out = carry
+        f = jax.lax.dynamic_slice_in_dim(fwd_fac, i, 1, axis=0)[0]
+        z = (plane(rhs, i) - f[0] * z2 - f[1] * z1) * f[2]
+        return (z, z1, put(out, z, i))
+
+    _, _, z = jax.lax.fori_loop(
+        0, M, fwd, (zero, zero, jnp.zeros_like(rhs)), unroll=unroll
+    )
+
+    def bwd(t, carry):
+        x1, x2, out = carry
+        i = M - 1 - t
+        f = jax.lax.dynamic_slice_in_dim(bwd_fac, i, 1, axis=0)[0]
+        x = plane(z, i) - f[0] * x1 - f[1] * x2
+        return (x, x1, put(out, x, i))
+
+    _, _, x = jax.lax.fori_loop(
+        0, M, bwd, (zero, zero, jnp.zeros_like(rhs)), unroll=unroll
+    )
+    return x
+
+
+def mid_woodbury_correct(y: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plane-layout Woodbury closure ``x = y - W (V^T y)`` on a (P, M, N)
+    band solution, as four broadcast FMAs (``w`` is the Create-time (M, 4)
+    ``Z S^{-1}``) — the plane generalisation of
+    :func:`rows_woodbury_correct`."""
+    M = y.shape[1]
+    return y - (
+        y[:, M - 2][:, None, :] * w[None, :, 0, None]
+        + y[:, M - 1][:, None, :] * w[None, :, 1, None]
+        + y[:, 0][:, None, :] * w[None, :, 2, None]
+        + y[:, 1][:, None, :] * w[None, :, 3, None]
+    )
+
+
 # ---------------------------------------------------------------------------
 # Substitution — Pallas kernel (TPU target; interpret=True on CPU)
 # ---------------------------------------------------------------------------
@@ -319,9 +389,64 @@ def _substitute_rows_pallas(
     )(fac.sub, fac.low, fac.inv_mu, fac.al, fac.be, rhs)
 
 
+def _substitute_mid_kernel(
+    sub_ref, low_ref, imu_ref, al_ref, be_ref, r_ref, o_ref, *, M, Tn
+):
+    """Plane-layout kernel on a (1, M, Tn) block: one z-plane × lane tile
+    per grid step, recurrence striding the middle axis with two previous
+    planes carried in vector registers (the row-layout lane recurrence of
+    :func:`rows_substitute_refs`, one axis deeper)."""
+    zero = jnp.zeros((1, 1, Tn), o_ref.dtype)
+
+    def fwd(i, carry):
+        z1, z2 = carry
+        r = pl.load(r_ref, (slice(None), pl.ds(i, 1), slice(None)))
+        e = pl.load(sub_ref, (pl.ds(i, 1),))
+        lo = pl.load(low_ref, (pl.ds(i, 1),))
+        im = pl.load(imu_ref, (pl.ds(i, 1),))
+        z = (r - e * z2 - lo * z1) * im
+        pl.store(o_ref, (slice(None), pl.ds(i, 1), slice(None)), z)
+        return (z, z1)
+
+    jax.lax.fori_loop(0, M, fwd, (zero, zero))
+
+    def bwd(t, carry):
+        x1, x2 = carry
+        i = M - 1 - t
+        z = pl.load(o_ref, (slice(None), pl.ds(i, 1), slice(None)))
+        al = pl.load(al_ref, (pl.ds(i, 1),))
+        be = pl.load(be_ref, (pl.ds(i, 1),))
+        x = z - al * x1 - be * x2
+        pl.store(o_ref, (slice(None), pl.ds(i, 1), slice(None)), x)
+        return (x, x1)
+
+    jax.lax.fori_loop(0, M, bwd, (zero, zero))
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def _substitute_mid_pallas(
+    fac: PentaFactors, rhs: jnp.ndarray, *, tn: int, interpret: bool
+) -> jnp.ndarray:
+    P, M, N = rhs.shape
+    if N % tn:
+        raise ValueError(f"lane tile {tn} must divide N={N}")
+    vec_spec = pl.BlockSpec((M,), lambda p, i: (0,))
+    return pl.pallas_call(
+        functools.partial(_substitute_mid_kernel, M=M, Tn=tn),
+        grid=(P, N // tn),
+        in_specs=[vec_spec] * 5 + [pl.BlockSpec((1, M, tn), lambda p, i: (p, 0, i))],
+        out_specs=pl.BlockSpec((1, M, tn), lambda p, i: (p, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((P, M, N), rhs.dtype),
+        interpret=interpret,
+    )(fac.sub, fac.low, fac.inv_mu, fac.al, fac.be, rhs)
+
+
 _substitute_jnp_jit = jax.jit(_substitute_jnp, static_argnames=("unroll",))
 _substitute_rows_jnp_jit = jax.jit(
     _substitute_rows_jnp, static_argnames=("unroll",)
+)
+_substitute_mid_jnp_jit = jax.jit(
+    _substitute_mid_jnp, static_argnames=("unroll",)
 )
 
 
@@ -389,6 +514,37 @@ def penta_solve_factored_rows(
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return out[0] if squeeze else out
+
+
+def penta_solve_factored_mid(
+    fac: PentaFactors,
+    rhs: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    tn: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """Plane-layout solve: ``rhs`` is (P, M, N), recurrence along the
+    middle axis — every (p, :, n) line one system.
+
+    The transpose-free y-sweep of a 3D ADI step: same Create-time factors
+    as :func:`penta_solve_factored`, batch on the outer planes × lanes.
+    """
+    from repro.kernels import ops
+
+    P, M, N = rhs.shape
+    tn = tn if tn is not None else pick_tile(N)
+    if backend == "auto":
+        backend = "pallas" if ops.on_tpu() and N % tn == 0 else "jnp"
+    if backend == "pallas":
+        return _substitute_mid_pallas(
+            fac, rhs, tn=tn,
+            interpret=(not ops.on_tpu()) if interpret is None else interpret,
+        )
+    if backend == "jnp":
+        return _substitute_mid_jnp_jit(fac, rhs, unroll=unroll)
+    raise ValueError(f"unknown backend {backend!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -476,6 +632,25 @@ def cyclic_penta_solve_factored_rows(
     return x[0] if squeeze else x
 
 
+def cyclic_penta_solve_factored_mid(
+    fac: CyclicPentaFactors,
+    rhs: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    tn: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """Plane-layout Woodbury solve on a (P, M, N) rhs (each (p, :, n) line
+    one cyclic system) — the transpose-free y-sweep of a periodic 3D ADI
+    step."""
+    y = penta_solve_factored_mid(
+        fac.band, rhs, backend=backend, tn=tn, interpret=interpret,
+        unroll=unroll,
+    )
+    return mid_woodbury_correct(y, fac.w)
+
+
 def hyperdiffusion_diagonals(M: int, alpha, dtype=jnp.float64):
     """Diagonals of ``I + alpha * delta^4`` (eq. 4b of the paper): the ADI
     per-direction implicit operator with 5-point fourth difference."""
@@ -486,4 +661,20 @@ def hyperdiffusion_diagonals(M: int, alpha, dtype=jnp.float64):
         1.0 + 6.0 * alpha * one,  # d
         -4.0 * alpha * one,  # u1
         alpha * one,  # u2
+    )
+
+
+def diffusion_diagonals(M: int, r, dtype=jnp.float64):
+    """Diagonals of ``I - r * delta^2``: the per-direction implicit operator
+    of a backward-Euler diffusion sweep (``r = D dt / h^2``), as a
+    pentadiagonal band with zero outer diagonals — tridiagonal systems ride
+    the same factor/substitute machinery (and Woodbury closure) unchanged."""
+    one = jnp.ones((M,), dtype)
+    zero = jnp.zeros((M,), dtype)
+    return (
+        zero,  # l2
+        -r * one,  # l1
+        1.0 + 2.0 * r * one,  # d
+        -r * one,  # u1
+        zero,  # u2
     )

@@ -338,6 +338,209 @@ def stream_stencil_apply(
     )
 
 
+def _pad_field_3d(data: jnp.ndarray, *, halos, bc: str) -> jnp.ndarray:
+    """Halo-pad an ``(nz, ny, nx)`` field on all three axes (wrap for
+    periodic, zeros for ``np``) — the 3D counterpart of
+    :func:`_pad_field`, shared by the z-slab executor and the
+    alignment-padded 3D kernel dispatch."""
+    fr, bk, tp, bt, lf, rt = halos
+    if bc == "periodic":
+        for axis, (lo, hi) in enumerate(((fr, bk), (tp, bt), (lf, rt))):
+            if lo or hi:
+                parts = []
+                if lo:
+                    parts.append(jax.lax.slice_in_dim(
+                        data, data.shape[axis] - lo, data.shape[axis], axis=axis
+                    ))
+                parts.append(data)
+                if hi:
+                    parts.append(jax.lax.slice_in_dim(data, 0, hi, axis=axis))
+                data = jnp.concatenate(parts, axis=axis)
+        return data
+    return jnp.pad(data, ((fr, bk), (tp, bt), (lf, rt)))
+
+
+def _slab_windows_3d(slab: jnp.ndarray, *, halos, rows: int, ny: int, nx: int):
+    """The 3D stencil windows of a fully halo-padded z-slab, in the z-major
+    order shared with :func:`repro.kernels.ref.stencil3d_ref` — same
+    values, same reduction order, hence identical results."""
+    fr, bk, tp, bt, lf, rt = halos
+    wins = []
+    for c in range(fr + bk + 1):
+        for a in range(tp + bt + 1):
+            for b in range(lf + rt + 1):
+                wins.append(
+                    jax.lax.slice(
+                        slab, (c, a, b), (c + rows, a + ny, b + nx)
+                    )
+                )
+    return wins
+
+
+def _slab_apply_pallas_3d(slab, coeffs, *, point_fn, halos, rows, ny, nx,
+                          interpret):
+    """Evaluate one fully halo-padded z-slab with the 3D Pallas kernel:
+    the slab *is* a small field and ``bc='np'`` makes the kernel compute
+    exactly the full-support interior — which is exactly the chunk.
+    Awkward slab extents route through the alignment-padded dispatch in
+    :func:`repro.kernels.ops.stencil_apply_3d`."""
+    from repro.kernels import ops
+
+    fr, bk, tp, bt, lf, rt = halos
+    out = ops.stencil_apply_3d(
+        slab,
+        coeffs,
+        jnp.zeros_like(slab),
+        point_fn=point_fn,
+        halos=halos,
+        bc="np",
+        backend="pallas",
+        interpret=interpret,
+    )
+    return jax.lax.slice(out, (fr, tp, lf), (fr + rows, tp + ny, lf + nx))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "point_fn", "halos", "bc", "rows", "streams", "compute", "interpret",
+    ),
+    donate_argnums=(2,),
+)
+def _stream_exec_3d(
+    padded: jnp.ndarray,
+    coeffs: jnp.ndarray,
+    out_buf: jnp.ndarray,
+    out_init: Optional[jnp.ndarray],
+    *,
+    point_fn: Callable,
+    halos,
+    bc: str,
+    rows: int,
+    streams: int,
+    compute: str,
+    interpret: bool,
+):
+    """The pipelined z-slab loop — :func:`_stream_exec` one axis deeper.
+    ``out_buf`` is donated: stores reuse the buffer while the next group's
+    loads are in flight (double buffering)."""
+    fr, bk, tp, bt, lf, rt = halos
+    nz, ny, nx = out_buf.shape
+    n_chunks = nz // rows
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * rows
+    groups = starts.reshape(n_chunks // streams, streams)
+
+    def compute_chunk(start):
+        zero = jnp.zeros_like(start)
+        slab = jax.lax.dynamic_slice(
+            padded,
+            (start, zero, zero),
+            (rows + fr + bk, ny + tp + bt, nx + lf + rt),
+        )
+        if compute == "pallas":
+            val = _slab_apply_pallas_3d(
+                slab, coeffs, point_fn=point_fn, halos=halos,
+                rows=rows, ny=ny, nx=nx, interpret=interpret,
+            )
+        else:
+            val = point_fn(
+                _slab_windows_3d(slab, halos=halos, rows=rows, ny=ny, nx=nx),
+                coeffs,
+            )
+        if bc == "np":
+            gk = start + jax.lax.broadcasted_iota(jnp.int32, (rows, ny, nx), 0)
+            gj = jax.lax.broadcasted_iota(jnp.int32, (rows, ny, nx), 1)
+            gi = jax.lax.broadcasted_iota(jnp.int32, (rows, ny, nx), 2)
+            mask = (
+                (gk >= fr) & (gk < nz - bk)
+                & (gj >= tp) & (gj < ny - bt)
+                & (gi >= lf) & (gi < nx - rt)
+            )
+            base = jax.lax.dynamic_slice(
+                out_init, (start, zero, zero), (rows, ny, nx)
+            )
+            val = jnp.where(mask, val, base.astype(val.dtype))
+        return val
+
+    def body(out, group):
+        vals = jax.vmap(compute_chunk)(group)  # streams chunks in flight
+
+        def write(k, o):
+            zero = jnp.zeros_like(group[k])
+            return jax.lax.dynamic_update_slice(
+                o, vals[k].astype(o.dtype), (group[k], zero, zero)
+            )
+
+        return jax.lax.fori_loop(0, streams, write, out), None
+
+    out, _ = jax.lax.scan(body, out_buf, groups)
+    return out
+
+
+def stream_stencil3d_apply(
+    data: jnp.ndarray,
+    coeffs: jnp.ndarray,
+    out_init: Optional[jnp.ndarray] = None,
+    *,
+    point_fn: Callable = weighted_point_fn,
+    halos=(0, 0, 0, 0, 0, 0),
+    bc: str = "periodic",
+    streams: Optional[int] = None,
+    max_tile_bytes: Optional[int] = None,
+    chunk_slabs: Optional[int] = None,
+    compute: str = "jnp",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Streamed 3D stencil apply: identical contract (and results) to
+    :func:`repro.kernels.ops.stencil_apply_3d`, but the ``(nz, ny, nx)``
+    field is processed as halo-padded z-slab chunks so peak working-set is
+    one slab, not the domain — cuSten's row streaming lifted one axis up.
+
+    ``chunk_slabs`` overrides the geometry (slabs of that many z-planes);
+    otherwise it is derived from ``max_tile_bytes``.  ``compute`` selects
+    the per-slab evaluator exactly as in :func:`stream_stencil_apply`.
+    """
+    nz, ny, nx = data.shape
+    fr, bk, tp, bt, lf, rt = halos
+    if bc not in ("periodic", "np"):
+        raise ValueError(f"bc must be 'periodic' or 'np', got {bc!r}")
+    if compute not in ("jnp", "pallas"):
+        raise ValueError(f"compute must be 'jnp' or 'pallas', got {compute!r}")
+    rows = chunk_slabs or choose_chunk_rows(
+        nz, (ny + tp + bt) * (nx + lf + rt),
+        jnp.dtype(data.dtype).itemsize,
+        top=fr, bottom=bk,
+        max_tile_bytes=max_tile_bytes, streams=streams,
+    )
+    if nz % rows:
+        raise ValueError(f"chunk_slabs={rows} must divide nz={nz}")
+    n_chunks = nz // rows
+
+    if bc == "np" and out_init is None:
+        out_init = jnp.zeros_like(data)
+
+    if interpret is None:
+        from repro.kernels import ops
+
+        interpret = not ops.on_tpu()
+
+    padded = _pad_field_3d(data, halos=halos, bc=bc)
+    out_buf = jnp.zeros_like(data)
+    return _stream_exec_3d(
+        padded,
+        coeffs,
+        out_buf,
+        out_init,
+        point_fn=point_fn,
+        halos=tuple(int(h) for h in halos),
+        bc=bc,
+        rows=rows,
+        streams=_effective_streams(streams, n_chunks),
+        compute=compute,
+        interpret=interpret,
+    )
+
+
 def stream_batch1d_apply(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
@@ -584,6 +787,99 @@ def _penta_stream_rows_exec(
         )
         return jax.lax.dynamic_update_slice(
             out, val, (start, jnp.zeros_like(start))
+        ), None
+
+    out, _ = jax.lax.scan(body, out_buf, starts)
+    return out
+
+
+def stream_penta_solve_mid(
+    fac,
+    rhs: jnp.ndarray,
+    *,
+    cyclic: bool,
+    streams: Optional[int] = None,
+    max_tile_bytes: Optional[int] = None,
+    chunk_planes: Optional[int] = None,
+    backend: str = "jnp",
+    interpret: Optional[bool] = None,
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """Streamed *plane-layout* pentadiagonal solve on a ``(P, M, N)`` RHS.
+
+    The 3D y-sweep counterpart of :func:`stream_penta_solve_rows`: every
+    (p, :, n) line is one independent system (recurrence along axis 1), so
+    the plane axis streams as plain z-slab chunks with no halo at all.
+    """
+    from repro.kernels.penta import (
+        cyclic_penta_solve_factored_mid,
+        penta_solve_factored_mid,
+    )
+
+    P, M, N = rhs.shape
+    planes = chunk_planes or choose_chunk_rows(
+        P, M * N, jnp.dtype(rhs.dtype).itemsize,
+        max_tile_bytes=max_tile_bytes, streams=streams,
+    )
+    if P % planes:
+        raise ValueError(f"chunk_planes={planes} must divide P={P}")
+    n_chunks = P // planes
+    solve = (
+        cyclic_penta_solve_factored_mid if cyclic else penta_solve_factored_mid
+    )
+    if n_chunks == 1:
+        return solve(fac, rhs, backend=backend, interpret=interpret,
+                     unroll=unroll)
+    return _penta_stream_mid_exec(
+        fac,
+        rhs,
+        jnp.zeros_like(rhs),
+        planes=planes,
+        group=_effective_streams(streams, n_chunks),
+        cyclic=cyclic,
+        backend=backend,
+        interpret=interpret,
+        unroll=unroll,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "planes", "group", "cyclic", "backend", "interpret", "unroll",
+    ),
+    donate_argnums=(2,),
+)
+def _penta_stream_mid_exec(
+    fac, rhs, out_buf, *, planes, group, cyclic, backend, interpret, unroll=1
+):
+    """Plane-chunk pipeline for the transpose-free 3D y-sweep.  As with the
+    row pipeline, ``group`` plane chunks are one contiguous
+    ``(group * planes, M, N)`` slab of independent systems, so the whole
+    group is a *single* batched solve."""
+    from repro.kernels.penta import (
+        cyclic_penta_solve_factored_mid,
+        penta_solve_factored_mid,
+    )
+
+    solve = (
+        cyclic_penta_solve_factored_mid if cyclic else penta_solve_factored_mid
+    )
+    P, M, N = rhs.shape
+    gplanes = planes * group  # planes per scan step (one group-slab)
+    n_steps = P // gplanes
+    starts = jnp.arange(n_steps, dtype=jnp.int32) * gplanes
+
+    def body(out, start):
+        zero = jnp.zeros_like(start)
+        chunk = jax.lax.dynamic_slice(
+            rhs, (start, zero, zero), (gplanes, M, N)
+        )
+        val = solve(
+            fac, chunk, backend=backend, interpret=interpret, unroll=unroll
+        )
+        return jax.lax.dynamic_update_slice(
+            out, val, (start, zero, zero)
         ), None
 
     out, _ = jax.lax.scan(body, out_buf, starts)

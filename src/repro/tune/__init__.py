@@ -6,26 +6,37 @@ See :mod:`repro.tune.autotuner` for the measurement loop and
 """
 
 from repro.tune.autotuner import (
+    FORCE_ENV,
     MODES,
     TuneStats,
     autotune,
     check_mode,
+    enable_force,
     measure,
     reset_stats,
     stats,
 )
-from repro.tune.cache import ENV_VAR, TuneCache, cache_dir, tune_key
+from repro.tune.cache import (
+    ENV_VAR,
+    TuneCache,
+    cache_dir,
+    host_fingerprint,
+    tune_key,
+)
 
 __all__ = [
+    "FORCE_ENV",
     "MODES",
     "TuneStats",
     "autotune",
     "check_mode",
+    "enable_force",
     "measure",
     "reset_stats",
     "stats",
     "ENV_VAR",
     "TuneCache",
     "cache_dir",
+    "host_fingerprint",
     "tune_key",
 ]

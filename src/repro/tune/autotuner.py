@@ -26,6 +26,7 @@ measurement work at all.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Optional, Sequence
 
@@ -34,6 +35,26 @@ import jax
 from repro.tune.cache import TuneCache, tune_key
 
 MODES = ("off", "cached", "force")
+
+# Escape hatch (ROADMAP "cross-host cache hygiene"): with
+# REPRO_TUNE_FORCE=1 every tune='cached' Create re-measures and refreshes
+# its cache entry, even on a hit — for when a shipped warm cache is
+# suspect and the host fingerprint in the key was too coarse to notice.
+# tune='off' stays off: the hatch forces re-measurement, never measurement.
+FORCE_ENV = "REPRO_TUNE_FORCE"
+
+
+def _force_requested() -> bool:
+    return os.environ.get(FORCE_ENV, "").strip().lower() not in (
+        "", "0", "false",
+    )
+
+
+def enable_force() -> None:
+    """Turn the re-measurement escape hatch on for this process (what the
+    CLIs' ``--retune`` flags call): every subsequent ``tune='cached'``
+    Create re-measures and refreshes its cache entry."""
+    os.environ[FORCE_ENV] = "1"
 
 
 @dataclasses.dataclass
@@ -105,6 +126,8 @@ def autotune(
     if every candidate is infeasible the default is returned.
     """
     check_mode(mode)
+    if mode == "cached" and _force_requested():
+        mode = "force"  # $REPRO_TUNE_FORCE / --retune: re-measure on hit
     candidates = list(candidates)
     fallback = default if default is not None else (candidates[0] if candidates else {})
     if mode == "off" or len(candidates) <= 1:

@@ -4,8 +4,15 @@ cuSten's contract is that every expensive decision happens once at Create
 time.  The autotuner keeps that promise across *processes*: measured
 winners are stored as JSON under ``~/.cache/repro-tune/`` (override with
 ``REPRO_TUNE_CACHE``), keyed by everything that could change the answer —
-kernel name, shape, dtype, boundary condition, backend request, and the
-jax version — so a second Create of an identical plan never re-measures.
+kernel name, shape, dtype, boundary condition, backend request, the jax
+version, and a **host hardware fingerprint**
+(:func:`host_fingerprint`) — so a second Create of an identical plan on
+the same machine never re-measures, while a warm cache shipped between
+differing hosts (a dev laptop's winners landing on a CI runner, say)
+misses and re-measures instead of silently reusing the donor's choices.
+``REPRO_TUNE_FORCE=1`` (or ``--retune`` on the CLIs) re-measures even on
+a hit — the escape hatch when the fingerprint is too coarse to notice a
+host change that matters.
 
 Cache entries are one file per key (atomic ``os.replace`` writes, so
 concurrent Creates can race harmlessly).  A corrupted, truncated, or
@@ -15,9 +22,11 @@ re-measures and rewrites it.
 
 from __future__ import annotations
 
+import functools
 import hashlib
 import json
 import os
+import platform
 import tempfile
 from pathlib import Path
 from typing import Optional
@@ -27,6 +36,29 @@ import jax.numpy as jnp
 
 ENV_VAR = "REPRO_TUNE_CACHE"
 SCHEMA_VERSION = 1
+
+
+@functools.lru_cache(maxsize=1)
+def host_fingerprint() -> str:
+    """A coarse hardware identity baked into every tune key.
+
+    Architecture, logical core count, jax backend, and the primary
+    device kind — enough to distinguish a laptop from a CI runner or a
+    TPU host from a CPU one, deterministic across processes on the same
+    machine (the cross-process key-stability contract)."""
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:  # noqa: BLE001 — no devices: still produce a key
+        kind = "unknown"
+    return "/".join(
+        str(p)
+        for p in (
+            platform.machine() or "unknown",
+            f"{os.cpu_count() or 0}cpu",
+            jax.default_backend(),
+            kind,
+        )
+    )
 
 
 def cache_dir() -> Path:
@@ -48,11 +80,13 @@ def tune_key(
 ) -> str:
     """Canonical cache key for one tuning problem.
 
-    Deterministic across processes and hosts running the same software:
-    a sorted-key JSON document of (schema, kernel, shape, dtype, bc,
-    backend, jax version, extra).  ``extra`` carries kernel-specific
-    discriminators (halo extents, cyclic flag, ...) and must be
-    JSON-serialisable.
+    Deterministic across processes on the same host: a sorted-key JSON
+    document of (schema, kernel, shape, dtype, bc, backend, jax version,
+    host fingerprint, extra).  The host fingerprint is deliberately part
+    of the key — a warm cache copied between differing machines misses and
+    re-measures rather than reusing the donor host's winners.  ``extra``
+    carries kernel-specific discriminators (halo extents, cyclic flag,
+    ...) and must be JSON-serialisable.
     """
     doc = {
         "schema": SCHEMA_VERSION,
@@ -62,6 +96,7 @@ def tune_key(
         "bc": bc,
         "backend": backend,
         "jax": jax.__version__,
+        "host": host_fingerprint(),
         "extra": extra,
     }
     return json.dumps(doc, sort_keys=True, separators=(",", ":"))

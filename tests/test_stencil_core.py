@@ -7,10 +7,18 @@ import pytest
 
 from repro.core import (
     DoubleBuffer,
+    PlanCore,
+    Stencil2D,
+    Stencil3D,
+    StencilBatch1D,
     central_difference_weights,
     stencil_compute_2d,
+    stencil_create_1d_batch,
     stencil_create_2d,
+    stencil_create_3d,
+    stencil_destroy_1d_batch,
     stencil_destroy_2d,
+    stencil_destroy_3d,
 )
 from repro.kernels.ref import stencil2d_ref
 
@@ -127,6 +135,58 @@ class TestAPI:
         plan = stencil_create_2d("xy", "periodic", weights=jnp.ones((3, 5)))
         assert plan.num_sten == 15
         assert plan.halo == (2, 2, 1, 1)
+
+
+class TestPlanCore:
+    """The dimension-agnostic core: every plan family is one PlanCore
+    subclass sharing dispatch/tune/destroy machinery, not a copy of it."""
+
+    def _plans(self):
+        return [
+            stencil_create_2d("x", "periodic", weights=jnp.ones(3)),
+            stencil_create_1d_batch("periodic", weights=jnp.ones(3)),
+            stencil_create_3d(
+                "xyz", "periodic", weights=np.ones((3, 3, 3))
+            ),
+        ]
+
+    def test_every_family_is_a_plan_core(self):
+        p2, p1, p3 = self._plans()
+        assert isinstance(p2, Stencil2D) and isinstance(p2, PlanCore)
+        assert isinstance(p1, StencilBatch1D) and isinstance(p1, PlanCore)
+        assert isinstance(p3, Stencil3D) and isinstance(p3, PlanCore)
+
+    def test_dispatch_and_tune_logic_is_shared(self):
+        # the engine methods resolve to the PlanCore definitions — no
+        # per-dimension copies of apply/tuned/__call__ remain
+        for cls in (Stencil2D, StencilBatch1D, Stencil3D):
+            for name in ("apply", "tuned", "__call__"):
+                assert getattr(cls, name) is getattr(PlanCore, name), (
+                    f"{cls.__name__}.{name} shadows PlanCore"
+                )
+
+    def test_destroy_is_shared(self):
+        assert (
+            stencil_destroy_2d
+            is stencil_destroy_1d_batch
+            is stencil_destroy_3d
+        )
+        for plan in self._plans():
+            stencil_destroy_2d(plan)  # all families accepted, all no-ops
+
+    def test_call_aliases_apply(self):
+        rng = np.random.default_rng(0)
+        data2 = jnp.asarray(rng.standard_normal((8, 16)))
+        data3 = jnp.asarray(rng.standard_normal((4, 8, 16)))
+        p2, p1, p3 = self._plans()
+        np.testing.assert_array_equal(p2(data2), p2.apply(data2))
+        np.testing.assert_array_equal(p1(data2), p1.apply(data2))
+        np.testing.assert_array_equal(p3(data3), p3.apply(data3))
+
+    def test_plans_are_immutable(self):
+        for plan in self._plans():
+            with pytest.raises(Exception):
+                plan.backend = "jnp"
 
 
 class TestProperties:

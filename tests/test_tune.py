@@ -114,6 +114,63 @@ class TestSecondCreateIsFree:
         assert T.stats.measure_runs == runs_before
 
 
+class TestHostFingerprint:
+    """Cross-host cache hygiene: keys carry a hardware identity, and
+    REPRO_TUNE_FORCE re-measures even on a hit."""
+
+    def test_key_contains_fingerprint(self):
+        fp = T.host_fingerprint()
+        assert fp  # non-empty, deterministic
+        assert fp == T.host_fingerprint()
+        key = T.tune_key("k", shape=(8,), dtype=jnp.float32)
+        assert json.loads(key)["host"] == fp
+
+    def test_differing_host_is_a_different_key(self, monkeypatch):
+        from repro.tune import cache as C
+
+        base = T.tune_key("k", shape=(8,), dtype=jnp.float32)
+        monkeypatch.setattr(
+            C, "host_fingerprint", lambda: "other-arch/96cpu/tpu/v5e"
+        )
+        assert T.tune_key("k", shape=(8,), dtype=jnp.float32) != base
+
+    def test_force_env_remeasures_on_hit(self, cache, monkeypatch):
+        T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached",
+            **KEY_KW,
+        )
+        runs_before = T.stats.measure_runs
+        monkeypatch.setenv(T.FORCE_ENV, "1")
+        T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached",
+            **KEY_KW,
+        )
+        assert T.stats.measure_runs > runs_before  # hit was re-measured
+
+    def test_force_env_does_not_enable_tuning_when_off(self, cache,
+                                                       monkeypatch):
+        monkeypatch.setenv(T.FORCE_ENV, "1")
+        T.reset_stats()
+        best = T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="off", **KEY_KW
+        )
+        assert best == _toy_candidates()[0]
+        assert T.stats.measure_runs == 0
+
+    def test_force_env_zero_is_off(self, cache, monkeypatch):
+        T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached",
+            **KEY_KW,
+        )
+        runs_before = T.stats.measure_runs
+        monkeypatch.setenv(T.FORCE_ENV, "0")
+        T.autotune(
+            "toy", _toy_candidates(), _toy_build, ARGS, mode="cached",
+            **KEY_KW,
+        )
+        assert T.stats.measure_runs == runs_before  # plain cached hit
+
+
 class TestKeyStability:
     def test_key_is_deterministic_across_processes(self, cache):
         kw = dict(
@@ -188,6 +245,38 @@ class TestBitMatch:
             make_adi_operator(16, 16, 0.1, tune="always")
         with pytest.raises(ValueError):
             CHConfig(nx=16, ny=16, tune="sometimes").validate()
+
+
+class TestStreamGeometryGrid:
+    def test_tuned_streamed_solver_matches_untuned(self, cache):
+        # the (width x chunk_rows) grid must be result-invariant: a tuned
+        # streamed solver steps bit-identically (fp64, jnp backend) to the
+        # untuned streamed solver
+        n = 32
+        kw = dict(
+            nx=n, ny=n, dt=1e-3, rhs_mode="fused", backend="jnp",
+            streams=2, max_tile_bytes=n * n * 8 // 4,
+        )
+        s0 = CahnHilliardADI(CHConfig(**kw))
+        s1 = CahnHilliardADI(CHConfig(**kw, tune="force"))
+        assert s1._streams_eff >= 1
+        assert s1._chunk_rows_eff is None or n % s1._chunk_rows_eff == 0
+        c0 = deep_quench_ic(n, n, seed=4)
+        c1 = s0.initial_step(c0)
+        a0, _ = s0.step(c1, c0)
+        a1, _ = s1.step(c1, c0)
+        np.testing.assert_allclose(a0, a1, atol=1e-12, rtol=1e-12)
+
+    def test_geometry_winner_is_cached(self, cache):
+        n = 32
+        kw = dict(
+            nx=n, ny=n, dt=1e-3, rhs_mode="fused", backend="jnp",
+            streams=2, max_tile_bytes=n * n * 8 // 4, tune="cached",
+        )
+        CahnHilliardADI(CHConfig(**kw))
+        runs_before = T.stats.measure_runs
+        CahnHilliardADI(CHConfig(**kw))
+        assert T.stats.measure_runs == runs_before  # second Create is free
 
 
 class TestCorruptedCache:
