@@ -35,7 +35,8 @@ from benchmarks.timing import time_call
 
 
 def bench_stencil_sweep(smoke: bool = False):
-    from repro.core.stencil import central_difference_weights, stencil_create_2d
+    import repro
+    from repro.core.stencil import central_difference_weights
 
     rows = []
     rng = np.random.default_rng(0)
@@ -45,16 +46,13 @@ def bench_stencil_sweep(smoke: bool = False):
         ("x_order2", "x", central_difference_weights(2, 2)),
         ("x_order8", "x", central_difference_weights(8, 2)),
         ("y_order8", "y", central_difference_weights(8, 2)),
-        ("xy_biharmonic", "xy", None),
+        ("xy_biharmonic", "xy", "biharmonic"),  # registry operator
     ]
-    from repro.core.cahn_hilliard import biharmonic_weights
 
     for name, direction, w in cases:
-        if w is None:
-            w = biharmonic_weights()
         for bc in ("periodic", "np"):
-            plan = stencil_create_2d(
-                direction, bc, weights=jnp.asarray(w), backend="jnp"
+            plan = repro.create(
+                w, (n, n), mode=direction, bc=bc, backend="jnp"
             )
             fn = jax.jit(plan.apply)
             us = time_call(fn, data)
@@ -69,10 +67,8 @@ def bench_stencil_sweep(smoke: bool = False):
 
 
 def bench_batch1d(smoke: bool = False):
-    from repro.core.stencil import (
-        central_difference_weights,
-        stencil_create_1d_batch,
-    )
+    import repro
+    from repro.core.stencil import central_difference_weights
     from repro.kernels.ops import stencil_apply_batch1d
     from repro.kernels.ref import stencil1d_batch_ref
 
@@ -87,7 +83,7 @@ def bench_batch1d(smoke: bool = False):
     for B, M in shapes:
         data = jnp.asarray(rng.standard_normal((B, M)))
         for bc in ("periodic", "np"):
-            plan = stencil_create_1d_batch(bc, weights=w, backend="jnp")
+            plan = repro.create(w, (B, M), mode="batch", bc=bc, backend="jnp")
             fn = jax.jit(plan.apply)
             us = time_call(fn, data)
             # dispatcher output vs the raw jnp oracle (wiring check)
@@ -192,8 +188,7 @@ def bench_stream(smoke: bool = False):
 
 
 def bench_stencil3d(smoke: bool = False):
-    from repro.core.adi import make_adi_operator_3d
-    from repro.core.stencil import laplacian3d_weights, stencil_create_3d
+    import repro
 
     rows = []
     rng = np.random.default_rng(0)
@@ -201,20 +196,113 @@ def bench_stencil3d(smoke: bool = False):
     data = jnp.asarray(rng.standard_normal((nz, ny, nx)))
     npts = nz * ny * nx
 
-    # 7-point Laplacian through the plan API (periodic + np)
-    w = jnp.asarray(laplacian3d_weights())
+    # 7-point registry Laplacian through the facade (periodic + np)
     for bc in ("periodic", "np"):
-        plan = stencil_create_3d("xyz", bc, weights=w, backend="jnp")
+        plan = repro.create("laplacian", (nz, ny, nx), bc=bc, backend="jnp")
         us = time_call(jax.jit(plan.apply), data)
         rows.append(
             (f"stencil3d_lap_{bc}_{nz}x{ny}x{nx}", us, f"{npts/us:.1f}Mpt/s")
         )
 
     # full 3D ADI step: x, y, z implicit sweeps back to back
-    op = make_adi_operator_3d(nz, ny, nx, 0.2, cyclic=True, backend="jnp")
-    step = jax.jit(lambda c: op.solve_z(op.solve_y(op.solve_x(c))))
+    op = repro.create(
+        "hyperdiffusion", (nz, ny, nx), mode="adi", alpha=0.2, cyclic=True,
+        backend="jnp",
+    )
+    step = jax.jit(lambda c: repro.compute(op, c))
     us = time_call(step, data)
     rows.append((f"adi3d_step_{nz}x{ny}x{nx}", us, f"{npts/us:.1f}Mpt/s"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# repro.api — facade dispatch overhead vs direct plan calls
+# ---------------------------------------------------------------------------
+
+
+def bench_api_facade(smoke: bool = False):
+    """``repro.compute(plan, x)`` vs direct ``Stencil2D.__call__`` on the
+    256^2 laplacian — the facade must stay within noise of the direct
+    path (CI guards the within-run ratio at <2%).  A third row times the
+    pytree route (plan as a traced jit *argument*): per-call flatten
+    cost, reported for trajectory, not guarded.
+
+    The overhead estimator extends the harness's min-of-repeats
+    convention (benchmarks/timing.py) to *ratios*: each round times the
+    variant pair symmetrically (d, f, f, d — cancelling linear drift),
+    rounds are grouped into independent blocks, and the estimate is the
+    **min over blocks of the block-median ratio**.  The structural
+    overhead is a lower bound on every measurement and noise only adds,
+    so the quietest block bounds it — a sustained throttled window can
+    inflate one block's median but not all of them.  The facade/plan-arg
+    rows report ``us_direct * ratio`` so the guarded row ratio IS that
+    estimator."""
+    import statistics
+
+    import repro
+
+    rows = []
+    n = 256
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.standard_normal((n, n)))
+    plan = repro.create("laplacian", (n, n), bc="periodic", backend="jnp")
+
+    direct = jax.jit(plan.__call__)
+    facade = jax.jit(lambda x: repro.compute(plan, x))
+    pytree = jax.jit(lambda p, x: repro.compute(p, x))
+
+    err = float(jnp.abs(facade(data) - direct(data)).max())
+    err_t = float(jnp.abs(pytree(plan, data) - direct(data)).max())
+
+    def timed(fn, *args):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        return time.perf_counter() - t0
+
+    for fn, args in (  # warmup/compile outside the timed loops
+        (direct, (data,)), (facade, (data,)), (pytree, (plan, data)),
+    ):
+        jax.block_until_ready(fn(*args))
+
+    def overhead_ratio(fn, args, blocks=6, rounds=30):
+        """min-over-blocks of block-median symmetric paired ratio vs the
+        direct call."""
+        block_medians = []
+        for _ in range(blocks):
+            ratios = []
+            for _ in range(rounds):
+                d1 = timed(direct, data)
+                f1 = timed(fn, *args)
+                f2 = timed(fn, *args)
+                d2 = timed(direct, data)
+                ratios.append((f1 + f2) / (d1 + d2))
+            block_medians.append(statistics.median(ratios))
+        return min(block_medians)
+
+    us_direct = time_call(direct, data, repeat=31)
+    r_facade = overhead_ratio(facade, (data,))
+    r_pytree = overhead_ratio(pytree, (plan, data))
+    us_facade = us_direct * r_facade
+    us_pytree = us_direct * r_pytree
+    rows.append(
+        (f"api_direct_{n}", us_direct, f"{n*n/us_direct:.1f}Mpt/s")
+    )
+    rows.append(
+        (
+            f"api_facade_{n}",
+            us_facade,
+            f"{n*n/us_facade:.1f}Mpt/s;err={err:.1e};"
+            f"overhead={r_facade - 1.0:+.2%}",
+        )
+    )
+    rows.append(
+        (
+            f"api_plan_arg_{n}",
+            us_pytree,
+            f"{n*n/us_pytree:.1f}Mpt/s;err={err_t:.1e};"
+            f"overhead={r_pytree - 1.0:+.2%}",
+        )
+    )
     return rows
 
 
@@ -361,6 +449,7 @@ BENCHMARKS = [
     ("batch1d", bench_batch1d, False, ("batch1d_",)),
     ("penta_batch", bench_penta_batch, False, ("penta_",)),
     ("stencil3d", bench_stencil3d, False, ("stencil3d_", "adi3d_")),
+    ("api_facade", bench_api_facade, False, ("api_",)),
     ("stream", bench_stream, False, ("stream_",)),
     ("weno_step", bench_weno_step, False, ("weno_",)),
     ("cahn_hilliard_step", bench_cahn_hilliard_step, False, ("ch_step_",)),

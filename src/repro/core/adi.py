@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.stencil import StencilBatch1D
+from repro.util import deprecated_shim
 from repro.kernels.penta import (
     CyclicPentaFactors,
     PentaFactors,
@@ -50,18 +51,27 @@ from repro.kernels.penta import (
     cyclic_penta_solve_factored,
     cyclic_penta_solve_factored_mid,
     cyclic_penta_solve_factored_rows,
-    diffusion_diagonals,
-    hyperdiffusion_diagonals,
     penta_factor,
     penta_solve_factored,
     penta_solve_factored_mid,
     penta_solve_factored_rows,
 )
 
-_OPERATORS = {
-    "hyperdiffusion": hyperdiffusion_diagonals,  # I + alpha delta^4
-    "diffusion": diffusion_diagonals,  # I - alpha delta^2
-}
+
+def _band_builder(operator: str):
+    """The per-direction band builder for a named operator, resolved
+    through the :mod:`repro.api` registry — the single source of operator
+    definitions (``register_operator`` makes this user-extensible)."""
+    from repro import api as _api
+
+    opdef = _api.get_operator(operator)
+    if opdef.diagonals is None:
+        raise ValueError(
+            f"operator {opdef.name!r} defines no ADI band builder "
+            "(it is stencil-weights-only); register it with diagonals= "
+            "via repro.register_operator to use it in ADI plans"
+        )
+    return opdef.diagonals
 
 
 def apply_along_x(
@@ -109,6 +119,12 @@ class ADIOperator:
     max_tile_bytes: Optional[int] = None
     x_cfg: Optional[dict] = None  # tuned x-sweep config
     y_cfg: Optional[dict] = None  # tuned y-sweep config
+    operator: str = "hyperdiffusion"  # registry name the bands came from
+
+    @property
+    def destroyed(self) -> bool:
+        """True once ``repro.destroy`` ran on this operator."""
+        return getattr(self, "_destroyed", False)
 
     def _cfg(self, cfg: Optional[dict]):
         cfg = cfg or {}
@@ -234,7 +250,9 @@ def _autotune_adi(op: ADIOperator, ny: int, nx: int, dtype, mode: str, cache):
 
         return jax.jit(f)
 
-    extra = {"cyclic": op.cyclic}
+    # the operator name is part of the cache key: registry operators with
+    # coincidentally equal geometry must not alias one entry
+    extra = {"cyclic": op.cyclic, "operator": op.operator}
     best_x = autotune(
         "adi_solve_x", _sweep_candidates(ny), build_x, (rhs,),
         shape=(ny, nx), dtype=dtype, backend=op.backend, extra=extra,
@@ -250,7 +268,7 @@ def _autotune_adi(op: ADIOperator, ny: int, nx: int, dtype, mode: str, cache):
     )
 
 
-def make_adi_operator(
+def _make_adi_operator(
     ny: int,
     nx: int,
     alpha_over_h4,
@@ -276,7 +294,7 @@ def make_adi_operator(
     ``tune`` (``'off'|'cached'|'force'``) runs the Create-time autotuner
     over per-sweep backend / batch-tile / unroll candidates.
     """
-    diagonals = _OPERATORS[operator]
+    diagonals = _band_builder(operator)
     ax = alpha_over_h4
     ay = alpha_over_h4 if alpha_over_h4_y is None else alpha_over_h4_y
     factor = cyclic_penta_factor if cyclic else penta_factor
@@ -284,7 +302,7 @@ def make_adi_operator(
     fac_y = factor(*diagonals(ny, ay, dtype))
     op = ADIOperator(
         fac_x=fac_x, fac_y=fac_y, cyclic=cyclic, backend=backend,
-        streams=streams, max_tile_bytes=max_tile_bytes,
+        streams=streams, max_tile_bytes=max_tile_bytes, operator=operator,
     )
     if tune != "off":
         op = _autotune_adi(op, ny, nx, jnp.dtype(dtype), tune, tune_cache)
@@ -324,6 +342,12 @@ class ADIOperator3D:
     x_cfg: Optional[dict] = None
     y_cfg: Optional[dict] = None
     z_cfg: Optional[dict] = None
+    operator: str = "hyperdiffusion"  # registry name the bands came from
+
+    @property
+    def destroyed(self) -> bool:
+        """True once ``repro.destroy`` ran on this operator."""
+        return getattr(self, "_destroyed", False)
 
     def _cfg(self, cfg: Optional[dict]):
         cfg = cfg or {}
@@ -433,7 +457,7 @@ def _autotune_adi3d(
     from repro.tune import autotune
 
     rhs = jnp.zeros((nz, ny, nx), dtype)
-    extra = {"cyclic": op.cyclic}
+    extra = {"cyclic": op.cyclic, "operator": op.operator}
     kw = dict(
         shape=(nz, ny, nx), dtype=dtype, backend=op.backend, extra=extra,
         mode=mode, cache=cache,
@@ -474,7 +498,7 @@ def _autotune_adi3d(
     )
 
 
-def make_adi_operator_3d(
+def _make_adi_operator_3d(
     nz: int,
     ny: int,
     nx: int,
@@ -504,7 +528,7 @@ def make_adi_operator_3d(
     over per-sweep backend / batch-tile / unroll candidates, reusing the
     2D tuner's candidate space and cache keying.
     """
-    diagonals = _OPERATORS[operator]
+    diagonals = _band_builder(operator)
     ax = alpha
     ay = alpha if alpha_y is None else alpha_y
     az = alpha if alpha_z is None else alpha_z
@@ -517,9 +541,86 @@ def make_adi_operator_3d(
         backend=backend,
         streams=streams,
         max_tile_bytes=max_tile_bytes,
+        operator=operator,
     )
     if tune != "off":
         op = _autotune_adi3d(
             op, nz, ny, nx, jnp.dtype(dtype), tune, tune_cache
         )
     return op
+
+
+# ---------------------------------------------------------------------------
+# Pytree registration + deprecated factories
+# ---------------------------------------------------------------------------
+
+
+def _freeze_cfg(cfg):
+    """Tuned sweep-config dict -> hashable pytree aux (lists, which JSON
+    cache round-trips produce from tuples, become tuples)."""
+    if cfg is None:
+        return None
+    return tuple(
+        (k, tuple(v) if isinstance(v, list) else v)
+        for k, v in sorted(cfg.items())
+    )
+
+
+def _thaw_cfg(frozen):
+    return None if frozen is None else dict(frozen)
+
+
+def _register_adi_pytree(cls, fac_fields, cfg_fields, static_fields):
+    """Register an ADI operator dataclass as a JAX pytree: the factored
+    bands (every array of the Create-time factorisation, including the
+    cyclic Woodbury ``W``) are leaves; the solve configuration is static
+    aux — so operators pass through jit/vmap/donation like any array."""
+
+    def flatten(op):
+        children = tuple(getattr(op, f) for f in fac_fields)
+        aux = tuple(getattr(op, f) for f in static_fields) + tuple(
+            _freeze_cfg(getattr(op, f)) for f in cfg_fields
+        )
+        # destroyed mark in the aux: a destroyed operator gets a new
+        # treedef, so a jitted compute retraces and refuses it
+        return children, aux + (getattr(op, "_destroyed", False),)
+
+    def unflatten(aux, children):
+        kwargs = dict(zip(fac_fields, children))
+        kwargs.update(zip(static_fields, aux[: len(static_fields)]))
+        kwargs.update(
+            (f, _thaw_cfg(v))
+            for f, v in zip(cfg_fields, aux[len(static_fields):-1])
+        )
+        op = cls(**kwargs)
+        if aux[-1]:
+            object.__setattr__(op, "_destroyed", True)
+        return op
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+
+
+_register_adi_pytree(
+    ADIOperator,
+    fac_fields=("fac_x", "fac_y"),
+    cfg_fields=("x_cfg", "y_cfg"),
+    static_fields=(
+        "cyclic", "backend", "streams", "max_tile_bytes", "operator",
+    ),
+)
+_register_adi_pytree(
+    ADIOperator3D,
+    fac_fields=("fac_x", "fac_y", "fac_z"),
+    cfg_fields=("x_cfg", "y_cfg", "z_cfg"),
+    static_fields=(
+        "cyclic", "backend", "streams", "max_tile_bytes", "operator",
+    ),
+)
+
+
+make_adi_operator = deprecated_shim(
+    "make_adi_operator", "create(..., mode='adi')", _make_adi_operator
+)
+make_adi_operator_3d = deprecated_shim(
+    "make_adi_operator_3d", "create(..., mode='adi')", _make_adi_operator_3d
+)

@@ -39,34 +39,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api as _api
 from repro.core import metrics as _metrics
 from repro.core.adi import (
     apply_along_x,
     apply_along_y,
-    make_adi_operator,
-)
-from repro.core.stencil import (
-    stencil_create_1d_batch,
-    stencil_create_2d,
 )
 from repro.kernels import ops as _ops
 
 # ---------------------------------------------------------------------------
-# Stencil weight tables (paper eq. 4; §V.B stencil shapes)
+# Stencil weight tables (paper eq. 4; §V.B stencil shapes) — sourced from
+# the repro.api operator registry, the single home of named operators
 # ---------------------------------------------------------------------------
 
-_D4 = np.array([1.0, -4.0, 6.0, -4.0, 1.0])  # delta^2 of eq. (4b)
-_D2 = np.array([1.0, -2.0, 1.0])  # delta of eq. (4a)
-_LAP = np.array([[0.0, 1.0, 0.0], [1.0, -4.0, 1.0], [0.0, 1.0, 0.0]])
+_D4 = np.asarray(_api.get_operator("biharmonic").weights(1))  # eq. (4b)
+_D2 = np.asarray(_api.get_operator("laplacian").weights(1))  # eq. (4a)
+_LAP = np.asarray(_api.get_operator("laplacian").weights(2))
 
 
 def biharmonic_weights() -> np.ndarray:
-    """5x5 weights of delta_x^2 + delta_y^2 + 2 delta_x delta_y (units h^-4)."""
-    w = np.zeros((5, 5))
-    w[2, :] += _D4
-    w[:, 2] += _D4
-    w[1:4, 1:4] += 2.0 * np.outer(_D2, _D2)
-    return w
+    """5x5 weights of delta_x^2 + delta_y^2 + 2 delta_x delta_y (units h^-4)
+    — the registry's ``"biharmonic"`` operator at ndim=2."""
+    return np.asarray(_api.get_operator("biharmonic").weights(2))
 
 
 def init_explicit_weights_a() -> np.ndarray:
@@ -154,15 +148,14 @@ class CahnHilliardADI:
         # because substitution cost does not depend on the coefficients.
         beta_full = (2.0 / 3.0) * cfg.D * cfg.gamma * cfg.dt / h4
         beta_half = 0.5 * cfg.D * cfg.gamma * cfg.dt / h4
-        self.op_full = make_adi_operator(
-            cfg.ny, cfg.nx, beta_full, cyclic=True, dtype=dtype,
-            backend=cfg.backend, streams=cfg.streams,
-            max_tile_bytes=cfg.max_tile_bytes, tune=cfg.tune,
+        mk_op = functools.partial(
+            _api.create, "hyperdiffusion", (cfg.ny, cfg.nx), mode="adi",
+            cyclic=True, dtype=dtype, backend=cfg.backend,
+            streams=cfg.streams, max_tile_bytes=cfg.max_tile_bytes,
         )
-        self.op_half = make_adi_operator(
-            cfg.ny, cfg.nx, beta_half, cyclic=True, dtype=dtype,
-            backend=cfg.backend, streams=cfg.streams,
-            max_tile_bytes=cfg.max_tile_bytes,
+        self.op_full = mk_op(alpha=beta_full, tune=cfg.tune)
+        self.op_half = mk_op(
+            alpha=beta_half,
             tune="cached" if cfg.tune == "force" else cfg.tune,
         )
         # tuned x-sweep unroll feeds the fused RHS+sweep path too
@@ -171,30 +164,21 @@ class CahnHilliardADI:
         self._chunk_rows_eff = None  # None -> choose_chunk_rows heuristic
         self._evolve_cache = {}  # chunk length -> compiled donated driver
 
-        # Create: the stencil plans (paper-faithful RHS path).
+        # Create: the stencil plans (paper-faithful RHS path), all through
+        # the four-function facade — shape doubles as the tuning shape.
         mk = functools.partial(
-            stencil_create_2d, "xy", "periodic", backend=cfg.backend,
-            streams=cfg.streams, max_tile_bytes=cfg.max_tile_bytes,
-            tune=cfg.tune, shape=(cfg.ny, cfg.nx),
+            _api.create, shape=(cfg.ny, cfg.nx), mode="xy", bc="periodic",
+            dtype=dtype, backend=cfg.backend, streams=cfg.streams,
+            max_tile_bytes=cfg.max_tile_bytes, tune=cfg.tune,
         )
-        self.plan_bih = mk(weights=jnp.asarray(biharmonic_weights(), dtype))
-        self.plan_lap_cube = stencil_create_2d(
-            "xy",
-            "periodic",
-            func=cube_laplacian_point_fn,
-            coeffs=jnp.asarray(_LAP.ravel(), dtype),
-            num_sten_left=1,
-            num_sten_right=1,
-            num_sten_top=1,
-            num_sten_bottom=1,
-            backend=cfg.backend,
-            streams=cfg.streams,
-            max_tile_bytes=cfg.max_tile_bytes,
-            tune=cfg.tune,
-            shape=(cfg.ny, cfg.nx),
+        self.plan_bih = mk("biharmonic")
+        self.plan_lap_cube = mk(
+            cube_laplacian_point_fn,
+            coeffs=_LAP.ravel(),
+            extents=dict(left=1, right=1, top=1, bottom=1),
         )
-        self.plan_init_a = mk(weights=jnp.asarray(init_explicit_weights_a(), dtype))
-        self.plan_init_b = mk(weights=jnp.asarray(init_explicit_weights_b(), dtype))
+        self.plan_init_a = mk(init_explicit_weights_a())
+        self.plan_init_b = mk(init_explicit_weights_b())
 
         # Create: the batched-1D plans (per-direction RHS path).  Each is one
         # directional factor; apply_along_{x,y} runs it over all grid lines.
@@ -204,23 +188,17 @@ class CahnHilliardADI:
         # tune them only when the two orientations coincide.
         tune_1d = cfg.tune if cfg.ny == cfg.nx else "off"
         mk1d = functools.partial(
-            stencil_create_1d_batch, "periodic", backend=cfg.backend,
+            _api.create, shape=(cfg.ny, cfg.nx), mode="batch",
+            bc="periodic", dtype=dtype, backend=cfg.backend,
             streams=cfg.streams, max_tile_bytes=cfg.max_tile_bytes,
-            tune=tune_1d, shape=(cfg.ny, cfg.nx),
-        )
-        self.plan_d4_1d = mk1d(weights=jnp.asarray(_D4, dtype))
-        self.plan_d2_1d = mk1d(weights=jnp.asarray(_D2, dtype))
-        self.plan_lap_cube_1d = stencil_create_1d_batch(
-            "periodic",
-            func=cube_laplacian_point_fn,
-            coeffs=jnp.asarray(_D2, dtype),
-            num_sten_left=1,
-            num_sten_right=1,
-            backend=cfg.backend,
-            streams=cfg.streams,
-            max_tile_bytes=cfg.max_tile_bytes,
             tune=tune_1d,
-            shape=(cfg.ny, cfg.nx),
+        )
+        self.plan_d4_1d = mk1d(_D4)
+        self.plan_d2_1d = mk1d(_D2)
+        self.plan_lap_cube_1d = mk1d(
+            cube_laplacian_point_fn,
+            coeffs=_D2,
+            extents=dict(left=1, right=1),
         )
 
         # Tune the streamed fused hot path's geometry — pipeline width
@@ -555,7 +533,8 @@ def ch_evolve(
     """
     c0 = jnp.array(c0)  # private copy: the carry buffers get donated
     c1 = solver.initial_step(c0)
-    carry = (c1, c0)
+    # the Swap: the freshly computed field becomes the carry's "current"
+    carry = _api.swap((c0, c1))
     chunk = save_every if save_every else n_steps
     history = []
     done = 1  # initial step counts as step 1

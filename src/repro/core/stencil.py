@@ -2,15 +2,23 @@
 
 cuSten exposes ``custen{Create,Compute,Swap,Destroy}2D{X,Y,XY}{p,np}{,Fun}``
 plus the batched-1D family ``custen{Create,Compute,...}1DBatch{p,np}{,Fun}``.
-The functional JAX equivalents:
+The public JAX equivalents are the **four-function facade** in
+:mod:`repro.api` — ``repro.create`` / ``repro.compute`` / ``repro.swap`` /
+``repro.destroy``, rank-dispatched over every family defined here.  This
+module owns the engine underneath:
 
-- :func:`stencil_create_2d`  — Create: validates geometry, captures weights /
-  function pointer / boundary mode / tiling, returns an immutable plan.
-- :meth:`Stencil2D.apply` (or :func:`stencil_compute_2d`) — Compute.
-- :class:`DoubleBuffer`      — Swap (functional pointer flip; under ``jit``
+- :func:`_create_2d` & co     — Create: validate geometry, capture weights /
+  function pointer / boundary mode / tiling, return an immutable plan.
+- :meth:`Stencil2D.apply`     — Compute (plans are pytrees: weights are
+  leaves, geometry is static aux, so plans pass through jit/vmap/donation).
+- :class:`DoubleBuffer`       — Swap (functional pointer flip; under ``jit``
   with donation this is zero-copy, recovering cuSten's pointer swap).
-- :func:`stencil_destroy_2d` — Destroy (a no-op kept for API parity; JAX
-  buffers are GC'd — recorded as an intentional non-feature).
+- :func:`plan_destroy`        — Destroy (idempotent mark; JAX buffers are
+  GC'd — eager freeing recorded as an intentional non-feature).
+
+The pre-facade per-dimension names (``stencil_create_2d``,
+``stencil_compute_2d``, ... — nine in all) remain importable as
+one-release deprecation shims at the bottom of this module.
 
 Direction is encoded by the halo extents: an X plan has ``left/right``, a Y
 plan ``top/bottom``, an XY plan all four (the library handles the corner
@@ -59,6 +67,7 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.kernels.ref import weighted_point_fn
+from repro.util import deprecated_shim
 
 _DIRECTIONS = ("x", "y", "xy")
 _DIRECTIONS_3D = ("x", "y", "z", "xyz")
@@ -119,8 +128,18 @@ class PlanCore:
     interpret: Optional[bool] = None
     streams: Optional[int] = None
     max_tile_bytes: Optional[int] = None
+    # registry provenance: set when the weights came from a named operator
+    # (repro.api.get_operator) — part of the autotune cache key, so two
+    # operators that happen to share a geometry cannot alias one entry
+    op_name: Optional[str] = None
 
     kernel_name: ClassVar[str] = "plan"
+
+    @property
+    def destroyed(self) -> bool:
+        """True once :func:`plan_destroy` / ``repro.destroy`` ran on this
+        plan (``repro.compute`` refuses destroyed plans)."""
+        return getattr(self, "_destroyed", False)
 
     # -- geometry hooks (per-family) --------------------------------------
     def _halo_kwargs(self) -> dict:
@@ -230,6 +249,7 @@ class PlanCore:
         extra = {
             "halo": [int(h) for h in self.halo],
             "fn": getattr(self.point_fn, "__name__", "fn"),
+            "op": self.op_name,
         }
         best = autotune(
             self.kernel_name, candidates, build, (data,),
@@ -240,10 +260,69 @@ class PlanCore:
         return dataclasses.replace(self, tile=tile, backend=best["backend"])
 
 
-def plan_destroy(plan: PlanCore) -> None:
-    """API-parity Destroy.  JAX buffers are reference counted; nothing to
-    do — shared by every plan family's ``stencil_destroy_*``."""
-    del plan
+def plan_destroy(plan) -> None:
+    """API-parity Destroy, shared by every plan family (and by
+    ``repro.destroy``).  JAX buffers are reference counted, so no memory
+    is freed here; the plan is only *marked* destroyed, after which
+    ``repro.compute`` refuses it.
+
+    Idempotent by contract: destroying an already-destroyed plan, ``None``,
+    or an object that cannot carry the mark (e.g. a slotted
+    :class:`DoubleBuffer`) is a silent no-op — double-Destroy must never
+    raise."""
+    if plan is None:
+        return
+    try:
+        # frozen dataclasses forbid normal attribute writes; plans are
+        # immutable, so the destroyed mark goes in through the back door
+        object.__setattr__(plan, "_destroyed", True)
+    except (AttributeError, TypeError):
+        pass  # slotted / exotic objects: Destroy stays a no-op for them
+
+
+# ---------------------------------------------------------------------------
+# Pytree registration: plans cross jit/vmap/donation boundaries
+# ---------------------------------------------------------------------------
+
+
+def _hashable(value):
+    """Lists (e.g. a ``tile`` that round-tripped through the JSON tune
+    cache) become tuples so the pytree aux data is hashable."""
+    if isinstance(value, list):
+        return tuple(_hashable(v) for v in value)
+    return value
+
+
+def _register_plan_pytree(cls) -> None:
+    """Register a :class:`PlanCore` subclass as a JAX pytree.
+
+    The array payload (``coeffs`` — stencil weights or function-pointer
+    coefficients) is the single leaf; every other field (geometry, halo
+    extents, boundary mode, backend/tile/stream knobs, the point function)
+    is static aux data.  A jitted ``compute(plan, x)`` therefore retraces
+    only when the aux changes — swapping in new weight *values* of the
+    same shape/dtype reuses the trace (asserted in tests/test_api.py).
+    """
+    static = tuple(
+        f.name for f in dataclasses.fields(cls) if f.name != "coeffs"
+    )
+
+    def flatten(plan):
+        # the destroyed mark travels in the aux so a jitted
+        # compute(plan, x) sees it too: a destroyed plan has a different
+        # treedef, forcing a retrace where compute's refusal fires
+        aux = tuple(_hashable(getattr(plan, name)) for name in static)
+        return (plan.coeffs,), aux + (plan.destroyed,)
+
+    def unflatten(aux, leaves):
+        kwargs = dict(zip(static, aux))
+        kwargs["coeffs"] = leaves[0]
+        plan = cls(**kwargs)
+        if aux[-1]:
+            object.__setattr__(plan, "_destroyed", True)
+        return plan
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
 
 
 # ---------------------------------------------------------------------------
@@ -285,7 +364,7 @@ class Stencil2D(PlanCore):
         return (self.left, self.right, self.top, self.bottom)
 
 
-def stencil_create_2d(
+def _create_2d(
     direction: str,
     bc: str,
     *,
@@ -304,6 +383,7 @@ def stencil_create_2d(
     tune: str = "off",
     shape: Optional[Tuple[int, int]] = None,
     tune_cache=None,
+    op_name: Optional[str] = None,
 ) -> Stencil2D:
     """Create a stencil plan (the Create call).
 
@@ -372,18 +452,9 @@ def stencil_create_2d(
         interpret=interpret,
         streams=streams,
         max_tile_bytes=max_tile_bytes,
+        op_name=op_name,
     )
     return plan.tuned(shape, tune, tune_cache)
-
-
-def stencil_compute_2d(
-    plan: Stencil2D, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
-) -> jnp.ndarray:
-    """Functional alias for :meth:`Stencil2D.apply` (cuSten Compute)."""
-    return plan.apply(data, out_init)
-
-
-stencil_destroy_2d = plan_destroy
 
 
 # ---------------------------------------------------------------------------
@@ -424,7 +495,7 @@ class StencilBatch1D(PlanCore):
         return (self.left, self.right)
 
 
-def stencil_create_1d_batch(
+def _create_1d_batch(
     bc: str,
     *,
     weights=None,
@@ -440,6 +511,7 @@ def stencil_create_1d_batch(
     tune: str = "off",
     shape: Optional[Tuple[int, int]] = None,
     tune_cache=None,
+    op_name: Optional[str] = None,
 ) -> StencilBatch1D:
     """Create a batched-1D stencil plan (cuSten ``custenCreate1DBatch*``).
 
@@ -480,20 +552,9 @@ def stencil_create_1d_batch(
         interpret=interpret,
         streams=streams,
         max_tile_bytes=max_tile_bytes,
+        op_name=op_name,
     )
     return plan.tuned(shape, tune, tune_cache)
-
-
-def stencil_compute_1d_batch(
-    plan: StencilBatch1D,
-    data: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
-) -> jnp.ndarray:
-    """Functional alias for :meth:`StencilBatch1D.apply` (cuSten Compute)."""
-    return plan.apply(data, out_init)
-
-
-stencil_destroy_1d_batch = plan_destroy
 
 
 # ---------------------------------------------------------------------------
@@ -563,7 +624,7 @@ class Stencil3D(PlanCore):
         )
 
 
-def stencil_create_3d(
+def _create_3d(
     direction: str,
     bc: str,
     *,
@@ -584,6 +645,7 @@ def stencil_create_3d(
     tune: str = "off",
     shape: Optional[Tuple[int, int, int]] = None,
     tune_cache=None,
+    op_name: Optional[str] = None,
 ) -> Stencil3D:
     """Create a 3D stencil plan (the §VI.A Create call).
 
@@ -661,18 +723,9 @@ def stencil_create_3d(
         interpret=interpret,
         streams=streams,
         max_tile_bytes=max_tile_bytes,
+        op_name=op_name,
     )
     return plan.tuned(shape, tune, tune_cache)
-
-
-def stencil_compute_3d(
-    plan: Stencil3D, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
-) -> jnp.ndarray:
-    """Functional alias for :meth:`Stencil3D.apply` (cuSten Compute)."""
-    return plan.apply(data, out_init)
-
-
-stencil_destroy_3d = plan_destroy
 
 
 class DoubleBuffer:
@@ -724,3 +777,47 @@ def laplacian3d_weights(h: float = 1.0) -> np.ndarray:
     w[0, 1, 1] = w[2, 1, 1] = 1.0
     w[1, 1, 1] = -6.0
     return w / h**2
+
+
+# every plan family is a pytree: weights are leaves, geometry is static —
+# plans pass *through* jit/vmap/donation instead of forcing closure capture
+for _cls in (Stencil2D, StencilBatch1D, Stencil3D):
+    _register_plan_pytree(_cls)
+del _cls
+
+
+# ---------------------------------------------------------------------------
+# Deprecated per-dimension entry points (one release; use repro.api)
+# ---------------------------------------------------------------------------
+
+
+def _compute_impl(plan, data, out_init=None):
+    return plan.apply(data, out_init)
+
+
+_deprecated_shim = deprecated_shim
+
+
+stencil_create_2d = _deprecated_shim("stencil_create_2d", "create", _create_2d)
+stencil_compute_2d = _deprecated_shim(
+    "stencil_compute_2d", "compute", _compute_impl
+)
+stencil_destroy_2d = _deprecated_shim(
+    "stencil_destroy_2d", "destroy", plan_destroy
+)
+stencil_create_1d_batch = _deprecated_shim(
+    "stencil_create_1d_batch", "create", _create_1d_batch
+)
+stencil_compute_1d_batch = _deprecated_shim(
+    "stencil_compute_1d_batch", "compute", _compute_impl
+)
+stencil_destroy_1d_batch = _deprecated_shim(
+    "stencil_destroy_1d_batch", "destroy", plan_destroy
+)
+stencil_create_3d = _deprecated_shim("stencil_create_3d", "create", _create_3d)
+stencil_compute_3d = _deprecated_shim(
+    "stencil_compute_3d", "compute", _compute_impl
+)
+stencil_destroy_3d = _deprecated_shim(
+    "stencil_destroy_3d", "destroy", plan_destroy
+)

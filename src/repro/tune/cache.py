@@ -86,7 +86,8 @@ def tune_key(
     of the key — a warm cache copied between differing machines misses and
     re-measures rather than reusing the donor host's winners.  ``extra``
     carries kernel-specific discriminators (halo extents, cyclic flag,
-    ...) and must be JSON-serialisable.
+    the :mod:`repro.api` registry operator name the weights/bands came
+    from, ...) and must be JSON-serialisable.
     """
     doc = {
         "schema": SCHEMA_VERSION,

@@ -3,9 +3,45 @@
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Sequence
 
 import jax.numpy as jnp
+
+
+def warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
+    """Emit the one-release deprecation warning for a legacy API name.
+
+    Every pre-facade entry point (the nine per-dimension ``stencil_*``
+    functions, both ``make_adi_operator*`` factories) funnels through
+    this, so the message shape — and therefore the warning filter in
+    ``tests/conftest.py`` — stays in one place."""
+    warnings.warn(
+        f"{old} is deprecated; use repro.{new} — "
+        "the unified four-function facade (repro.api)",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+
+
+def deprecated_shim(old: str, new: str, impl):
+    """Wrap a pre-facade entry point: warn via :func:`warn_deprecated`
+    on every call, then delegate to the private implementation.  The one
+    shim factory for both the ``stencil_*`` family and the
+    ``make_adi_operator*`` factories, so the wrapper shape (name, doc,
+    warning stacklevel) cannot drift between them."""
+
+    def shim(*args, **kwargs):
+        warn_deprecated(old, new)
+        return impl(*args, **kwargs)
+
+    shim.__name__ = shim.__qualname__ = old
+    shim.__doc__ = (
+        f"Deprecated alias (one release): use ``repro.{new}`` — the unified "
+        f"four-function facade in :mod:`repro.api`.  Behaviour is identical "
+        f"to the pre-facade ``{old}``."
+    )
+    return shim
 
 
 def ceil_div(a: int, b: int) -> int:

@@ -1,0 +1,541 @@
+"""The unified four-function facade (repro.api).
+
+Covers the ISSUE-5 acceptance surface: rank/geometry dispatch in
+``create``, pytree-native plans (round-trip bit-identical, jit with the
+plan as a traced argument, no retrace on weight-value change), the
+operator registry (duplicates rejected, unknown names rejected,
+user-extensible), the one-release deprecation shims (exactly one
+``DeprecationWarning`` each, identical results), idempotent Destroy, and
+Swap semantics."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import api
+from repro.core.adi import ADIOperator, ADIOperator3D
+from repro.core.stencil import (
+    DoubleBuffer,
+    Stencil2D,
+    Stencil3D,
+    StencilBatch1D,
+)
+
+W3 = np.array([1.0, -2.0, 1.0])
+W5 = np.array([1.0, -4.0, 6.0, -4.0, 1.0])
+
+
+def rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape))
+
+
+# ---------------------------------------------------------------------------
+# create: rank/geometry dispatch
+# ---------------------------------------------------------------------------
+
+
+class TestRankDispatch:
+    def test_rank2_defaults_to_2d_xy(self):
+        plan = repro.create("laplacian", (16, 24), backend="jnp")
+        assert isinstance(plan, Stencil2D)
+        assert plan.direction == "xy"
+        assert plan.op_name == "laplacian"
+
+    def test_rank2_1d_weights_default_x(self):
+        plan = repro.create(W3, (16, 24), backend="jnp")
+        assert isinstance(plan, Stencil2D) and plan.direction == "x"
+
+    def test_rank2_mode_y(self):
+        plan = repro.create(W3, (16, 24), mode="y", backend="jnp")
+        assert plan.direction == "y" and (plan.top, plan.bottom) == (1, 1)
+
+    def test_mode_batch_is_1d_batch_family(self):
+        plan = repro.create(W5, (7, 32), mode="batch", backend="jnp")
+        assert isinstance(plan, StencilBatch1D)
+        assert (plan.left, plan.right) == (2, 2)
+
+    def test_rank3_defaults_to_3d_xyz(self):
+        plan = repro.create("laplacian", (6, 8, 10), backend="jnp")
+        assert isinstance(plan, Stencil3D) and plan.direction == "xyz"
+
+    def test_rank3_1d_weights_need_mode(self):
+        with pytest.raises(ValueError, match="ambiguous"):
+            repro.create(W3, (6, 8, 10), backend="jnp")
+        plan = repro.create(W3, (6, 8, 10), mode="z", backend="jnp")
+        assert isinstance(plan, Stencil3D)
+        assert (plan.front, plan.back) == (1, 1)
+
+    def test_adi_rank_dispatch(self):
+        op2 = repro.create(
+            "hyperdiffusion", (16, 16), mode="adi", alpha=0.2, backend="jnp"
+        )
+        op3 = repro.create(
+            "diffusion", (8, 8, 8), mode="adi", alpha=0.1, backend="jnp"
+        )
+        assert isinstance(op2, ADIOperator) and op2.operator == "hyperdiffusion"
+        assert isinstance(op3, ADIOperator3D) and op3.operator == "diffusion"
+
+    def test_function_pointer_mode(self):
+        def fn(windows, coeffs):
+            return coeffs[0] * (windows[0] - 2.0 * windows[1] + windows[2])
+
+        plan = repro.create(
+            fn, (16, 24), coeffs=jnp.asarray([1.0]),
+            extents=dict(left=1, right=1), backend="jnp",
+        )
+        data = rand((16, 24))
+        direct = repro.create(W3, (16, 24), backend="jnp")
+        np.testing.assert_allclose(
+            repro.compute(plan, data), repro.compute(direct, data),
+            rtol=1e-12, atol=1e-12,
+        )
+
+    def test_compute_matches_plan_apply(self):
+        data = rand((12, 20))
+        plan = repro.create("biharmonic", (12, 20), backend="jnp")
+        np.testing.assert_array_equal(
+            repro.compute(plan, data), plan.apply(data)
+        )
+
+    def test_adi_compute_is_full_solve(self):
+        data = rand((16, 16))
+        op = repro.create(
+            "hyperdiffusion", (16, 16), mode="adi", alpha=0.3, backend="jnp"
+        )
+        np.testing.assert_array_equal(
+            repro.compute(op, data), op.solve_y(op.solve_x(data))
+        )
+        data3 = rand((8, 8, 8))
+        op3 = repro.create(
+            "diffusion", (8, 8, 8), mode="adi", alpha=0.1, backend="jnp"
+        )
+        np.testing.assert_array_equal(
+            repro.compute(op3, data3),
+            op3.solve_z(op3.solve_y(op3.solve_x(data3))),
+        )
+
+    def test_rejects_bad_shapes_and_modes(self):
+        with pytest.raises(ValueError, match="rank 2 or 3"):
+            repro.create(W3, (32,))
+        with pytest.raises(ValueError, match="rank 2 or 3"):
+            repro.create(W3, (2, 3, 4, 5))
+        with pytest.raises(ValueError, match="mode for a rank-2"):
+            repro.create(W3, (8, 8), mode="z")
+        with pytest.raises(ValueError, match="rank-2"):
+            repro.create(W3, (4, 4, 4), mode="batch")
+        with pytest.raises(ValueError, match="alpha="):
+            repro.create("diffusion", (8, 8), mode="adi")
+        with pytest.raises(ValueError, match="operator name"):
+            repro.create(W3, (8, 8), mode="adi", alpha=0.1)
+        with pytest.raises(ValueError, match="alpha_z"):
+            repro.create(
+                "diffusion", (8, 8), mode="adi", alpha=0.1, alpha_z=0.2
+            )
+        with pytest.raises(ValueError, match="unknown extents"):
+            repro.create(
+                lambda w, c: w[0], (8, 8), coeffs=jnp.ones(1),
+                extents=dict(left=1, wrong=2),
+            )
+
+    def test_rejects_silently_dropped_kwargs(self):
+        # alpha/cyclic without mode='adi' would build an explicit stencil
+        # and drop them — refuse instead of computing the wrong thing
+        with pytest.raises(ValueError, match="alpha= only applies"):
+            repro.create("diffusion", (8, 8), alpha=0.1)
+        with pytest.raises(ValueError, match="cyclic= only applies"):
+            repro.create("laplacian", (8, 8), cyclic=True)
+        # h= scales registry weights only; explicit arrays and point
+        # functions already encode the grid spacing
+        with pytest.raises(ValueError, match="registry-operator weights"):
+            repro.create(W3, (8, 8), h=0.5)
+        with pytest.raises(ValueError, match="registry-operator weights"):
+            repro.create(
+                lambda w, c: w[0], (8, 8), coeffs=jnp.ones(1),
+                extents=dict(left=1, right=1), h=0.5,
+            )
+        with pytest.raises(ValueError, match="fold the grid spacing"):
+            repro.create("diffusion", (8, 8), mode="adi", alpha=0.1, h=0.5)
+
+    def test_adi_bc_selects_band_topology(self):
+        data = rand((8, 8))
+        via_bc = repro.create(
+            "diffusion", (8, 8), mode="adi", alpha=0.1, bc="np",
+            backend="jnp",
+        )
+        via_cyclic = repro.create(
+            "diffusion", (8, 8), mode="adi", alpha=0.1, cyclic=False,
+            backend="jnp",
+        )
+        assert not via_bc.cyclic
+        np.testing.assert_array_equal(
+            repro.compute(via_bc, data), repro.compute(via_cyclic, data)
+        )
+        with pytest.raises(ValueError, match="non-cyclic"):
+            repro.create(
+                "diffusion", (8, 8), mode="adi", alpha=0.1, bc="np",
+                cyclic=True,
+            )
+
+
+# ---------------------------------------------------------------------------
+# pytree-native plans
+# ---------------------------------------------------------------------------
+
+
+def _all_plans():
+    return [
+        (repro.create("laplacian", (12, 16), backend="jnp"), rand((12, 16))),
+        (
+            repro.create(W5, (6, 32), mode="batch", backend="jnp"),
+            rand((6, 32)),
+        ),
+        (
+            repro.create("laplacian", (4, 6, 8), backend="jnp"),
+            rand((4, 6, 8)),
+        ),
+        (
+            repro.create(
+                "hyperdiffusion", (12, 16), mode="adi", alpha=0.2,
+                backend="jnp",
+            ),
+            rand((12, 16)),
+        ),
+        (
+            repro.create(
+                "diffusion", (6, 6, 6), mode="adi", alpha=0.1, backend="jnp"
+            ),
+            rand((6, 6, 6)),
+        ),
+    ]
+
+
+class TestPytreePlans:
+    def test_roundtrip_bit_identical(self):
+        for plan, data in _all_plans():
+            leaves, treedef = jax.tree_util.tree_flatten(plan)
+            assert leaves, f"{type(plan).__name__} has no leaves"
+            assert all(
+                isinstance(leaf, (jax.Array, np.ndarray)) for leaf in leaves
+            )
+            rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+            assert type(rebuilt) is type(plan)
+            np.testing.assert_array_equal(
+                repro.compute(plan, data), repro.compute(rebuilt, data)
+            )
+
+    def test_jit_plan_as_argument(self):
+        f = jax.jit(lambda p, x: repro.compute(p, x))
+        for plan, data in _all_plans():
+            np.testing.assert_allclose(
+                f(plan, data), repro.compute(plan, data),
+                rtol=1e-12, atol=1e-12,
+            )
+
+    def test_no_retrace_on_weight_change(self):
+        """Leaf-value changes reuse the trace; static-aux changes do not."""
+        traces = []
+
+        @jax.jit
+        def f(p, x):
+            traces.append(1)
+            return repro.compute(p, x)
+
+        data = rand((16, 24))
+        p1 = repro.create(2.0 * W3, (16, 24), backend="jnp")
+        p2 = repro.create(-3.5 * W3, (16, 24), backend="jnp")  # new values
+        f(p1, data)
+        f(p2, data)
+        assert len(traces) == 1, "weight-value change must not retrace"
+        p3 = repro.create(2.0 * W3, (16, 24), bc="np", backend="jnp")
+        f(p3, data)
+        assert len(traces) == 2, "static-aux (bc) change must retrace"
+
+    def test_jaxpr_invariant_to_weight_values(self):
+        data = rand((16, 24))
+        mk = lambda w: repro.create(w, (16, 24), backend="jnp")  # noqa: E731
+        jaxpr = lambda p: str(  # noqa: E731
+            jax.make_jaxpr(lambda q, x: repro.compute(q, x))(p, data)
+        )
+        assert jaxpr(mk(W3)) == jaxpr(mk(7.0 * W3))
+        assert jaxpr(mk(W3)) != jaxpr(mk(W5))  # geometry change: new program
+
+    def test_adi_jit_and_retrace(self):
+        traces = []
+
+        @jax.jit
+        def g(op, x):
+            traces.append(1)
+            return repro.compute(op, x)
+
+        data = rand((12, 12))
+        mk = lambda a: repro.create(  # noqa: E731
+            "hyperdiffusion", (12, 12), mode="adi", alpha=a, backend="jnp"
+        )
+        out = g(mk(0.2), data)
+        np.testing.assert_allclose(
+            out, repro.compute(mk(0.2), data), rtol=1e-12, atol=1e-12
+        )
+        g(mk(0.4), data)  # new factor *values*, same structure
+        assert len(traces) == 1
+
+    def test_vmap_over_stacked_weights(self):
+        """Plans vmap like any pytree: map over a stacked weights leaf."""
+        data = rand((8, 16))
+        plan = repro.create(W3, (8, 16), backend="jnp")
+        stacked = jax.tree_util.tree_map(
+            lambda w: jnp.stack([w, 2.0 * w]), plan
+        )
+        outs = jax.vmap(lambda p, x: repro.compute(p, x), in_axes=(0, None))(
+            stacked, data
+        )
+        np.testing.assert_allclose(
+            outs[1], 2.0 * outs[0], rtol=1e-12, atol=1e-12
+        )
+
+
+# ---------------------------------------------------------------------------
+# operator registry
+# ---------------------------------------------------------------------------
+
+
+class TestOperatorRegistry:
+    def test_builtins_present(self):
+        for name in ("laplacian", "biharmonic", "hyperdiffusion", "diffusion"):
+            assert name in repro.operator_names()
+            assert repro.get_operator(name).name == name
+
+    def test_unknown_name_rejected(self):
+        with pytest.raises(ValueError, match="unknown operator 'nope'"):
+            repro.get_operator("nope")
+        with pytest.raises(ValueError, match="unknown operator"):
+            repro.create("nope", (8, 8))
+        from repro.core.adi import _make_adi_operator
+
+        with pytest.raises(ValueError, match="unknown operator"):
+            _make_adi_operator(8, 8, 0.1, operator="nope")
+
+    def test_duplicate_rejected_unless_overwrite(self):
+        try:
+            repro.register_operator("_test_dup", weights=lambda n, h=1.0: W3)
+            with pytest.raises(ValueError, match="already registered"):
+                repro.register_operator(
+                    "_test_dup", weights=lambda n, h=1.0: W3
+                )
+            repro.register_operator(
+                "_test_dup", weights=lambda n, h=1.0: W5, overwrite=True
+            )
+            assert repro.get_operator("_test_dup").weights(1).shape == (5,)
+        finally:
+            api._REGISTRY.pop("_test_dup", None)
+
+    def test_register_needs_a_builder(self):
+        with pytest.raises(ValueError, match="weights= and/or diagonals="):
+            repro.register_operator("_test_empty")
+        with pytest.raises(ValueError, match="non-empty string"):
+            repro.register_operator("", weights=lambda n, h=1.0: W3)
+
+    def test_user_operator_drives_create(self):
+        try:
+            repro.register_operator(
+                "_test_d2", weights=lambda ndim, h=1.0: W3 / h**2
+            )
+            plan = repro.create("_test_d2", (8, 16), mode="x", backend="jnp")
+            ref = repro.create(W3, (8, 16), mode="x", backend="jnp")
+            data = rand((8, 16))
+            np.testing.assert_array_equal(
+                repro.compute(plan, data), repro.compute(ref, data)
+            )
+            assert plan.op_name == "_test_d2"
+        finally:
+            api._REGISTRY.pop("_test_d2", None)
+
+    def test_band_only_operator_rejects_stencil_create(self):
+        try:
+            from repro.kernels.penta import diffusion_diagonals
+
+            repro.register_operator(
+                "_test_bands", diagonals=diffusion_diagonals
+            )
+            with pytest.raises(ValueError, match="no stencil weights"):
+                repro.create("_test_bands", (8, 8))
+        finally:
+            api._REGISTRY.pop("_test_bands", None)
+
+    def test_weights_only_operator_rejects_adi(self):
+        with pytest.raises(ValueError, match="no ADI band builder"):
+            repro.create("biharmonic", (8, 8), mode="adi", alpha=0.1)
+
+    def test_user_bands_drive_adi(self):
+        try:
+            from repro.kernels.penta import diffusion_diagonals
+
+            repro.register_operator(
+                "_test_heat", diagonals=diffusion_diagonals
+            )
+            op = repro.create(
+                "_test_heat", (8, 8), mode="adi", alpha=0.1, backend="jnp"
+            )
+            ref = repro.create(
+                "diffusion", (8, 8), mode="adi", alpha=0.1, backend="jnp"
+            )
+            data = rand((8, 8))
+            np.testing.assert_array_equal(
+                repro.compute(op, data), repro.compute(ref, data)
+            )
+            assert op.operator == "_test_heat"
+        finally:
+            api._REGISTRY.pop("_test_heat", None)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def _one_deprecation(fn, *args, **kwargs):
+    """Call fn, assert it emits exactly one DeprecationWarning, return
+    its result."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn(*args, **kwargs)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, f"{fn.__name__}: {len(dep)} DeprecationWarnings"
+    assert "four-function facade" in str(dep[0].message)
+    return out
+
+
+class TestDeprecationShims:
+    def test_2d_family(self):
+        data = rand((12, 16))
+        plan = _one_deprecation(
+            repro.stencil_create_2d, "x", "periodic", weights=W3,
+            backend="jnp",
+        )
+        new = repro.create(W3, (12, 16), mode="x", backend="jnp")
+        out = _one_deprecation(repro.stencil_compute_2d, plan, data)
+        np.testing.assert_array_equal(out, repro.compute(new, data))
+        _one_deprecation(repro.stencil_destroy_2d, plan)
+
+    def test_1d_batch_family(self):
+        data = rand((6, 32))
+        plan = _one_deprecation(
+            repro.stencil_create_1d_batch, "periodic", weights=W5,
+            backend="jnp",
+        )
+        new = repro.create(W5, (6, 32), mode="batch", backend="jnp")
+        out = _one_deprecation(repro.stencil_compute_1d_batch, plan, data)
+        np.testing.assert_array_equal(out, repro.compute(new, data))
+        _one_deprecation(repro.stencil_destroy_1d_batch, plan)
+
+    def test_3d_family(self):
+        data = rand((4, 6, 8))
+        w = repro.laplacian3d_weights()
+        plan = _one_deprecation(
+            repro.stencil_create_3d, "xyz", "periodic", weights=w,
+            backend="jnp",
+        )
+        new = repro.create("laplacian", (4, 6, 8), backend="jnp")
+        out = _one_deprecation(repro.stencil_compute_3d, plan, data)
+        np.testing.assert_array_equal(out, repro.compute(new, data))
+        _one_deprecation(repro.stencil_destroy_3d, plan)
+
+    def test_adi_factories(self):
+        data = rand((12, 12))
+        op = _one_deprecation(
+            repro.make_adi_operator, 12, 12, 0.3, cyclic=True, backend="jnp"
+        )
+        new = repro.create(
+            "hyperdiffusion", (12, 12), mode="adi", alpha=0.3, backend="jnp"
+        )
+        np.testing.assert_array_equal(
+            op.solve_y(op.solve_x(data)), repro.compute(new, data)
+        )
+        data3 = rand((6, 6, 6))
+        op3 = _one_deprecation(
+            repro.make_adi_operator_3d, 6, 6, 6, 0.1, cyclic=True,
+            backend="jnp", operator="diffusion",
+        )
+        new3 = repro.create(
+            "diffusion", (6, 6, 6), mode="adi", alpha=0.1, backend="jnp"
+        )
+        np.testing.assert_array_equal(
+            op3.solve_z(op3.solve_y(op3.solve_x(data3))),
+            repro.compute(new3, data3),
+        )
+
+
+# ---------------------------------------------------------------------------
+# destroy (idempotent) + swap
+# ---------------------------------------------------------------------------
+
+
+class TestDestroy:
+    def test_double_destroy_never_raises(self):
+        for plan, _ in _all_plans():
+            repro.destroy(plan)
+            repro.destroy(plan)  # the regression: second Destroy is a no-op
+            assert getattr(plan, "destroyed", True)
+
+    def test_destroy_none_and_buffers(self):
+        repro.destroy(None)
+        buf = DoubleBuffer(jnp.zeros((4, 4)))
+        repro.destroy(buf)
+        repro.destroy(buf)
+
+    def test_compute_refuses_destroyed_plan(self):
+        plan = repro.create("laplacian", (8, 8), backend="jnp")
+        repro.destroy(plan)
+        with pytest.raises(ValueError, match="destroyed"):
+            repro.compute(plan, jnp.zeros((8, 8)))
+
+    def test_plan_destroy_idempotent_via_legacy_name(self):
+        plan = repro.create(W3, (8, 8), backend="jnp")
+        repro.plan_destroy(plan)
+        repro.plan_destroy(plan)
+
+    def test_jit_compute_refuses_destroyed_plan(self):
+        """The destroyed mark rides the pytree aux, so even a warm jit
+        cache refuses a destroyed plan (new treedef -> retrace -> raise)."""
+        step = jax.jit(lambda p, x: repro.compute(p, x))
+        for plan, data in _all_plans():
+            step(plan, data)  # warm the trace with the live plan
+            repro.destroy(plan)
+            with pytest.raises(ValueError, match="destroyed"):
+                step(plan, data)
+
+    def test_destroyed_mark_survives_pytree_roundtrip(self):
+        plan = repro.create("laplacian", (8, 8), backend="jnp")
+        repro.destroy(plan)
+        leaves, treedef = jax.tree_util.tree_flatten(plan)
+        rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert rebuilt.destroyed
+
+
+class TestSwap:
+    def test_pair_swap(self):
+        a, b = jnp.zeros((4,)), jnp.ones((4,))
+        new = repro.swap((a, b))
+        assert new[0] is b and new[1] is a
+
+    def test_double_buffer_swap(self):
+        buf = DoubleBuffer(jnp.zeros((4,)), jnp.ones((4,)))
+        old_new = buf.new
+        out = repro.swap(buf)
+        assert out is buf and buf.old is old_new
+
+    def test_swap_rejects_junk(self):
+        with pytest.raises(TypeError, match="swap wants"):
+            repro.swap(42)
+
+    def test_timestep_idiom(self):
+        plan = repro.create("laplacian", (8, 8), backend="jnp")
+        cur = rand((8, 8))
+        prev = jnp.zeros_like(cur)
+        for _ in range(2):
+            prev = repro.compute(plan, cur)
+            cur, prev = repro.swap((prev, cur))
+        assert cur.shape == (8, 8)

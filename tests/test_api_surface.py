@@ -1,0 +1,71 @@
+"""Public-API snapshot: ``repro.__all__`` against a committed list.
+
+Accidental surface drift — a helper leaking to the top level, a public
+name silently vanishing in a refactor — fails CI here instead of landing
+unnoticed.  Changing the surface is fine; it just has to be done on
+purpose, by updating EXPECTED_SURFACE in the same PR."""
+
+import repro
+
+# The committed surface (PR 5, the four-function facade redesign).
+EXPECTED_SURFACE = sorted(
+    [
+        # the four-function facade + operator registry
+        "create",
+        "compute",
+        "swap",
+        "destroy",
+        "register_operator",
+        "get_operator",
+        "operator_names",
+        "OperatorDef",
+        # plan classes (pytree-native)
+        "PlanCore",
+        "Stencil2D",
+        "StencilBatch1D",
+        "Stencil3D",
+        "ADIOperator",
+        "ADIOperator3D",
+        "DoubleBuffer",
+        # engine-level destroy + weight helpers
+        "plan_destroy",
+        "central_difference_weights",
+        "laplacian3d_weights",
+        # deprecated pre-facade entry points (one release)
+        "stencil_create_2d",
+        "stencil_compute_2d",
+        "stencil_destroy_2d",
+        "stencil_create_1d_batch",
+        "stencil_compute_1d_batch",
+        "stencil_destroy_1d_batch",
+        "stencil_create_3d",
+        "stencil_compute_3d",
+        "stencil_destroy_3d",
+        "make_adi_operator",
+        "make_adi_operator_3d",
+    ]
+)
+
+
+def test_all_matches_committed_snapshot():
+    assert sorted(repro.__all__) == EXPECTED_SURFACE, (
+        "repro.__all__ drifted from the committed snapshot; if the change "
+        "is deliberate, update EXPECTED_SURFACE in tests/test_api_surface.py"
+    )
+
+
+def test_no_duplicates_in_all():
+    assert len(repro.__all__) == len(set(repro.__all__))
+
+
+def test_every_name_importable_and_bound():
+    for name in repro.__all__:
+        assert hasattr(repro, name), f"repro.{name} in __all__ but missing"
+        assert getattr(repro, name) is not None
+
+
+def test_star_import_matches_all():
+    ns = {}
+    exec("from repro import *", ns)  # noqa: S102 — the point of the test
+    exported = {k for k in ns if not k.startswith("_")}
+    assert exported == set(repro.__all__)

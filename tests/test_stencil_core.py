@@ -166,13 +166,19 @@ class TestPlanCore:
                 )
 
     def test_destroy_is_shared(self):
-        assert (
-            stencil_destroy_2d
-            is stencil_destroy_1d_batch
-            is stencil_destroy_3d
-        )
-        for plan in self._plans():
-            stencil_destroy_2d(plan)  # all families accepted, all no-ops
+        # the legacy destroys are now deprecation shims over the one
+        # shared plan_destroy (identity of the underlying engine call,
+        # not of the shim wrappers)
+        from repro.core.stencil import plan_destroy
+
+        for plan, shim in zip(
+            self._plans(),
+            (stencil_destroy_2d, stencil_destroy_1d_batch,
+             stencil_destroy_3d),
+        ):
+            shim(plan)  # all families accepted, all mark-and-return
+            assert plan.destroyed
+            plan_destroy(plan)  # shared engine destroy stays idempotent
 
     def test_call_aliases_apply(self):
         rng = np.random.default_rng(0)
