@@ -1,0 +1,87 @@
+"""Static analysis for plans and operators: invariant rules + stencil lint.
+
+Three passes, one currency (:class:`Finding`):
+
+- :mod:`repro.analysis.rules` — the declarative invariant engine over
+  jaxprs, compiled HLO text, plans, and callables (``no_transpose``,
+  ``no_dtype_upcast``, ``no_host_callback``, ``donation_applied``,
+  ``retrace_budget``, ``pallas_grid_feasible``).
+- :mod:`repro.analysis.stencil_lint` — Create/register-time operator
+  checks (moment/Taylor conditions, symmetry, zero row sum, ADI band
+  topology and conditioning), surfaced via the ``lint=`` knob on
+  :func:`repro.create` / :func:`repro.register_operator`.
+- :mod:`repro.analysis.audit` — the operator × plan-family × backend
+  matrix behind ``python -m repro.analysis``, the fail-closed CI gate.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.audit import (
+    BACKENDS,
+    FAMILIES,
+    AuditResult,
+    Report,
+    run_audit,
+)
+from repro.analysis.findings import (
+    ERROR,
+    LINT_MODES,
+    SEVERITIES,
+    WARNING,
+    Finding,
+    LintError,
+    StencilLintWarning,
+    check_lint_mode,
+    errors,
+    surface,
+)
+from repro.analysis.rules import (
+    RULES,
+    Rule,
+    all_primitives,
+    check_hlo,
+    check_jaxpr,
+    check_plan,
+    iter_eqns,
+    retrace_count,
+    rule,
+)
+from repro.analysis.stencil_lint import (
+    check_moments,
+    check_symmetry,
+    check_zero_sum,
+    lint_adi,
+    lint_operator,
+)
+
+__all__ = [
+    "BACKENDS",
+    "ERROR",
+    "FAMILIES",
+    "LINT_MODES",
+    "RULES",
+    "SEVERITIES",
+    "WARNING",
+    "AuditResult",
+    "Finding",
+    "LintError",
+    "Report",
+    "Rule",
+    "StencilLintWarning",
+    "all_primitives",
+    "check_hlo",
+    "check_jaxpr",
+    "check_lint_mode",
+    "check_moments",
+    "check_plan",
+    "check_symmetry",
+    "check_zero_sum",
+    "errors",
+    "iter_eqns",
+    "lint_adi",
+    "lint_operator",
+    "retrace_count",
+    "rule",
+    "run_audit",
+    "surface",
+]

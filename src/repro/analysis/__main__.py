@@ -1,0 +1,111 @@
+"""``python -m repro.analysis`` — the fail-closed static-analysis gate.
+
+Audits every registry operator × plan family × backend (see
+:mod:`repro.analysis.audit`), writes a JSON report, and exits nonzero if
+any rule is violated.  CI runs this as a required job and uploads the
+report artifact; ``--seed-violation`` exists so the gate can prove it
+actually fails when a transpose or dtype upcast sneaks into a hot path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=(
+            "Audit hot-path invariants (transpose-free ADI, no fp64 creep, "
+            "donation, retrace budget, Pallas grid feasibility) plus "
+            "operator lint over the full operator x plan-family matrix."
+        ),
+    )
+    p.add_argument(
+        "--out", default=None, metavar="PATH",
+        help="write the JSON report here ('-' or unset: stdout summary only)",
+    )
+    p.add_argument(
+        "--families", default=None,
+        help="comma-separated plan families (default: all)",
+    )
+    p.add_argument(
+        "--operators", default=None,
+        help="comma-separated registry operators (default: all)",
+    )
+    p.add_argument(
+        "--backends", default=None,
+        help="comma-separated backends (default: jnp,pallas)",
+    )
+    p.add_argument(
+        "--seed-violation", default=None, metavar="KIND",
+        choices=("transpose", "upcast"),
+        help=(
+            "deliberately inject a defect into one hot path; the gate must "
+            "then exit nonzero naming the primitive (fail-closed self-test)"
+        ),
+    )
+    p.add_argument(
+        "--no-retrace", action="store_true",
+        help="skip the per-family retrace probes (faster)",
+    )
+    p.add_argument(
+        "--list-rules", action="store_true",
+        help="print the registered rules and exit",
+    )
+    p.add_argument(
+        "-q", "--quiet", action="store_true",
+        help="suppress the per-cell summary lines",
+    )
+    args = p.parse_args(argv)
+
+    from repro.analysis import rules as _rules
+
+    if args.list_rules:
+        for name in sorted(_rules.RULES):
+            r = _rules.RULES[name]
+            print(f"{name:24s} [{r.kind}] {r.doc}")
+        return 0
+
+    from repro.analysis.audit import run_audit
+
+    split = lambda s: tuple(x for x in s.split(",") if x) if s else None  # noqa: E731
+    report = run_audit(
+        operators=split(args.operators),
+        families=split(args.families),
+        backends=split(args.backends),
+        seed_violation=args.seed_violation,
+        retrace=not args.no_retrace,
+    )
+
+    if not args.quiet:
+        for r in report.results:
+            if r.skipped is not None:
+                continue
+            tag = f"{r.family}/{r.operator}/{r.backend}"
+            if r.seeded:
+                tag += f" (seeded: {r.seeded})"
+            status = "ok" if r.ok else "FAIL"
+            print(f"[{status:4s}] {tag}  rules={','.join(r.rules)}")
+            for f in r.findings:
+                print(f"       - {f}")
+    audited = sum(1 for r in report.results if r.skipped is None)
+    print(
+        f"audited {audited} cells "
+        f"({len(report.results) - audited} skipped): "
+        f"{len(report.violations)} violation(s)"
+    )
+
+    if args.out and args.out != "-":
+        with open(args.out, "w", encoding="utf-8") as fh:
+            json.dump(report.to_dict(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"report written to {args.out}")
+
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,355 @@
+"""The audit matrix: every registry operator × plan family × backend.
+
+For each combination that the operator supports, the auditor Creates a
+small plan, traces its Compute, and runs the invariant rules
+(:mod:`repro.analysis.rules`) plus the operator lint
+(:mod:`repro.analysis.stencil_lint`):
+
+- jaxpr rules (``no_dtype_upcast``, ``no_host_callback`` everywhere;
+  ``no_transpose`` on the families that promise it — the ADI sweeps and
+  the fused Cahn–Hilliard step, audited on the jnp backend where the
+  XLA-graph layout contract lives);
+- the ``pallas_grid_feasible`` plan rule;
+- a per-family ``retrace_budget`` probe (three structurally identical
+  plans through one jitted ``compute`` must produce one trace);
+- the ``donation_applied`` HLO rule on the compiled donated evolve driver
+  of the fused Cahn–Hilliard step.
+
+``seed_violation=`` deliberately injects a defect (``'transpose'`` or
+``'upcast'``) into one hot path — the fail-closed proof that a violated
+invariant actually trips the gate, with the offending primitive named in
+the JSON report.
+
+Shapes are deliberately tiny (tracing dominates anyway); the invariants
+checked are shape-generic structural properties of the traced program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import rules as _rules
+from repro.analysis import stencil_lint as _lint
+from repro.analysis.findings import Finding, errors
+
+FAMILIES = (
+    "stencil2d", "batch1d", "stencil3d", "adi2d", "adi3d", "fused_ch",
+)
+BACKENDS = ("jnp", "pallas")
+SEED_VIOLATIONS = ("transpose", "upcast")
+
+# the families whose Compute promises a transpose-free trace (the ADI
+# layout contract; asserted on the jnp backend, where the promise is
+# about the XLA graph — Pallas kernels own their layout explicitly)
+TRANSPOSE_FREE = ("adi2d", "adi3d", "fused_ch")
+
+DEFAULT_SHAPES = {
+    "stencil2d": (32, 32),
+    "batch1d": (8, 64),
+    "stencil3d": (8, 12, 16),
+    "adi2d": (32, 32),  # square: the seeded-transpose wrapper stays valid
+    "adi3d": (8, 12, 16),
+    "fused_ch": (32, 32),
+}
+_ADI_ALPHA = 0.2
+
+
+class _Skip(Exception):
+    """This operator/family/backend combination does not apply."""
+
+
+@dataclasses.dataclass
+class AuditResult:
+    """One audited cell of the operator × family × backend matrix."""
+
+    family: str
+    operator: str
+    backend: str
+    rules: tuple
+    findings: list
+    skipped: str | None = None
+    seeded: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return not errors(self.findings)
+
+    def to_dict(self) -> dict:
+        return {
+            "family": self.family,
+            "operator": self.operator,
+            "backend": self.backend,
+            "rules": list(self.rules),
+            "findings": [f.to_dict() for f in self.findings],
+            "skipped": self.skipped,
+            "seeded": self.seeded,
+            "ok": self.ok,
+        }
+
+
+@dataclasses.dataclass
+class Report:
+    """The whole audit run: results + provenance."""
+
+    results: list
+    meta: dict
+
+    @property
+    def violations(self) -> list:
+        return [r for r in self.results if not r.ok]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> dict:
+        return {
+            "meta": self.meta,
+            "ok": self.ok,
+            "violations": len(self.violations),
+            "results": [r.to_dict() for r in self.results],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Plan construction per family
+# ---------------------------------------------------------------------------
+
+
+def _make_plan(family: str, opname: str, backend: str, shape):
+    from repro import api
+
+    opdef = api.get_operator(opname)
+    if family in ("adi2d", "adi3d"):
+        if opdef.diagonals is None:
+            raise _Skip("operator defines no ADI bands")
+        return api.create(
+            opname, shape, mode="adi", alpha=_ADI_ALPHA, backend=backend,
+            lint="off",
+        )
+    if opdef.weights is None:
+        raise _Skip("operator defines no stencil weights")
+    mode = "batch" if family == "batch1d" else None
+    try:
+        return api.create(
+            opname, shape, bc="periodic", mode=mode, backend=backend,
+            lint="off",
+        )
+    except ValueError as e:
+        # weights builder refuses this dimensionality (e.g. 3D biharmonic)
+        raise _Skip(str(e)) from None
+
+
+def _make_ch_solver(shape, backend: str):
+    from repro.core.cahn_hilliard import CahnHilliardADI, CHConfig
+
+    ny, nx = shape
+    return CahnHilliardADI(
+        CHConfig(nx=nx, ny=ny, dt=1e-3, rhs_mode="fused", backend=backend)
+    )
+
+
+def _seeded_fn(fn, seed: str | None, shape):
+    """Wrap a hot-path callable with a deliberately injected defect."""
+    if seed is None:
+        x = jnp.zeros(shape, jnp.float64)
+        return fn, (x,)
+    if seed == "transpose":
+        x = jnp.zeros(shape, jnp.float64)
+        return (lambda v: fn(v.T).T), (x,)
+    if seed == "upcast":
+        x32 = jnp.zeros(shape, jnp.float32)
+        return (lambda v: fn(v.astype(jnp.float64))), (x32,)
+    raise ValueError(
+        f"seed_violation must be one of {SEED_VIOLATIONS}, got {seed!r}"
+    )
+
+
+def _jaxpr_rules_for(family: str, backend: str) -> list:
+    names = ["no_dtype_upcast", "no_host_callback"]
+    if family in TRANSPOSE_FREE and backend == "jnp":
+        names.insert(0, "no_transpose")
+    return names
+
+
+# ---------------------------------------------------------------------------
+# The audit driver
+# ---------------------------------------------------------------------------
+
+
+def _audit_cell(
+    family: str, opname: str, backend: str, shape, seed: str | None
+):
+    from repro import api
+
+    opdef = api.get_operator(opname)
+    rule_names = list(_jaxpr_rules_for(family, backend))
+    try:
+        if family == "fused_ch":
+            if opname != "hyperdiffusion":
+                raise _Skip("the CH scheme is the hyperdiffusion operator")
+            if backend != "jnp":
+                raise _Skip("fused CH audited on the jnp backend")
+            solver = _make_ch_solver(shape, backend)
+            from repro.core.cahn_hilliard import deep_quench_ic
+
+            c0 = deep_quench_ic(shape[0], shape[1], seed=0)
+            c1 = solver.initial_step(c0)
+            fn, args = (solver.step, (c1, c0))
+            if seed is not None:
+                base = solver.step
+                fn, args = _seeded_fn(
+                    lambda v: base(v, c0)[0], seed, shape
+                )
+            findings = _rules.check_jaxpr(
+                jax.make_jaxpr(fn)(*args), rule_names
+            )
+            # donation: the compiled chunked evolve driver must alias its
+            # donated carry buffers in the executable
+            rule_names.append("donation_applied")
+            hlo = (
+                solver.make_evolve(2).lower(c1, c0).compile().as_text()
+            )
+            findings += _rules.check_hlo(
+                hlo, ["donation_applied"], context={"min_aliased": 1}
+            )
+        else:
+            plan = _make_plan(family, opname, backend, shape)
+            base = lambda v: api.compute(plan, v)  # noqa: E731
+            fn, args = _seeded_fn(base, seed, shape)
+            findings = _rules.check_jaxpr(
+                jax.make_jaxpr(fn)(*args), rule_names
+            )
+            rule_names.append("pallas_grid_feasible")
+            findings += _rules.check_plan(plan, shape)
+        # operator lint rides along once per cell (cheap, numpy-only)
+        ndim = {"batch1d": 1, "stencil3d": 3}.get(family, 2)
+        if family in ("adi2d", "adi3d"):
+            findings += _lint.lint_adi(
+                opdef, shape[-1], _ADI_ALPHA, bc="periodic", cyclic=True,
+            )
+        else:
+            findings += _lint.lint_operator(opdef, ndim=ndim)
+        return AuditResult(
+            family=family, operator=opname, backend=backend,
+            rules=tuple(rule_names), findings=findings, seeded=seed,
+        )
+    except _Skip as s:
+        return AuditResult(
+            family=family, operator=opname, backend=backend,
+            rules=(), findings=[], skipped=str(s),
+        )
+
+
+def _retrace_cell(family: str, opname: str, shape):
+    """The per-family retrace probe: three structurally identical plans
+    through one jitted compute must trace exactly once."""
+    from repro import api
+
+    try:
+        plans = [_make_plan(family, opname, "jnp", shape) for _ in range(3)]
+    except _Skip as s:
+        return AuditResult(
+            family=family, operator=opname, backend="jnp",
+            rules=("retrace_budget",), findings=[], skipped=str(s),
+        )
+    x = jnp.zeros(shape, jnp.float64)
+    ctx = {"argsets": [(p, x) for p in plans], "budget": 1}
+    findings = _rules.RULES["retrace_budget"].check(api.compute, ctx)
+    return AuditResult(
+        family=family, operator=opname, backend="jnp",
+        rules=("retrace_budget",), findings=findings,
+    )
+
+
+def run_audit(
+    *,
+    operators=None,
+    families=None,
+    backends=None,
+    shapes=None,
+    seed_violation: str | None = None,
+    retrace: bool = True,
+) -> Report:
+    """Audit the operator × plan-family × backend matrix.
+
+    ``seed_violation`` injects the named defect into the ``adi2d``
+    hyperdiffusion/jnp cell (falling back to the first audited cell when
+    that one is filtered out) — the gate must then report it and exit
+    nonzero.  Returns a :class:`Report`; serialise with ``to_dict()``."""
+    from repro import api
+    from repro.tune.cache import host_fingerprint
+
+    # the library's numeric contract is fp64 (the tests enable x64
+    # globally); without it the fp64 hot paths silently truncate and the
+    # upcast rule audits the wrong program
+    jax.config.update("jax_enable_x64", True)
+
+    if seed_violation is not None and seed_violation not in SEED_VIOLATIONS:
+        raise ValueError(
+            f"seed_violation must be one of {SEED_VIOLATIONS}, "
+            f"got {seed_violation!r}"
+        )
+    operators = tuple(operators or api.operator_names())
+    families = tuple(families or FAMILIES)
+    backends = tuple(backends or BACKENDS)
+    shapes = {**DEFAULT_SHAPES, **(shapes or {})}
+
+    # the designated seeding cell: the flagship transpose-free hot path
+    seed_cell = None
+    if seed_violation is not None:
+        cells = [
+            (f, o, b)
+            for f in families
+            for o in operators
+            for b in backends
+        ]
+        preferred = ("adi2d", "hyperdiffusion", "jnp")
+        seed_cell = preferred if preferred in cells else cells[0]
+
+    results = []
+    for family in families:
+        for opname in operators:
+            for backend in backends:
+                seed = (
+                    seed_violation
+                    if seed_cell == (family, opname, backend)
+                    else None
+                )
+                results.append(
+                    _audit_cell(
+                        family, opname, backend, shapes[family], seed
+                    )
+                )
+        if retrace:
+            for opname in operators:
+                if family == "fused_ch":
+                    break  # chunk-compiled driver; cache identity is tested
+                cell = _retrace_cell(family, opname, shapes[family])
+                results.append(cell)
+                if cell.skipped is None:
+                    break  # one retrace probe per family is the budget
+
+    meta = {
+        "jax": jax.__version__,
+        "host": host_fingerprint(),
+        "operators": list(operators),
+        "families": list(families),
+        "backends": list(backends),
+        "seed_violation": seed_violation,
+        "rules": sorted(_rules.RULES),
+    }
+    return Report(results=results, meta=meta)
+
+
+__all__ = [
+    "BACKENDS",
+    "FAMILIES",
+    "AuditResult",
+    "Finding",
+    "Report",
+    "run_audit",
+]

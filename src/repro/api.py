@@ -45,7 +45,7 @@ alias one tuning entry.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax.numpy as jnp
 import numpy as np
@@ -86,9 +86,14 @@ class OperatorDef:
     stencil-only (``"biharmonic"``) or band-only (``"diffusion"``)."""
 
     name: str
-    weights: Optional[Callable] = None
-    diagonals: Optional[Callable] = None
+    weights: Callable | None = None
+    diagonals: Callable | None = None
     doc: str = ""
+    # declared analytic properties — what stencil-lint may verify.  None
+    # means "undeclared": lint never second-guesses math it wasn't told.
+    derivative: int | None = None
+    symmetric: bool | None = None
+    zero_sum: bool | None = None
 
 
 _REGISTRY: dict[str, OperatorDef] = {}
@@ -97,10 +102,14 @@ _REGISTRY: dict[str, OperatorDef] = {}
 def register_operator(
     name: str,
     *,
-    weights: Optional[Callable] = None,
-    diagonals: Optional[Callable] = None,
+    weights: Callable | None = None,
+    diagonals: Callable | None = None,
     doc: str = "",
     overwrite: bool = False,
+    derivative: int | None = None,
+    symmetric: bool | None = None,
+    zero_sum: bool | None = None,
+    lint: str = "warn",
 ) -> OperatorDef:
     """Register a named operator for :func:`create` (and the ADI band
     resolution in :mod:`repro.core.adi`).
@@ -111,7 +120,14 @@ def register_operator(
     five length-``n`` diagonals ``l2, l1, d, u1, u2``).  At least one
     must be given.  Re-registering an existing name raises unless
     ``overwrite=True`` (silent redefinition of e.g. ``"laplacian"`` would
-    change numerics at a distance — and alias stale autotune entries)."""
+    change numerics at a distance — and alias stale autotune entries).
+
+    ``derivative=``/``symmetric=``/``zero_sum=`` declare analytic
+    properties of the weights that stencil-lint verifies at register and
+    Create time (moment/Taylor conditions, central symmetry, zero row
+    sum); ``lint='off'|'warn'|'error'`` picks how register-time findings
+    surface (:class:`repro.analysis.StencilLintWarning` /
+    :class:`repro.analysis.LintError`)."""
     if not name or not isinstance(name, str):
         raise ValueError("operator name must be a non-empty string")
     if weights is None and diagonals is None:
@@ -124,8 +140,18 @@ def register_operator(
             "(pass overwrite=True to replace it)"
         )
     opdef = OperatorDef(
-        name=name, weights=weights, diagonals=diagonals, doc=doc
+        name=name, weights=weights, diagonals=diagonals, doc=doc,
+        derivative=derivative, symmetric=symmetric, zero_sum=zero_sum,
     )
+    if lint != "off" and weights is not None and (
+        derivative or symmetric or zero_sum
+    ):
+        from repro.analysis import lint_operator, surface
+
+        findings = []
+        for ndim in (1, 2, 3):
+            findings += lint_operator(opdef, ndim=ndim)
+        surface(findings, lint)
     _REGISTRY[name] = opdef
     return opdef
 
@@ -186,23 +212,35 @@ register_operator(
     "laplacian",
     weights=_laplacian_weights,
     doc="grad^2: 3-point / 5-point cross / 7-point box (units h^-2)",
+    derivative=2,
+    symmetric=True,
+    zero_sum=True,
 )
 register_operator(
     "biharmonic",
     weights=_biharmonic_weights,
     doc="grad^4: delta^4 / the paper's 5x5 eq.-(4) stencil (units h^-4)",
+    derivative=4,
+    symmetric=True,
+    zero_sum=True,
 )
 register_operator(
     "hyperdiffusion",
     weights=lambda ndim=1, h=1.0: _biharmonic_weights(ndim, h),
     diagonals=hyperdiffusion_diagonals,
     doc="implicit I + alpha delta^4 (ADI bands); explicit delta^4 weights",
+    derivative=4,
+    symmetric=True,
+    zero_sum=True,
 )
 register_operator(
     "diffusion",
     weights=lambda ndim=1, h=1.0: _laplacian_weights(ndim, h),
     diagonals=diffusion_diagonals,
     doc="implicit I - alpha delta^2 (ADI bands); explicit delta^2 weights",
+    derivative=2,
+    symmetric=True,
+    zero_sum=True,
 )
 
 
@@ -214,7 +252,7 @@ _BATCH_MODES = ("batch", "batch1d", "1d_batch")
 _EXTENT_KEYS = ("left", "right", "top", "bottom", "front", "back")
 
 
-def _resolve_direction(rank: int, mode: Optional[str], wndim: Optional[int]):
+def _resolve_direction(rank: int, mode: str | None, wndim: int | None):
     """Plan direction from the shape rank, the mode hint, and (when
     weights are an explicit array) their dimensionality."""
     if rank == 2:
@@ -247,22 +285,23 @@ def create(
     shape,
     *,
     bc: str = "periodic",
-    mode: Optional[str] = None,
+    mode: str | None = None,
     coeffs=None,
-    extents: Optional[dict] = None,
+    extents: dict | None = None,
     h: float = 1.0,
     dtype=None,
     alpha=None,
     alpha_y=None,
     alpha_z=None,
-    cyclic: Optional[bool] = None,
+    cyclic: bool | None = None,
     tile=None,
     backend: str = "auto",
-    interpret: Optional[bool] = None,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
+    interpret: bool | None = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
     tune: str = "off",
     tune_cache=None,
+    lint: str = "warn",
 ):
     """Create a plan — the one entry point for every plan family.
 
@@ -299,7 +338,15 @@ def create(
     anything else → plain pentadiagonal); an explicit ``cyclic=``
     overrides, but contradicting ``bc='np'`` with ``cyclic=True`` is an
     error.
+
+    ``lint='off'|'warn'|'error'`` runs Create-time stencil-lint (moment
+    conditions, ADI band topology/conditioning, Pallas grid feasibility)
+    and surfaces findings as :class:`repro.analysis.StencilLintWarning`
+    or :class:`repro.analysis.LintError`.
     """
+    from repro.analysis import check_lint_mode
+
+    check_lint_mode(lint)
     shape = tuple(int(s) for s in shape)
     rank = len(shape)
     if rank not in (2, 3):
@@ -339,6 +386,21 @@ def create(
                 f"bc={bc!r} asks for a non-cyclic operator but cyclic=True "
                 "was passed; drop one of them"
             )
+        if lint != "off":
+            from repro.analysis import lint_adi, surface
+
+            ax = alpha
+            ay = alpha if alpha_y is None else alpha_y
+            az = alpha if alpha_z is None else alpha_z
+            dirs = [("x", shape[-1], ax), ("y", shape[-2], ay)]
+            if rank == 3:
+                dirs.append(("z", shape[-3], az))
+            findings = []
+            for dname, n, a in dirs:
+                findings += lint_adi(
+                    opdef, n, a, bc=bc, cyclic=cyclic, direction=dname,
+                )
+            surface(findings, lint)
         common = dict(
             cyclic=cyclic,
             dtype=jnp.float64 if dtype is None else dtype,
@@ -435,10 +497,22 @@ def create(
         **ext_kw,
     )
     if batch:
-        return _stencil._create_1d_batch(bc, **common)
-    if rank == 2:
-        return _stencil._create_2d(direction, bc, **common)
-    return _stencil._create_3d(direction, bc, **common)
+        plan = _stencil._create_1d_batch(bc, **common)
+    elif rank == 2:
+        plan = _stencil._create_2d(direction, bc, **common)
+    else:
+        plan = _stencil._create_3d(direction, bc, **common)
+
+    if lint != "off":
+        from repro.analysis import check_plan, lint_operator, surface
+
+        findings = []
+        if opdef is not None:
+            wndim = 1 if batch else {"xy": 2, "xyz": 3}.get(direction, 1)
+            findings += lint_operator(opdef, ndim=wndim, h=h)
+        findings += check_plan(plan, shape, ("pallas_grid_feasible",))
+        surface(findings, lint)
+    return plan
 
 
 # ---------------------------------------------------------------------------

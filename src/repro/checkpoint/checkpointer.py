@@ -26,7 +26,7 @@ import queue
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import numpy as np
@@ -60,7 +60,7 @@ def save_pytree(
     directory: str,
     step: int,
     *,
-    metadata: Optional[Dict] = None,
+    metadata: dict | None = None,
 ) -> str:
     """Synchronous atomic save.  Returns the committed directory."""
     os.makedirs(directory, exist_ok=True)
@@ -107,7 +107,7 @@ def save_pytree(
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def latest_step(directory: str) -> int | None:
     try:
         with open(os.path.join(directory, _LATEST)) as f:
             name = f.read().strip()
@@ -120,7 +120,7 @@ def restore_pytree(
     template: Any,
     directory: str,
     *,
-    step: Optional[int] = None,
+    step: int | None = None,
     shardings: Any = None,
 ) -> Any:
     """Restore into the structure of ``template``.
@@ -142,7 +142,7 @@ def restore_pytree(
         treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(flat)
     )
     leaves = []
-    for (path, leaf), shard in zip(flat, shard_flat):
+    for (path, leaf), shard in zip(flat, shard_flat, strict=True):
         key = _leaf_key(path)
         info = manifest["leaves"].get(key)
         if info is None:
@@ -184,12 +184,12 @@ class Checkpointer:
         self.best_metric = best_metric
         self.best_mode = best_mode
         self._q: "queue.Queue" = queue.Queue()
-        self._err: Optional[BaseException] = None
+        self._err: BaseException | None = None
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     # -- async API -----------------------------------------------------------
-    def save_async(self, tree: Any, step: int, metadata: Optional[Dict] = None):
+    def save_async(self, tree: Any, step: int, metadata: dict | None = None):
         """Snapshot to host now; write in background."""
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         self._q.put(("save", host_tree, step, metadata))

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional
 
 from repro.models.layers import DTypePolicy
 from repro.models.moe import MoEConfig
@@ -36,15 +35,15 @@ class ArchConfig:
     vocab: int
     n_heads: int = 0  # 0 => attention-free
     n_kv_heads: int = 0
-    head_dim: Optional[int] = None
+    head_dim: int | None = None
     activation: str = "silu"
     gated_mlp: bool = True
     tie_embeddings: bool = False
     rope_theta: float = 1e4
     norm_eps: float = 1e-6
-    moe: Optional[MoEConfig] = None
-    rwkv: Optional[RWKVConfig] = None
-    mamba: Optional[MambaConfig] = None
+    moe: MoEConfig | None = None
+    rwkv: RWKVConfig | None = None
+    mamba: MambaConfig | None = None
     attn_every: int = 1  # hybrid: attn layer every k-th (jamba: 8)
     enc_layers: int = 0  # encoder-decoder only
     enc_seq: int = 1500  # whisper encoder frames after conv stub

@@ -37,7 +37,6 @@ the hyperdiffusion band for the backward-Euler heat operator
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +76,7 @@ def _band_builder(operator: str):
 def apply_along_x(
     plan: StencilBatch1D,
     field: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Apply a batched-1D plan along the x (last) axis of an (ny, nx) field:
     the ny rows are the batch."""
@@ -87,7 +86,7 @@ def apply_along_x(
 def apply_along_y(
     plan: StencilBatch1D,
     field: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Apply a batched-1D plan along the y (first) axis of an (ny, nx)
     field: the nx columns are the batch (the explicit path still
@@ -115,10 +114,10 @@ class ADIOperator:
     fac_y: CyclicPentaFactors | PentaFactors  # along y (length ny)
     cyclic: bool
     backend: str = "auto"
-    streams: Optional[int] = None
-    max_tile_bytes: Optional[int] = None
-    x_cfg: Optional[dict] = None  # tuned x-sweep config
-    y_cfg: Optional[dict] = None  # tuned y-sweep config
+    streams: int | None = None
+    max_tile_bytes: int | None = None
+    x_cfg: dict | None = None  # tuned x-sweep config
+    y_cfg: dict | None = None  # tuned y-sweep config
     operator: str = "hyperdiffusion"  # registry name the bands came from
 
     @property
@@ -126,7 +125,7 @@ class ADIOperator:
         """True once ``repro.destroy`` ran on this operator."""
         return getattr(self, "_destroyed", False)
 
-    def _cfg(self, cfg: Optional[dict]):
+    def _cfg(self, cfg: dict | None):
         cfg = cfg or {}
         return cfg.get("backend", self.backend), cfg.get("unroll", 1), cfg
 
@@ -189,6 +188,44 @@ class ADIOperator:
         return solve(
             self.fac_y, rhs, backend=backend, tn=cfg.get("tn"), unroll=unroll
         )
+
+    def grid_problems(self, shape) -> list:
+        """Why this operator cannot sweep an ``(ny, nx)`` field — factor
+        lengths vs extents plus tuned Pallas batch-tile divisibility
+        (the ``pallas_grid_feasible`` audit rule's probe)."""
+        ny, nx = (int(s) for s in shape)
+        problems = []
+        if _fac_len(self.fac_x) != nx or _fac_len(self.fac_y) != ny:
+            problems.append(
+                f"factor lengths (x={_fac_len(self.fac_x)}, "
+                f"y={_fac_len(self.fac_y)}) do not match the field "
+                f"({ny}, {nx}); the plan was Created for another shape"
+            )
+        problems += _cfg_tile_problems(self.x_cfg, "x", "tb", ny, "rows ny")
+        problems += _cfg_tile_problems(self.y_cfg, "y", "tn", nx, "lanes nx")
+        return problems
+
+
+def _fac_len(fac) -> int:
+    """System length of a (cyclic) pentadiagonal factor set."""
+    band = getattr(fac, "band", fac)
+    return int(band.sub.shape[0])
+
+
+def _cfg_tile_problems(cfg, sweep: str, key: str, extent: int, what: str):
+    """Tuned Pallas batch tiles must divide the batch they tile."""
+    cfg = cfg or {}
+    t = cfg.get(key)
+    if (
+        t is not None
+        and cfg.get("backend", "jnp") == "pallas"
+        and extent % int(t) != 0
+    ):
+        return [
+            f"{sweep}-sweep Pallas tile {key}={t} does not divide the "
+            f"batch of {what}={extent}"
+        ]
+    return []
 
 
 def _sweep_candidates(batch: int):
@@ -276,9 +313,9 @@ def _make_adi_operator(
     cyclic: bool = True,
     dtype=jnp.float64,
     backend: str = "auto",
-    alpha_over_h4_y: Optional[float] = None,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
+    alpha_over_h4_y: float | None = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
     tune: str = "off",
     tune_cache=None,
     operator: str = "hyperdiffusion",
@@ -337,11 +374,11 @@ class ADIOperator3D:
     fac_z: CyclicPentaFactors | PentaFactors  # along z (length nz)
     cyclic: bool
     backend: str = "auto"
-    streams: Optional[int] = None
-    max_tile_bytes: Optional[int] = None
-    x_cfg: Optional[dict] = None
-    y_cfg: Optional[dict] = None
-    z_cfg: Optional[dict] = None
+    streams: int | None = None
+    max_tile_bytes: int | None = None
+    x_cfg: dict | None = None
+    y_cfg: dict | None = None
+    z_cfg: dict | None = None
     operator: str = "hyperdiffusion"  # registry name the bands came from
 
     @property
@@ -349,7 +386,7 @@ class ADIOperator3D:
         """True once ``repro.destroy`` ran on this operator."""
         return getattr(self, "_destroyed", False)
 
-    def _cfg(self, cfg: Optional[dict]):
+    def _cfg(self, cfg: dict | None):
         cfg = cfg or {}
         return cfg.get("backend", self.backend), cfg.get("unroll", 1), cfg
 
@@ -448,6 +485,29 @@ class ADIOperator3D:
             )
         return out.reshape(rhs.shape)
 
+    def grid_problems(self, shape) -> list:
+        """Why this operator cannot sweep an ``(nz, ny, nx)`` box — factor
+        lengths vs extents plus tuned Pallas batch-tile divisibility."""
+        nz, ny, nx = (int(s) for s in shape)
+        problems = []
+        lens = (
+            _fac_len(self.fac_x), _fac_len(self.fac_y), _fac_len(self.fac_z)
+        )
+        if lens != (nx, ny, nz):
+            problems.append(
+                f"factor lengths (x={lens[0]}, y={lens[1]}, z={lens[2]}) do "
+                f"not match the field ({nz}, {ny}, {nx}); the plan was "
+                "Created for another shape"
+            )
+        problems += _cfg_tile_problems(
+            self.x_cfg, "x", "tb", nz * ny, "rows nz*ny"
+        )
+        problems += _cfg_tile_problems(self.y_cfg, "y", "tn", nx, "lanes nx")
+        problems += _cfg_tile_problems(
+            self.z_cfg, "z", "tn", ny * nx, "lanes ny*nx"
+        )
+        return problems
+
 
 def _autotune_adi3d(
     op: ADIOperator3D, nz: int, ny: int, nx: int, dtype, mode: str, cache
@@ -507,10 +567,10 @@ def _make_adi_operator_3d(
     cyclic: bool = True,
     dtype=jnp.float64,
     backend: str = "auto",
-    alpha_y: Optional[float] = None,
-    alpha_z: Optional[float] = None,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
+    alpha_y: float | None = None,
+    alpha_z: float | None = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
     tune: str = "off",
     tune_cache=None,
     operator: str = "hyperdiffusion",
@@ -586,11 +646,11 @@ def _register_adi_pytree(cls, fac_fields, cfg_fields, static_fields):
         return children, aux + (getattr(op, "_destroyed", False),)
 
     def unflatten(aux, children):
-        kwargs = dict(zip(fac_fields, children))
-        kwargs.update(zip(static_fields, aux[: len(static_fields)]))
+        kwargs = dict(zip(fac_fields, children, strict=True))
+        kwargs.update(zip(static_fields, aux[: len(static_fields)], strict=True))
         kwargs.update(
             (f, _thaw_cfg(v))
-            for f, v in zip(cfg_fields, aux[len(static_fields):-1])
+            for f, v in zip(cfg_fields, aux[len(static_fields):-1], strict=True)
         )
         op = cls(**kwargs)
         if aux[-1]:

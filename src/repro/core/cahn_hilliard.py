@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Tuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -83,7 +83,7 @@ def cube_laplacian_point_fn(windows, coeffs):
     """The paper's flagship function pointer: apply Laplacian weights to
     (C^3 - C) of each window — nonlinearity inside the stencil sweep."""
     out = None
-    for w, c in zip(windows, coeffs):
+    for w, c in zip(windows, coeffs, strict=True):
         term = c * (w * w * w - w)
         out = term if out is None else out + term
     return out
@@ -107,8 +107,8 @@ class CHConfig:
     rhs_mode: str = "fused"  # 'fused' | 'stencil' | 'batch1d'
     backend: str = "auto"  # kernel backend for stencils & penta
     # streamed tiled execution (cuSten nStreams) for domains > one tile:
-    streams: Optional[int] = None
-    max_tile_bytes: Optional[int] = None
+    streams: int | None = None
+    max_tile_bytes: int | None = None
     # Create-time autotuning ('off' | 'cached' | 'force'): measure solve /
     # stream configurations once at Create, remember them on disk
     tune: str = "off"
@@ -418,7 +418,7 @@ class CahnHilliardADI:
     # -- one full scheme step (eq. 2) ---------------------------------------
     def step(
         self, c_n: jnp.ndarray, c_nm1: jnp.ndarray
-    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """One full-scheme step.  Transpose-free end to end: the fused path
         assembles the RHS straight into the x-sweep; both sweeps consume
         their Create-time factors in their native layout."""
@@ -500,7 +500,7 @@ class CahnHilliardADI:
         n_steps: int,
         *,
         save_every: int = 0,
-        metrics_fn: Optional[Callable] = None,
+        metrics_fn: Callable | None = None,
     ):
         """Integrate ``n_steps`` of the full scheme (plus the bootstrap step).
 
@@ -519,7 +519,7 @@ def ch_evolve(
     n_steps: int,
     *,
     save_every: int = 0,
-    metrics_fn: Optional[Callable] = None,
+    metrics_fn: Callable | None = None,
 ):
     """Multi-step driver with a donated, double-buffered scan carry.
 

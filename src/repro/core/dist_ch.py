@@ -21,7 +21,6 @@ is collective-free).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -131,11 +130,11 @@ class DistributedCahnHilliard:
         self,
         plan,
         field: jnp.ndarray,
-        out_init: Optional[jnp.ndarray] = None,
+        out_init: jnp.ndarray | None = None,
         *,
-        streams: Optional[int] = None,
-        max_tile_bytes: Optional[int] = None,
-        chunk_rows: Optional[int] = None,
+        streams: int | None = None,
+        max_tile_bytes: int | None = None,
+        chunk_rows: int | None = None,
     ) -> jnp.ndarray:
         """Apply a stencil plan to an oversized field through this solver's
         mesh: y-chunks stream sequentially (cuSten's row-chunk streams),
@@ -157,7 +156,7 @@ class DistributedCahnHilliard:
     def field_sharding(self) -> NamedSharding:
         return NamedSharding(self.dd.mesh, self.layouts.block)
 
-    def input_specs(self, ensemble: Optional[int] = None):
+    def input_specs(self, ensemble: int | None = None):
         """ShapeDtypeStruct stand-ins for dry-run lowering."""
         cfg = self.cfg
         shape = (cfg.ny, cfg.nx)

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Tuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -43,11 +43,11 @@ class DomainDecomposition:
     """How the (ny, nx) grid maps onto the device mesh."""
 
     mesh: Mesh
-    y_axis: Optional[str] = "data"
-    x_axis: Optional[str] = "model"
-    ensemble_axis: Optional[str] = None  # e.g. "pod" on the multi-pod mesh
+    y_axis: str | None = "data"
+    x_axis: str | None = "model"
+    ensemble_axis: str | None = None  # e.g. "pod" on the multi-pod mesh
 
-    def n_shards(self, axis: Optional[str]) -> int:
+    def n_shards(self, axis: str | None) -> int:
         if axis is None:
             return 1
         return self.mesh.shape[axis]
@@ -62,7 +62,7 @@ class DomainDecomposition:
         return NamedSharding(self.mesh, self.field_spec)
 
 
-def _exchange_1d(block, lo: int, hi: int, axis: int, axis_name: Optional[str], n: int):
+def _exchange_1d(block, lo: int, hi: int, axis: int, axis_name: str | None, n: int):
     """Gather (lo, hi) halo strips along ``axis`` from the circular
     neighbours over ``axis_name``.  Returns (lo_halo, hi_halo) blocks."""
 
@@ -91,7 +91,7 @@ def _exchange_1d(block, lo: int, hi: int, axis: int, axis_name: Optional[str], n
 def halo_pad(
     block: jnp.ndarray,
     *,
-    halos: Tuple[int, int, int, int],  # (top, bottom, left, right)
+    halos: tuple[int, int, int, int],  # (top, bottom, left, right)
     dd: DomainDecomposition,
 ) -> jnp.ndarray:
     """Return the block padded with neighbour halos: shape
@@ -139,7 +139,7 @@ def distributed_stencil_apply(
     plan: Stencil2D,
     field: jnp.ndarray,
     dd: DomainDecomposition,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     overlap: bool = True,
 ) -> jnp.ndarray:

@@ -59,7 +59,8 @@ Oversized domains stream as z-slabs through
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, ClassVar, Optional, Tuple
+from collections.abc import Callable
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +75,7 @@ _DIRECTIONS_3D = ("x", "y", "z", "xyz")
 _BCS = ("periodic", "np")
 
 
-def _split_extents(n_points: int, lo: Optional[int], hi: Optional[int]):
+def _split_extents(n_points: int, lo: int | None, hi: int | None):
     """Resolve a stencil length into (lo, hi) extents around the centre."""
     if lo is None and hi is None:
         if n_points % 2 == 0:
@@ -123,15 +124,15 @@ class PlanCore:
     bc: str
     coeffs: jnp.ndarray  # stencil weights (weighted mode) or fn coefficients
     point_fn: Callable = weighted_point_fn
-    tile: Optional[Tuple[int, ...]] = None
+    tile: tuple[int, ...] | None = None
     backend: str = "auto"
-    interpret: Optional[bool] = None
-    streams: Optional[int] = None
-    max_tile_bytes: Optional[int] = None
+    interpret: bool | None = None
+    streams: int | None = None
+    max_tile_bytes: int | None = None
     # registry provenance: set when the weights came from a named operator
     # (repro.api.get_operator) — part of the autotune cache key, so two
     # operators that happen to share a geometry cannot alias one entry
-    op_name: Optional[str] = None
+    op_name: str | None = None
 
     kernel_name: ClassVar[str] = "plan"
 
@@ -164,7 +165,7 @@ class PlanCore:
 
     # -- Compute ----------------------------------------------------------
     def apply(
-        self, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
+        self, data: jnp.ndarray, out_init: jnp.ndarray | None = None
     ) -> jnp.ndarray:
         """Apply the stencil to ``data`` (the Compute call).
 
@@ -203,7 +204,7 @@ class PlanCore:
         )
 
     def __call__(
-        self, data: jnp.ndarray, out_init: Optional[jnp.ndarray] = None
+        self, data: jnp.ndarray, out_init: jnp.ndarray | None = None
     ) -> jnp.ndarray:
         return self.apply(data, out_init)
 
@@ -315,7 +316,8 @@ def _register_plan_pytree(cls) -> None:
         return (plan.coeffs,), aux + (plan.destroyed,)
 
     def unflatten(aux, leaves):
-        kwargs = dict(zip(static, aux))
+        # aux carries a trailing destroyed flag beyond the static fields
+        kwargs = dict(zip(static, aux, strict=False))
         kwargs["coeffs"] = leaves[0]
         plan = cls(**kwargs)
         if aux[-1]:
@@ -360,8 +362,29 @@ class Stencil2D(PlanCore):
         return (self.left + self.right + 1) * (self.top + self.bottom + 1)
 
     @property
-    def halo(self) -> Tuple[int, int, int, int]:
+    def halo(self) -> tuple[int, int, int, int]:
         return (self.left, self.right, self.top, self.bottom)
+
+    def grid_problems(self, shape) -> list:
+        """Why this plan's tile/grid cannot cover ``shape`` — empty when
+        feasible (the ``pallas_grid_feasible`` audit rule's probe)."""
+        ny, nx = (int(s) for s in shape)
+        hx, hy = max(self.left, self.right), max(self.top, self.bottom)
+        problems = []
+        if hy > ny or hx > nx:
+            problems.append(
+                f"halo (hy={hy}, hx={hx}) exceeds the field ({ny}, {nx}); "
+                "the stencil is wider than the domain"
+            )
+        if self.tile is not None and self.backend != "jnp":
+            ty, tx = self.tile
+            if not ops.pallas_grid_ok(ny, nx, ty, tx, hx, hy):
+                problems.append(
+                    f"explicit tile ({ty}, {tx}) cannot grid the field "
+                    f"({ny}, {nx}) with halo (hy={hy}, hx={hx}): the Pallas "
+                    "path needs tile|field and halo<=tile"
+                )
+        return problems
 
 
 def _create_2d(
@@ -369,21 +392,21 @@ def _create_2d(
     bc: str,
     *,
     weights=None,
-    func: Optional[Callable] = None,
+    func: Callable | None = None,
     coeffs=None,
-    num_sten_left: Optional[int] = None,
-    num_sten_right: Optional[int] = None,
-    num_sten_top: Optional[int] = None,
-    num_sten_bottom: Optional[int] = None,
-    tile: Optional[Tuple[int, int]] = None,
+    num_sten_left: int | None = None,
+    num_sten_right: int | None = None,
+    num_sten_top: int | None = None,
+    num_sten_bottom: int | None = None,
+    tile: tuple[int, int] | None = None,
     backend: str = "auto",
-    interpret: Optional[bool] = None,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
+    interpret: bool | None = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
     tune: str = "off",
-    shape: Optional[Tuple[int, int]] = None,
+    shape: tuple[int, int] | None = None,
     tune_cache=None,
-    op_name: Optional[str] = None,
+    op_name: str | None = None,
 ) -> Stencil2D:
     """Create a stencil plan (the Create call).
 
@@ -491,27 +514,48 @@ class StencilBatch1D(PlanCore):
         return self.left + self.right + 1
 
     @property
-    def halo(self) -> Tuple[int, int]:
+    def halo(self) -> tuple[int, int]:
         return (self.left, self.right)
+
+    def grid_problems(self, shape) -> list:
+        """Why this plan's tile/grid cannot cover the ``(B, M)`` stack —
+        empty when feasible."""
+        B, M = (int(s) for s in shape)
+        hm = max(self.left, self.right)
+        problems = []
+        if hm > M:
+            problems.append(
+                f"line halo hm={hm} exceeds the row length M={M}; the "
+                "stencil is wider than the line"
+            )
+        if self.tile is not None and self.backend != "jnp":
+            tb, tm = self.tile
+            if not ops.pallas_grid_ok_1d(B, M, tb, tm, hm):
+                problems.append(
+                    f"explicit tile ({tb}, {tm}) cannot grid the stack "
+                    f"({B}, {M}) with halo hm={hm}: the Pallas path needs "
+                    "tile|stack and halo<=tile"
+                )
+        return problems
 
 
 def _create_1d_batch(
     bc: str,
     *,
     weights=None,
-    func: Optional[Callable] = None,
+    func: Callable | None = None,
     coeffs=None,
-    num_sten_left: Optional[int] = None,
-    num_sten_right: Optional[int] = None,
-    tile: Optional[Tuple[int, int]] = None,
+    num_sten_left: int | None = None,
+    num_sten_right: int | None = None,
+    tile: tuple[int, int] | None = None,
     backend: str = "auto",
-    interpret: Optional[bool] = None,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
+    interpret: bool | None = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
     tune: str = "off",
-    shape: Optional[Tuple[int, int]] = None,
+    shape: tuple[int, int] | None = None,
     tune_cache=None,
-    op_name: Optional[str] = None,
+    op_name: str | None = None,
 ) -> StencilBatch1D:
     """Create a batched-1D stencil plan (cuSten ``custenCreate1DBatch*``).
 
@@ -612,16 +656,40 @@ class Stencil3D(PlanCore):
         )
 
     @property
-    def halo(self) -> Tuple[int, int, int, int, int, int]:
+    def halo(self) -> tuple[int, int, int, int, int, int]:
         return self.halos
 
     @property
-    def halos(self) -> Tuple[int, int, int, int, int, int]:
+    def halos(self) -> tuple[int, int, int, int, int, int]:
         """(front, back, top, bottom, left, right) — the kernel's order."""
         return (
             self.front, self.back, self.top, self.bottom,
             self.left, self.right,
         )
+
+    def grid_problems(self, shape) -> list:
+        """Why this plan's tile/grid cannot cover the ``(nz, ny, nx)`` box
+        — empty when feasible."""
+        nz, ny, nx = (int(s) for s in shape)
+        hz = max(self.front, self.back)
+        hy = max(self.top, self.bottom)
+        hx = max(self.left, self.right)
+        problems = []
+        if hz > nz or hy > ny or hx > nx:
+            problems.append(
+                f"halo (hz={hz}, hy={hy}, hx={hx}) exceeds the field "
+                f"({nz}, {ny}, {nx}); the stencil is wider than the domain"
+            )
+        if self.tile is not None and self.backend != "jnp":
+            tz, ty = self.tile
+            if not ops.pallas_grid_ok_3d(nz, ny, nx, tz, ty, hz, hy, hx):
+                problems.append(
+                    f"explicit tile (tz={tz}, ty={ty}) cannot grid the "
+                    f"field ({nz}, {ny}, {nx}) with halo (hz={hz}, hy={hy}, "
+                    f"hx={hx}): the Pallas path needs tile|field and "
+                    "halo<=tile"
+                )
+        return problems
 
 
 def _create_3d(
@@ -629,23 +697,23 @@ def _create_3d(
     bc: str,
     *,
     weights=None,
-    func: Optional[Callable] = None,
+    func: Callable | None = None,
     coeffs=None,
-    num_sten_front: Optional[int] = None,
-    num_sten_back: Optional[int] = None,
-    num_sten_top: Optional[int] = None,
-    num_sten_bottom: Optional[int] = None,
-    num_sten_left: Optional[int] = None,
-    num_sten_right: Optional[int] = None,
-    tile: Optional[Tuple[int, int]] = None,
+    num_sten_front: int | None = None,
+    num_sten_back: int | None = None,
+    num_sten_top: int | None = None,
+    num_sten_bottom: int | None = None,
+    num_sten_left: int | None = None,
+    num_sten_right: int | None = None,
+    tile: tuple[int, int] | None = None,
     backend: str = "auto",
-    interpret: Optional[bool] = None,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
+    interpret: bool | None = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
     tune: str = "off",
-    shape: Optional[Tuple[int, int, int]] = None,
+    shape: tuple[int, int, int] | None = None,
     tune_cache=None,
-    op_name: Optional[str] = None,
+    op_name: str | None = None,
 ) -> Stencil3D:
     """Create a 3D stencil plan (the §VI.A Create call).
 
@@ -737,7 +805,7 @@ class DoubleBuffer:
 
     __slots__ = ("old", "new")
 
-    def __init__(self, old: jnp.ndarray, new: Optional[jnp.ndarray] = None):
+    def __init__(self, old: jnp.ndarray, new: jnp.ndarray | None = None):
         self.old = old
         self.new = jnp.zeros_like(old) if new is None else new
 

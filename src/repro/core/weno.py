@@ -8,7 +8,6 @@ Runge–Kutta time stepping (Shu–Osher).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,8 +64,8 @@ class WenoAdvection2D:
         v: jnp.ndarray,
         t_final: float,
         *,
-        dt: Optional[float] = None,
-    ) -> Tuple[jnp.ndarray, int]:
+        dt: float | None = None,
+    ) -> tuple[jnp.ndarray, int]:
         dt = float(self.dt_cfl(u, v)) if dt is None else dt
         n_steps = int(np.ceil(t_final / dt))
         dt = t_final / n_steps

@@ -13,7 +13,6 @@ vocab-access pattern than uniform for embedding-gather benchmarking).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 import numpy as np
 
@@ -44,7 +43,7 @@ class TokenBatchSource:
             )
         )
 
-    def get_batch(self, step: int) -> Dict[str, np.ndarray]:
+    def get_batch(self, step: int) -> dict[str, np.ndarray]:
         rng = self._rng(step)
         # Zipf ids folded into the vocab
         raw = rng.zipf(self.zipf_a, size=(self.host_batch, self.seq_len + 1))
@@ -58,7 +57,7 @@ class EncDecBatchSource:
     enc_seq: int
     d_model: int
 
-    def get_batch(self, step: int) -> Dict[str, np.ndarray]:
+    def get_batch(self, step: int) -> dict[str, np.ndarray]:
         b = self.inner.get_batch(step)
         rng = self.inner._rng(step ^ 0x5EED)
         b["frames"] = rng.standard_normal(
@@ -73,7 +72,7 @@ class VLMBatchSource:
     img_tokens: int
     d_model: int
 
-    def get_batch(self, step: int) -> Dict[str, np.ndarray]:
+    def get_batch(self, step: int) -> dict[str, np.ndarray]:
         b = self.inner.get_batch(step)
         rng = self.inner._rng(step ^ 0x1A6E)
         b["patches"] = rng.standard_normal(

@@ -16,7 +16,7 @@ callers state the math, dispatch is the library's job.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -32,12 +32,19 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _should_interpret(interpret: Optional[bool]) -> bool:
+def _should_interpret(interpret: bool | None) -> bool:
     return not on_tpu() if interpret is None else interpret
 
 
 def _pallas_ok(ny, nx, ty, tx, hx, hy) -> bool:
     return (ny % ty == 0) and (nx % tx == 0) and hx <= tx and hy <= ty
+
+
+# public names for the plan-level grid-feasibility probes
+# (repro.analysis rule `pallas_grid_feasible` via plan.grid_problems)
+def pallas_grid_ok(ny, nx, ty, tx, hx, hy) -> bool:
+    """Can a (ty, tx) tile grid with (hy, hx) halos cover (ny, nx)?"""
+    return _pallas_ok(ny, nx, ty, tx, hx, hy)
 
 
 def _aligned(t: int, align: int = 8) -> bool:
@@ -146,7 +153,7 @@ def _stencil1d_batch_jnp(data, coeffs, out_init, *, point_fn, left, right, bc):
 def stencil_apply(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     point_fn: Callable = _ref.weighted_point_fn,
     left: int = 0,
@@ -154,9 +161,9 @@ def stencil_apply(
     top: int = 0,
     bottom: int = 0,
     bc: str = "periodic",
-    tile: Optional[tuple] = None,
+    tile: tuple | None = None,
     backend: str = "auto",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Apply a 2D stencil — the library's Compute primitive."""
     ny, nx = data.shape
@@ -229,6 +236,11 @@ def _pallas_ok_1d(B, M, tb, tm, hm) -> bool:
     return (B % tb == 0) and (M % tm == 0) and hm <= tm
 
 
+def pallas_grid_ok_1d(B, M, tb, tm, hm) -> bool:
+    """Can a (tb, tm) tile grid with line halo hm cover the (B, M) stack?"""
+    return _pallas_ok_1d(B, M, tb, tm, hm)
+
+
 def _stencil1d_pallas_padded(
     data, coeffs, out_init, *, point_fn, left, right, bc, tb, tm, pb, pm,
     interpret,
@@ -267,15 +279,15 @@ def _stencil1d_pallas_padded(
 def stencil_apply_batch1d(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     point_fn: Callable = _ref.weighted_point_fn,
     left: int = 0,
     right: int = 0,
     bc: str = "periodic",
-    tile: Optional[tuple] = None,
+    tile: tuple | None = None,
     backend: str = "auto",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Apply a 1D stencil along axis 1 of a ``(B, M)`` stack — the
     batched-1D Compute primitive (cuSten's ``1DBatch`` family).
@@ -362,6 +374,11 @@ def _pallas_ok_3d(nz, ny, nx, tz, ty, hz, hy, hx) -> bool:
     )
 
 
+def pallas_grid_ok_3d(nz, ny, nx, tz, ty, hz, hy, hx) -> bool:
+    """Can a (tz, ty, nx) tile grid with the given halos cover the box?"""
+    return _pallas_ok_3d(nz, ny, nx, tz, ty, hz, hy, hx)
+
+
 def _interior_mask_3d(shape, halos):
     nz, ny, nx = shape
     fr, bk, tp, bt, lf, rt = halos
@@ -418,14 +435,14 @@ def _stencil3d_pallas_padded(
 def stencil_apply_3d(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     point_fn: Callable = _ref.weighted_point_fn,
     halos=(0, 0, 0, 0, 0, 0),  # (front, back, top, bottom, left, right)
     bc: str = "periodic",
-    tile: Optional[tuple] = None,
+    tile: tuple | None = None,
     backend: str = "auto",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Apply a 3D stencil on an ``(nz, ny, nx)`` field — the 3D Compute
     primitive.
@@ -513,7 +530,7 @@ from repro.kernels.penta import (  # noqa: E402  (import after defs is deliberat
 
 def penta_solve(
     l2, l1, d, u1, u2, rhs, *, cyclic: bool, backend: str = "auto",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
 ):
     """One-shot batched pentadiagonal solve: factor + substitute.
 
@@ -543,8 +560,8 @@ def weno_advect(
     dx: float,
     dy: float,
     backend: str = "auto",
-    tile: Optional[tuple] = None,
-    interpret: Optional[bool] = None,
+    tile: tuple | None = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """RHS of periodic 2D advection with upwinded WENO5 derivatives."""
     from repro.kernels.weno import weno5_advect_pallas
@@ -573,8 +590,8 @@ _ch_rhs_win_jnp = jax.jit(
 
 def ch_rhs(
     c_n, c_nm1, *, dt, D, gamma, inv_h2, inv_h4,
-    backend: str = "auto", tile: Optional[tuple] = None,
-    interpret: Optional[bool] = None,
+    backend: str = "auto", tile: tuple | None = None,
+    interpret: bool | None = None,
 ):
     """Fused Cahn–Hilliard explicit RHS (beyond-paper fusion kernel)."""
     from repro.kernels.fused_ch import ch_rhs_pallas
@@ -598,8 +615,8 @@ def ch_rhs(
 
 def ch_rhs_xsweep(
     c_n, c_nm1, fac_x, *, dt, D, gamma, inv_h2, inv_h4,
-    backend: str = "auto", ty: Optional[int] = None,
-    interpret: Optional[bool] = None, unroll: int = 1,
+    backend: str = "auto", ty: int | None = None,
+    interpret: bool | None = None, unroll: int = 1,
 ):
     """Fused explicit RHS + transpose-free implicit x-sweep:
     ``L_x^{-1} rhs(c_n, c_nm1)`` with ``fac_x`` the Create-time cyclic

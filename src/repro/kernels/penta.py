@@ -49,7 +49,7 @@ substitution.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -455,8 +455,8 @@ def penta_solve_factored(
     rhs: jnp.ndarray,
     *,
     backend: str = "auto",
-    tn: Optional[int] = None,
-    interpret: Optional[bool] = None,
+    tn: int | None = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Solve ``A x = rhs`` given Create-time factors.  rhs: (M,) or (M, N)."""
@@ -486,8 +486,8 @@ def penta_solve_factored_rows(
     rhs: jnp.ndarray,
     *,
     backend: str = "auto",
-    tb: Optional[int] = None,
-    interpret: Optional[bool] = None,
+    tb: int | None = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Row-layout solve: ``rhs`` is (B, M) (or (M,)), each *row* one system.
@@ -521,8 +521,8 @@ def penta_solve_factored_mid(
     rhs: jnp.ndarray,
     *,
     backend: str = "auto",
-    tn: Optional[int] = None,
-    interpret: Optional[bool] = None,
+    tn: int | None = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Plane-layout solve: ``rhs`` is (P, M, N), recurrence along the
@@ -586,8 +586,8 @@ def cyclic_penta_solve_factored(
     rhs: jnp.ndarray,
     *,
     backend: str = "auto",
-    tn: Optional[int] = None,
-    interpret: Optional[bool] = None,
+    tn: int | None = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Woodbury: x = y - W V^T y with y = A^{-1} rhs, W = Z S^{-1}
@@ -615,8 +615,8 @@ def cyclic_penta_solve_factored_rows(
     rhs: jnp.ndarray,
     *,
     backend: str = "auto",
-    tb: Optional[int] = None,
-    interpret: Optional[bool] = None,
+    tb: int | None = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Row-layout Woodbury solve on a (B, M) rhs (each row one cyclic
@@ -637,8 +637,8 @@ def cyclic_penta_solve_factored_mid(
     rhs: jnp.ndarray,
     *,
     backend: str = "auto",
-    tn: Optional[int] = None,
-    interpret: Optional[bool] = None,
+    tn: int | None = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Plane-layout Woodbury solve on a (P, M, N) rhs (each (p, :, n) line

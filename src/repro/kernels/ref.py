@@ -22,7 +22,7 @@ Conventions (matching the paper's cuSten API):
 
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +39,7 @@ def weighted_point_fn(windows: Sequence[jnp.ndarray], coeffs: jnp.ndarray):
 
 def shifted_windows(
     data: jnp.ndarray, *, left: int, right: int, top: int, bottom: int
-) -> List[jnp.ndarray]:
+) -> list[jnp.ndarray]:
     """All stencil windows of ``data`` (periodic shifts), row-major order.
 
     ``window[a*sx+b][j, i] == data[(j - top + a) % ny, (i - left + b) % nx]``
@@ -73,8 +73,8 @@ def stencil2d_ref(
     top: int = 0,
     bottom: int = 0,
     point_fn: Callable = weighted_point_fn,
-    coeffs: Optional[jnp.ndarray] = None,
-    out_init: Optional[jnp.ndarray] = None,
+    coeffs: jnp.ndarray | None = None,
+    out_init: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Oracle for the generic 2D stencil apply (any direction).
 
@@ -104,8 +104,8 @@ def stencil1d_batch_ref(
     left: int = 0,
     right: int = 0,
     point_fn: Callable = weighted_point_fn,
-    coeffs: Optional[jnp.ndarray] = None,
-    out_init: Optional[jnp.ndarray] = None,
+    coeffs: jnp.ndarray | None = None,
+    out_init: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Oracle for the batched-1D stencil apply on a ``(B, M)`` stack.
 
@@ -348,8 +348,8 @@ def stencil3d_ref(
     bc: str,
     halos,  # (front, back, top, bottom, left, right) along (z, y, x)
     point_fn: Callable = weighted_point_fn,
-    coeffs: Optional[jnp.ndarray] = None,
-    out_init: Optional[jnp.ndarray] = None,
+    coeffs: jnp.ndarray | None = None,
+    out_init: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Oracle for 3D stencils on (nz, ny, nx) fields.  Window order is
     z-major, then row-major over (y, x) — the natural extension of the

@@ -32,7 +32,7 @@ halo must not exceed the neighbouring tile (``max(left, right) <= Tm``).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -116,7 +116,7 @@ def _stencil1d_kernel(
 def stencil1d_batch_pallas(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     point_fn: Callable = weighted_point_fn,
     left: int = 0,

@@ -22,7 +22,7 @@ must not exceed the neighbouring tile (``max(left,right) <= Tx`` etc.).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -153,7 +153,7 @@ def _stencil_kernel(
 def stencil2d_pallas(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     point_fn: Callable = weighted_point_fn,
     left: int = 0,

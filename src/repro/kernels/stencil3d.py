@@ -15,7 +15,7 @@ function mode, periodic / np boundaries.  Oracle:
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -111,7 +111,7 @@ def _kernel(
 def stencil3d_pallas(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     point_fn: Callable = weighted_point_fn,
     halos=(1, 1, 1, 1, 1, 1),  # (front, back, top, bottom, left, right)

@@ -17,7 +17,8 @@ model (32k) or all axes (500k) feeding the flash-decode shard_map.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +41,7 @@ SHAPES = {
 }
 
 
-def cell_supported(cfg: ArchConfig, shape_name: str) -> Tuple[bool, str]:
+def cell_supported(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
     info = SHAPES[shape_name]
     if shape_name == "long_500k" and not cfg.sub_quadratic:
         return False, (
@@ -52,7 +53,7 @@ def cell_supported(cfg: ArchConfig, shape_name: str) -> Tuple[bool, str]:
     return True, ""
 
 
-def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+def dp_axes_of(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
@@ -84,13 +85,13 @@ def _sds(shape, dtype, mesh, spec):
 
 def batch_specs(
     cfg: ArchConfig, mesh: Mesh, shape_name: str
-) -> Dict[str, jax.ShapeDtypeStruct]:
+) -> dict[str, jax.ShapeDtypeStruct]:
     """Stand-ins for the data batch of a cell."""
     info = SHAPES[shape_name]
     b, s = info["batch"], info["seq"]
     dp = dp_axes_of(mesh)
     dspec = P(dp)
-    out: Dict[str, Any] = {}
+    out: dict[str, Any] = {}
     if info["kind"] == "train":
         s_tok = s - (cfg.img_tokens if cfg.family == "vlm" else 0)
         out["tokens"] = _sds((b, s_tok), jnp.int32, mesh, dspec)
@@ -175,7 +176,7 @@ def make_train_step(
     model: Model,
     *,
     sh: Shardings,
-    accum: Optional[int] = None,
+    accum: int | None = None,
     lr: float = 3e-4,
     param_specs=None,
 ) -> Callable:
@@ -270,8 +271,8 @@ class Cell:
     arch: str
     shape: str
     step_fn: Callable
-    args_sds: Tuple  # ShapeDtypeStructs to lower against
-    donate: Tuple[int, ...]
+    args_sds: tuple  # ShapeDtypeStructs to lower against
+    donate: tuple[int, ...]
     model: Model
     sh: Shardings
 

@@ -26,7 +26,6 @@ import argparse  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
-from typing import Optional  # noqa: E402
 
 import jax  # noqa: E402
 
@@ -205,7 +204,7 @@ def run_ch_cell(name: str, *, multi_pod: bool, verbose: bool = True) -> dict:
     return rec
 
 
-def main(argv: Optional[list] = None) -> int:
+def main(argv: list | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])

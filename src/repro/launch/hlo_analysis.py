@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s / chip
@@ -43,6 +42,43 @@ _OP_RE = re.compile(
 )
 
 
+# e.g.  {0}: (0, {}, may-alias)  inside the module's input_output_alias={...}
+_ALIAS_PAIR_RE = re.compile(
+    r"\{([0-9,\s]*)\}:\s*\((\d+),\s*\{[0-9,\s]*\},\s*(may-alias|must-alias)\)"
+)
+
+
+def input_output_aliases(hlo_text: str):
+    """Parse the module header's ``input_output_alias={...}`` table.
+
+    Returns a list of ``(output_index, parameter_number, kind)`` tuples —
+    ``output_index`` is the (possibly empty) tuple index of the aliased
+    output, ``kind`` is ``'may-alias'`` or ``'must-alias'``.  An empty list
+    means the compiled module carries no donation-induced aliasing (the
+    ``donation_applied`` audit rule's failure condition)."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return []
+    i = hlo_text.index("{", start)
+    depth, j = 0, i
+    for j in range(i, len(hlo_text)):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    body = hlo_text[i : j + 1]
+    return [
+        (
+            tuple(int(p) for p in out_idx.replace(",", " ").split()),
+            int(param),
+            kind,
+        )
+        for out_idx, param, kind in _ALIAS_PAIR_RE.findall(body)
+    ]
+
+
 def _shape_bytes(shape_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(shape_str):
@@ -56,7 +92,7 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
-def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+def collective_stats(hlo_text: str) -> dict[str, dict[str, float]]:
     """Per-collective-kind {count, bytes} from the (partitioned) HLO text.
 
     Bytes are the *output* operand sizes of each collective op (per
@@ -75,7 +111,7 @@ class RooflineTerms:
     bytes_accessed: float  # HLO bytes (whole program, all devices)
     collective_bytes: float  # per-device collective bytes (sum over ops)
     n_chips: int
-    model_flops: Optional[float] = None
+    model_flops: float | None = None
 
     @property
     def t_compute(self) -> float:
@@ -100,7 +136,7 @@ class RooflineTerms:
         return max(terms, key=terms.get)
 
     @property
-    def useful_flops_frac(self) -> Optional[float]:
+    def useful_flops_frac(self) -> float | None:
         if self.model_flops is None or self.flops == 0:
             return None
         return self.model_flops / self.flops
@@ -110,7 +146,7 @@ class RooflineTerms:
         return max(self.t_compute, self.t_memory, self.t_collective)
 
     @property
-    def roofline_frac(self) -> Optional[float]:
+    def roofline_frac(self) -> float | None:
         """MODEL_FLOPS / (chips * peak * bound_time): the score proxy —
         useful work per second vs what the dominant resource allows."""
         if self.model_flops is None or self.bound_time == 0:

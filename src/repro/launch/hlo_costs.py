@@ -27,7 +27,6 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -63,7 +62,7 @@ _ZERO_BYTE_OPS = {
 @dataclasses.dataclass
 class Shape:
     dtype: str
-    dims: Tuple[int, ...]
+    dims: tuple[int, ...]
 
     @property
     def size(self) -> int:
@@ -80,7 +79,7 @@ class Shape:
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
 
 
-def parse_shapes(type_str: str) -> List[Shape]:
+def parse_shapes(type_str: str) -> list[Shape]:
     out = []
     for dt, dims in _SHAPE_RE.findall(type_str):
         if dt not in _DTYPE_BYTES:
@@ -95,8 +94,8 @@ def parse_shapes(type_str: str) -> List[Shape]:
 class Op:
     name: str
     opcode: str
-    out_shapes: List[Shape]
-    operands: List[str]
+    out_shapes: list[Shape]
+    operands: list[str]
     attrs: str
     inner: str = ""  # raw text inside the op's parens (constants live here)
 
@@ -104,9 +103,9 @@ class Op:
 @dataclasses.dataclass
 class Computation:
     name: str
-    params: Dict[str, List[Shape]]
-    ops: Dict[str, Op]
-    order: List[str]
+    params: dict[str, list[Shape]]
+    ops: dict[str, Op]
+    order: list[str]
     is_entry: bool = False
 
 
@@ -196,7 +195,7 @@ def _parse_op_line(line: str):
     return name, type_str, opcode, rest2[m.end() :]
 
 
-def _parse_operands(rest: str) -> Tuple[List[str], str, str]:
+def _parse_operands(rest: str) -> tuple[list[str], str, str]:
     """Split the operand list (up to the matching close paren) from attrs."""
     depth = 1
     for i, ch in enumerate(rest):
@@ -213,15 +212,15 @@ def _parse_operands(rest: str) -> Tuple[List[str], str, str]:
     return names, attrs, inner
 
 
-def parse_module(text: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
     for line in text.splitlines():
         if cur is None:
             h = _split_header(line)
             if h:
                 is_entry, name, params_str = h
-                params: Dict[str, List[Shape]] = {}
+                params: dict[str, list[Shape]] = {}
                 for part in _split_top_level(params_str):
                     if ":" in part:
                         pname, ptype = part.split(":", 1)
@@ -244,7 +243,7 @@ def parse_module(text: str) -> Dict[str, Computation]:
     return comps
 
 
-def _shape_of(comp: Computation, name: str) -> List[Shape]:
+def _shape_of(comp: Computation, name: str) -> list[Shape]:
     if name in comp.ops:
         return comp.ops[name].out_shapes
     if name in comp.params:
@@ -278,12 +277,12 @@ def _trip_count(comps, cond_name: str) -> int:
     return max(pos) if pos else 1
 
 
-def execution_counts(comps: Dict[str, Computation]) -> Dict[str, float]:
+def execution_counts(comps: dict[str, Computation]) -> dict[str, float]:
     """How many times each computation executes per program run."""
     entry = next((c for c in comps.values() if c.is_entry), None)
     if entry is None:  # fall back: the largest computation
         entry = max(comps.values(), key=lambda c: len(c.ops))
-    counts: Dict[str, float] = defaultdict(float)
+    counts: dict[str, float] = defaultdict(float)
     fusion_internal: set = set()
 
     def visit(comp: Computation, mult: float):
@@ -415,7 +414,7 @@ def op_bytes(comp: Computation, op: Op, comps=None) -> float:
 class HloCosts:
     flops: float
     bytes: float
-    collectives: Dict[str, Dict[str, float]]
+    collectives: dict[str, dict[str, float]]
 
     @property
     def collective_bytes(self) -> float:

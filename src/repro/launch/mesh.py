@@ -8,7 +8,6 @@ tests and benchmarks must keep seeing the single real device.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh
@@ -41,7 +40,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_mesh_for(
-    n_devices: Optional[int] = None,
+    n_devices: int | None = None,
     *,
     model_parallel: int = 1,
     pods: int = 1,
@@ -59,5 +58,5 @@ def make_mesh_for(
     return _make_mesh((data, model_parallel), ("data", "model"))
 
 
-def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+def dp_axes_of(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

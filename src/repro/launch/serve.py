@@ -12,7 +12,7 @@ sequence-sharded and attention uses the flash-decode shard_map.
 from __future__ import annotations
 
 import argparse
-from typing import List, Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,7 @@ def generate(
     reduced: bool = False,
     seed: int = 0,
     params=None,
-) -> List[int]:
+) -> list[int]:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()

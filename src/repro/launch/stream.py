@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Callable, Optional, Tuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -79,8 +79,8 @@ def choose_chunk_rows(
     bottom: int = 0,
     left: int = 0,
     right: int = 0,
-    max_tile_bytes: Optional[int] = None,
-    streams: Optional[int] = None,
+    max_tile_bytes: int | None = None,
+    streams: int | None = None,
 ) -> int:
     """Pick the row-chunk height (cuSten's per-stream tile of rows).
 
@@ -106,7 +106,7 @@ def choose_chunk_rows(
     return feasible[0]
 
 
-def _effective_streams(streams: Optional[int], n_chunks: int) -> int:
+def _effective_streams(streams: int | None, n_chunks: int) -> int:
     """Largest group width <= ``streams`` that divides the chunk count."""
     if not streams or streams <= 1:
         return 1
@@ -204,7 +204,7 @@ def _stream_exec(
     padded: jnp.ndarray,
     coeffs: jnp.ndarray,
     out_buf: jnp.ndarray,
-    out_init: Optional[jnp.ndarray],
+    out_init: jnp.ndarray | None,
     *,
     point_fn: Callable,
     left: int,
@@ -271,7 +271,7 @@ def _stream_exec(
 def stream_stencil_apply(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     point_fn: Callable = weighted_point_fn,
     left: int = 0,
@@ -279,11 +279,11 @@ def stream_stencil_apply(
     top: int = 0,
     bottom: int = 0,
     bc: str = "periodic",
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
-    chunk_rows: Optional[int] = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
+    chunk_rows: int | None = None,
     compute: str = "jnp",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Streamed 2D stencil apply: identical contract (and results) to
     :func:`repro.kernels.ops.stencil_apply`, but the field is processed as
@@ -411,7 +411,7 @@ def _stream_exec_3d(
     padded: jnp.ndarray,
     coeffs: jnp.ndarray,
     out_buf: jnp.ndarray,
-    out_init: Optional[jnp.ndarray],
+    out_init: jnp.ndarray | None,
     *,
     point_fn: Callable,
     halos,
@@ -480,16 +480,16 @@ def _stream_exec_3d(
 def stream_stencil3d_apply(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     point_fn: Callable = weighted_point_fn,
     halos=(0, 0, 0, 0, 0, 0),
     bc: str = "periodic",
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
-    chunk_slabs: Optional[int] = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
+    chunk_slabs: int | None = None,
     compute: str = "jnp",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Streamed 3D stencil apply: identical contract (and results) to
     :func:`repro.kernels.ops.stencil_apply_3d`, but the ``(nz, ny, nx)``
@@ -544,17 +544,17 @@ def stream_stencil3d_apply(
 def stream_batch1d_apply(
     data: jnp.ndarray,
     coeffs: jnp.ndarray,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
     point_fn: Callable = weighted_point_fn,
     left: int = 0,
     right: int = 0,
     bc: str = "periodic",
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
-    chunk_rows: Optional[int] = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
+    chunk_rows: int | None = None,
     compute: str = "jnp",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Streamed batched-1D apply on a ``(B, M)`` stack.
 
@@ -587,7 +587,7 @@ def stream_batch1d_apply(
 
 
 def choose_chunk_cols(
-    M: int, N: int, itemsize: int, *, max_tile_bytes: Optional[int],
+    M: int, N: int, itemsize: int, *, max_tile_bytes: int | None,
 ) -> int:
     """Column-chunk width for a batched ``(M, N)`` solve under the same
     byte budget (each chunk is ``M * cols`` values; columns are independent
@@ -603,11 +603,11 @@ def stream_penta_solve(
     rhs: jnp.ndarray,
     *,
     cyclic: bool,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
-    chunk_cols: Optional[int] = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
+    chunk_cols: int | None = None,
     backend: str = "jnp",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Streamed batched pentadiagonal substitution on an ``(M, N)`` RHS.
@@ -695,11 +695,11 @@ def stream_penta_solve_rows(
     rhs: jnp.ndarray,
     *,
     cyclic: bool,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
-    chunk_rows: Optional[int] = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
+    chunk_rows: int | None = None,
     backend: str = "jnp",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Streamed *row-layout* pentadiagonal solve on a ``(B, M)`` RHS.
@@ -798,11 +798,11 @@ def stream_penta_solve_mid(
     rhs: jnp.ndarray,
     *,
     cyclic: bool,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
-    chunk_planes: Optional[int] = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
+    chunk_planes: int | None = None,
     backend: str = "jnp",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Streamed *plane-layout* pentadiagonal solve on a ``(P, M, N)`` RHS.
@@ -900,9 +900,9 @@ def stream_ch_rhs(
     gamma: float,
     inv_h2: float,
     inv_h4: float,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
-    chunk_rows: Optional[int] = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
+    chunk_rows: int | None = None,
 ) -> jnp.ndarray:
     """Streamed fused explicit RHS of the paper's eq. (2a) (periodic,
     halo 2, two input fields per slab).  Matches
@@ -994,11 +994,11 @@ def stream_ch_rhs_xsweep(
     gamma: float,
     inv_h2: float,
     inv_h4: float,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
-    chunk_rows: Optional[int] = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
+    chunk_rows: int | None = None,
     backend: str = "auto",
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
     unroll: int = 1,
 ) -> jnp.ndarray:
     """Streamed ``L_x^{-1} rhs(c_n, c_nm1)``: each row chunk assembles its
@@ -1095,11 +1095,11 @@ def stream_stencil_apply_dist(
     plan,
     field: jnp.ndarray,
     dd,
-    out_init: Optional[jnp.ndarray] = None,
+    out_init: jnp.ndarray | None = None,
     *,
-    streams: Optional[int] = None,
-    max_tile_bytes: Optional[int] = None,
-    chunk_rows: Optional[int] = None,
+    streams: int | None = None,
+    max_tile_bytes: int | None = None,
+    chunk_rows: int | None = None,
 ) -> jnp.ndarray:
     """Streamed apply with each chunk sharded over the mesh.
 
@@ -1210,11 +1210,11 @@ def resolve_compute(backend: str) -> str:
 
 
 def should_stream(
-    shape: Tuple[int, ...],
+    shape: tuple[int, ...],
     itemsize: int,
     *,
-    streams: Optional[int],
-    max_tile_bytes: Optional[int],
+    streams: int | None,
+    max_tile_bytes: int | None,
 ) -> bool:
     """The plan routes through the streamed executor when a knob is set and
     the field actually exceeds one tile (or multiple streams are asked
@@ -1231,7 +1231,7 @@ def should_stream(
 
 def n_chunks_for(
     ny: int, nx: int, itemsize: int, *, halos=(0, 0, 0, 0),
-    max_tile_bytes: Optional[int] = None, streams: Optional[int] = None,
+    max_tile_bytes: int | None = None, streams: int | None = None,
 ) -> int:
     """How many row-chunks the executor would use (introspection helper —
     tests and benchmarks use it to size '4x larger than one chunk')."""

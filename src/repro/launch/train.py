@@ -19,7 +19,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,13 +42,13 @@ def train_loop(
     reduced: bool = False,
     lr: float = 3e-4,
     accum: int = 1,
-    checkpoint_dir: Optional[str] = None,
+    checkpoint_dir: str | None = None,
     checkpoint_every: int = 50,
     log_every: int = 10,
     model_parallel: int = 1,
     seed: int = 0,
-    fail_at_step: Optional[int] = None,  # fault-injection hook for tests
-) -> List[Dict]:
+    fail_at_step: int | None = None,  # fault-injection hook for tests
+) -> list[Dict]:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -102,7 +101,7 @@ def train_loop(
         (checkpoint_dir or "/tmp") + "/heartbeat", interval=30.0
     )
 
-    metrics: List[Dict] = []
+    metrics: list[Dict] = []
     for i in range(start, steps):
         t0 = time.time()
         batch = {k: jnp.asarray(v) for k, v in src.get_batch(i).items()}

@@ -14,7 +14,7 @@ functions the launcher lowers for each (arch x shape) cell:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from collections.abc import Callable
 
 from repro.configs import ArchConfig
 from repro.models import encdec as encdec_mod
@@ -28,9 +28,9 @@ class Model:
     init: Callable
     loss: Callable  # (params, batch_dict, sh) -> scalar
     prefill_logits: Callable  # (params, batch_dict, sh) -> (B, S, V)
-    init_cache: Optional[Callable]  # (batch, max_seq) -> cache
-    decode: Optional[Callable]  # (params, token, pos, cache, sh)
-    prefill_serve: Optional[Callable] = None  # (params, batch, sh) -> (logits_last, kvs)
+    init_cache: Callable | None  # (batch, max_seq) -> cache
+    decode: Callable | None  # (params, token, pos, cache, sh)
+    prefill_serve: Callable | None = None  # (params, batch, sh) -> (logits_last, kvs)
 
     def input_names(self, step: str):
         if step == "train":

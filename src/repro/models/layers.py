@@ -9,7 +9,6 @@ and compile time are O(1) in depth (essential for the 96-layer dry-runs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +35,7 @@ def trunc_normal(key, shape, std, dtype):
     return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
 
 
-def dense_init(key, d_in: int, d_out: int, dtype, *, std: Optional[float] = None):
+def dense_init(key, d_in: int, d_out: int, dtype, *, std: float | None = None):
     std = (d_in**-0.5) if std is None else std
     return trunc_normal(key, (d_in, d_out), std, dtype)
 

@@ -9,7 +9,6 @@ einsums lower to all-to-alls.  Aux load-balance loss follows Switch/GShard.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +46,7 @@ def _capacity(tokens: int, cfg: MoEConfig) -> int:
 
 def moe_apply(
     params, x, cfg: MoEConfig, *, activation: str, dropless: bool = False
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, S, D) -> (out, aux_loss).
 
     ``dropless=True`` sizes capacity to the worst case (serving/decode path:
@@ -81,7 +80,7 @@ def moe_apply(
 
 def _moe_dense_dispatch(
     params, x, cfg: MoEConfig, *, activation: str, dropless: bool
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     b, s, d = x.shape
     e = cfg.num_experts
     t = b * s

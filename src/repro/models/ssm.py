@@ -12,7 +12,6 @@ Shapes follow the assigned configs: rwkv6-7b d_model=4096, head_dim=64
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -188,7 +187,7 @@ def _wkv_chunked(rr, kk, vv, ww, u, state, *, chunk: int = _WKV_CHUNK):
 
 
 def rwkv_time_mix(
-    p, x, cfg: RWKVConfig, state: Optional[Tuple] = None
+    p, x, cfg: RWKVConfig, state: tuple | None = None
 ):
     """x: (B, S, D).  state (decode): (x_prev (B,D), S (B,H,hd,hd)).
     Returns (out, new_state)."""
@@ -244,7 +243,7 @@ def rwkv_time_mix(
     return out, (x[:, -1, :], wkv_state)
 
 
-def rwkv_channel_mix(p, x, state: Optional[jnp.ndarray] = None):
+def rwkv_channel_mix(p, x, state: jnp.ndarray | None = None):
     """state (decode): previous token (B, D)."""
     b, s, d = x.shape
     if state is None:
@@ -295,7 +294,7 @@ def mamba_init(key, d: int, cfg: MambaConfig, dtype):
     }
 
 
-def mamba_apply(p, x, cfg: MambaConfig, state: Optional[Tuple] = None):
+def mamba_apply(p, x, cfg: MambaConfig, state: tuple | None = None):
     """x: (B, S, D).  state (decode): (conv_buf (B, d_conv-1, din),
     h (B, din, d_state)).  Returns (out, new_state)."""
     b, s, d = x.shape

@@ -14,7 +14,7 @@ Three entry points per model (the dry-run lowers each):
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,7 @@ def _attn_init(key, cfg: ArchConfig, dtype):
 def _layer_init(key, cfg: ArchConfig, idx: int, dtype):
     ks = jax.random.split(key, 4)
     kind, mk = layer_kind(cfg, idx), mlp_kind(cfg, idx)
-    p: Dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
+    p: dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
     if kind == "attn":
         p["attn"] = _attn_init(ks[0], cfg, dtype)
     elif kind == "mamba":
@@ -214,7 +214,7 @@ def forward(
     tokens: jnp.ndarray,
     sh: Shardings = Shardings.none(),
     *,
-    extra_embeds: Optional[jnp.ndarray] = None,
+    extra_embeds: jnp.ndarray | None = None,
     collect_kv: bool = False,
     logits_mode: str = "all",  # 'all' | 'last' | 'hidden'
 ):

@@ -8,7 +8,8 @@ training; the f32 "master" lives implicitly in the moment buffers).
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +45,7 @@ def adamw(
     b2: float = 0.95,
     eps: float = 1e-8,
     weight_decay: float = 0.1,
-    clip_norm: Optional[float] = 1.0,
+    clip_norm: float | None = 1.0,
 ) -> Optimizer:
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
@@ -155,7 +156,7 @@ def _map3(fn, grads, stats, params):
     flat_p = treedef.flatten_up_to(params)
     flat_s = treedef.flatten_up_to(stats)
     return jax.tree_util.tree_unflatten(
-        treedef, [fn(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        treedef, [fn(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p, strict=True)]
     )
 
 
@@ -188,7 +189,7 @@ def adamw8bit(
     b2: float = 0.95,
     eps: float = 1e-8,
     weight_decay: float = 0.1,
-    clip_norm: Optional[float] = 1.0,
+    clip_norm: float | None = 1.0,
 ) -> Optimizer:
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
@@ -245,7 +246,7 @@ def _map3_q(fn, grads, ms, vs, params):
     flat_p = treedef.flatten_up_to(params)
     return jax.tree_util.tree_unflatten(
         treedef,
-        [fn(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)],
+        [fn(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p, strict=True)],
     )
 
 
@@ -289,7 +290,7 @@ def state_specs(opt_name: str, param_specs, param_shapes=None):
         )
         flat_p = treedef.flatten_up_to(param_shapes)
         stats = jax.tree_util.tree_unflatten(
-            treedef, [per_leaf(sp, sh) for sp, sh in zip(flat_s, flat_p)]
+            treedef, [per_leaf(sp, sh) for sp, sh in zip(flat_s, flat_p, strict=True)]
         )
         return {"stats": stats, "step": P()}
     if opt_name == "adamw8bit":

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Callable, List, Optional
+from collections.abc import Callable
 
 
 class StragglerMonitor:
@@ -26,15 +26,15 @@ class StragglerMonitor:
         alpha: float = 0.1,
         threshold: float = 2.0,
         warmup_steps: int = 5,
-        on_straggler: Optional[Callable[[int, float, float], None]] = None,
+        on_straggler: Callable[[int, float, float], None] | None = None,
     ):
         self.alpha = alpha
         self.threshold = threshold
         self.warmup_steps = warmup_steps
         self.on_straggler = on_straggler
-        self.ewma: Optional[float] = None
+        self.ewma: float | None = None
         self.count = 0
-        self.events: List[dict] = []
+        self.events: list[dict] = []
 
     def record(self, step: int, dt: float) -> bool:
         """Returns True if this step is flagged as a straggler event."""
@@ -77,14 +77,14 @@ class Heartbeat:
 class SupervisorReport:
     restarts: int
     completed_steps: int
-    failures: List[str]
+    failures: list[str]
 
 
 def supervise(
     run_fn: Callable[[int], int],
     *,
     max_restarts: int = 3,
-    on_restart: Optional[Callable[[int, BaseException], None]] = None,
+    on_restart: Callable[[int, BaseException], None] | None = None,
 ) -> SupervisorReport:
     """Run ``run_fn(start_step) -> final_step`` under restart-on-failure.
 
@@ -94,7 +94,7 @@ def supervise(
     single-process analogue of a cluster controller rescheduling dead hosts.
     """
     restarts = 0
-    failures: List[str] = []
+    failures: list[str] = []
     step = 0
     while True:
         try:

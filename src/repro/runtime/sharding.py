@@ -25,7 +25,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Optional, Sequence, Tuple
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -36,7 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # (path regex, spec builder) — first match wins; L = leading layer-stack axis
 # is always unsharded; builders receive (fsdp, tp) axis names.
-_RULES: Sequence[Tuple[str, Any]] = (
+_RULES: Sequence[tuple[str, Any]] = (
     # embeddings / unembedding
     (r"embed$", lambda f, t: P(t, f)),  # (V, D): vocab x fsdp
     (r"pos_embed$", lambda f, t: P(None, None)),
@@ -78,7 +79,7 @@ _RULES: Sequence[Tuple[str, Any]] = (
 )
 
 
-def _match_spec(path: str, fsdp, tp) -> Optional[P]:
+def _match_spec(path: str, fsdp, tp) -> P | None:
     for pat, builder in _RULES:
         if re.search(pat, path):
             return builder(fsdp, tp)
@@ -90,7 +91,7 @@ def _fit_spec(spec: P, ndim: int, shape, mesh: Mesh) -> P:
     entries = list(spec) + [None] * (ndim - len(spec))
     entries = entries[:ndim]
     out = []
-    for dim, ent in zip(shape, entries):
+    for dim, ent in zip(shape, entries, strict=True):
         if ent is None:
             out.append(None)
             continue
@@ -138,12 +139,12 @@ def param_shardings(params, mesh, *, fsdp="data", tp="model"):
 class Shardings:
     """Activation/cache constraint helper (None mesh => no-ops)."""
 
-    mesh: Optional[Mesh] = None
-    dp_axes: Tuple[str, ...] = ("data",)  # batch data-parallel axes
-    tp_axis: Optional[str] = "model"
-    fsdp_axis: Optional[str] = "data"
-    cache_seq_axes: Tuple[str, ...] = ()  # sequence-sharded decode caches
-    seq_axis: Optional[str] = None  # sequence parallelism for activations
+    mesh: Mesh | None = None
+    dp_axes: tuple[str, ...] = ("data",)  # batch data-parallel axes
+    tp_axis: str | None = "model"
+    fsdp_axis: str | None = "data"
+    cache_seq_axes: tuple[str, ...] = ()  # sequence-sharded decode caches
+    seq_axis: str | None = None  # sequence parallelism for activations
 
     @classmethod
     def none(cls) -> "Shardings":

@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Callable, Optional, Sequence
+from collections.abc import Callable, Sequence
 
 import jax
 
@@ -105,17 +105,17 @@ def measure(fn: Callable, *args, warmup: int = 1, repeat: int = 3) -> float:
 def autotune(
     kernel: str,
     candidates: Sequence[dict],
-    build: Callable[[dict], Optional[Callable]],
+    build: Callable[[dict], Callable | None],
     args: Sequence,
     *,
     shape,
     dtype,
-    bc: Optional[str] = None,
-    backend: Optional[str] = None,
+    bc: str | None = None,
+    backend: str | None = None,
     extra=None,
     mode: str = "cached",
-    default: Optional[dict] = None,
-    cache: Optional[TuneCache] = None,
+    default: dict | None = None,
+    cache: TuneCache | None = None,
 ) -> dict:
     """Pick the fastest candidate configuration for one kernel problem.
 

@@ -29,7 +29,6 @@ import os
 import platform
 import tempfile
 from pathlib import Path
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -74,8 +73,8 @@ def tune_key(
     *,
     shape,
     dtype,
-    bc: Optional[str] = None,
-    backend: Optional[str] = None,
+    bc: str | None = None,
+    backend: str | None = None,
     extra=None,
 ) -> str:
     """Canonical cache key for one tuning problem.
@@ -119,7 +118,7 @@ class TuneCache:
         Unreadable / corrupted / mismatched files are misses, not errors.
         """
         try:
-            with open(self.path_for(key), "r", encoding="utf-8") as f:
+            with open(self.path_for(key), encoding="utf-8") as f:
                 payload = json.load(f)
         except (OSError, ValueError, UnicodeDecodeError):
             return None
@@ -127,17 +126,34 @@ class TuneCache:
             return None  # truncated rewrite or (vanishingly rare) collision
         return payload.get("best")
 
-    def put(self, key: str, best, *, us: Optional[float] = None) -> None:
-        """Store ``best`` for ``key`` atomically (temp file + rename)."""
-        self.root.mkdir(parents=True, exist_ok=True)
+    def put(self, key: str, best, *, us: float | None = None) -> None:
+        """Store ``best`` for ``key`` atomically (temp file + rename).
+
+        The payload is fully written, flushed, and fsync'd *before* the
+        rename, so a killed process can never leave a truncated entry
+        under the final name — readers see the old entry or the new one,
+        nothing in between.  Any failure (including an unserialisable
+        ``best``) leaves no stray ``.tmp`` behind and is swallowed: the
+        cache degrades to a miss, it never breaks a Create."""
+        try:
+            self.root.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        except OSError:
+            return
         payload = {"key": key, "best": best, "us": us}
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        ok = False
         try:
             with os.fdopen(fd, "w", encoding="utf-8") as f:
                 json.dump(payload, f, indent=1)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, self.path_for(key))
-        except OSError:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
+            ok = True
+        except (OSError, TypeError, ValueError):
+            pass
+        finally:
+            if not ok:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass

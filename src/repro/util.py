@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import math
 import warnings
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax.numpy as jnp
 

@@ -22,13 +22,13 @@ from __future__ import annotations
 
 import inspect
 import random
-from typing import Any, List
+from typing import Any
 
 
 class _Strategy:
     """A finite pool of representative examples."""
 
-    def __init__(self, examples: List[Any]):
+    def __init__(self, examples: list[Any]):
         if not examples:
             raise ValueError("strategy needs at least one example")
         self.examples = examples

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import check_jaxpr
 from repro.core.adi import make_adi_operator_3d
 from repro.kernels import ref as R
 from repro.kernels.penta import (
@@ -124,8 +125,10 @@ class TestADIOperator3D:
         def step(c):
             return self.op.solve_z(self.op.solve_y(self.op.solve_x(c)))
 
-        prims = _all_primitives(jax.make_jaxpr(step)(self.rhs))
-        assert "transpose" not in prims
+        findings = check_jaxpr(
+            jax.make_jaxpr(step)(self.rhs), ("no_transpose",)
+        )
+        assert findings == []
 
     def test_noncyclic_roundtrip(self):
         op = make_adi_operator_3d(
@@ -204,20 +207,3 @@ class TestLODDiffusionScheme:
             c = op.solve_z(op.solve_y(op.solve_x(c)))
         g = 1.0 / (1.0 + 4.0 * r * np.sin(h / 2.0) ** 2) ** 3
         np.testing.assert_allclose(c, g**steps * c0, **TOL)
-
-
-def _all_primitives(closed_jaxpr):
-    acc = set()
-
-    def walk(jx):
-        for e in jx.eqns:
-            acc.add(str(e.primitive))
-            for v in e.params.values():
-                vals = v if isinstance(v, (list, tuple)) else [v]
-                for vv in vals:
-                    inner = getattr(vv, "jaxpr", None)
-                    if inner is not None:
-                        walk(inner)
-
-    walk(closed_jaxpr.jaxpr)
-    return acc

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import check_jaxpr
 from repro.core.adi import make_adi_operator
 from repro.core.cahn_hilliard import (
     CahnHilliardADI,
@@ -117,10 +118,11 @@ class TestADIOperatorTransposeFree:
 
     def test_solve_x_jaxpr_has_no_transpose(self):
         op = make_adi_operator(32, 32, 0.3, cyclic=True, backend="jnp")
-        prims = _all_primitives(
-            jax.make_jaxpr(op.solve_x)(jnp.zeros((32, 32)))
+        findings = check_jaxpr(
+            jax.make_jaxpr(op.solve_x)(jnp.zeros((32, 32))),
+            ("no_transpose",),
         )
-        assert "transpose" not in prims
+        assert findings == []
 
     def test_rectangular_domain(self):
         rng = np.random.default_rng(5)
@@ -135,23 +137,6 @@ class TestADIOperatorTransposeFree:
         np.testing.assert_allclose(
             op.solve_y(rhs), R.penta_solve_ref(*dy, rhs, cyclic=True), **TOL
         )
-
-
-def _all_primitives(closed_jaxpr):
-    acc = set()
-
-    def walk(jx):
-        for e in jx.eqns:
-            acc.add(str(e.primitive))
-            for v in e.params.values():
-                vals = v if isinstance(v, (list, tuple)) else [v]
-                for vv in vals:
-                    inner = getattr(vv, "jaxpr", None)
-                    if inner is not None:
-                        walk(inner)
-
-    walk(closed_jaxpr.jaxpr)
-    return acc
 
 
 class TestFusedRHSXsweep:
@@ -186,8 +171,10 @@ class TestFusedRHSXsweep:
         )
         c0 = deep_quench_ic(32, 32, seed=0)
         c1 = s.initial_step(c0)
-        prims = _all_primitives(jax.make_jaxpr(s.step)(c1, c0))
-        assert "transpose" not in prims
+        findings = check_jaxpr(
+            jax.make_jaxpr(s.step)(c1, c0), ("no_transpose",)
+        )
+        assert findings == []
 
     def test_streamed_fused_step_has_zero_transposes(self):
         n = 32
@@ -199,8 +186,10 @@ class TestFusedRHSXsweep:
         )
         c0 = deep_quench_ic(n, n, seed=0)
         c1 = s.initial_step(c0)
-        prims = _all_primitives(jax.make_jaxpr(s.step)(c1, c0))
-        assert "transpose" not in prims
+        findings = check_jaxpr(
+            jax.make_jaxpr(s.step)(c1, c0), ("no_transpose",)
+        )
+        assert findings == []
 
     def test_streamed_xsweep_matches_monolithic(self):
         rng = np.random.default_rng(8)

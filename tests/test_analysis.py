@@ -1,0 +1,417 @@
+"""The static-analysis subsystem (PR-6 tentpole).
+
+Covers: the shared jaxpr walker and each invariant rule (positive and
+negative directions — including the seeded-regression proofs that a
+reintroduced transpose or fp64 upcast is reported with its primitive
+named), the donation HLO rule on a really-compiled module, the retrace
+budget, stencil-lint moment/symmetry/zero-sum checks on correct and
+corrupted weights, ADI topology/alpha/singularity lint, the ``lint=``
+knobs on ``register_operator`` and ``create``, the audit matrix, the
+``python -m repro.analysis`` CLI (in-process), and the atomic tune-cache
+writes that the auditor's fingerprinting relies on.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.analysis as an
+from repro import api
+from repro.analysis.__main__ import main as analysis_main
+from repro.api import _REGISTRY
+from repro.tune.cache import TuneCache
+
+
+@pytest.fixture
+def scratch_op():
+    """Unique operator names, unregistered on exit."""
+    created = []
+
+    def _register(name, **kw):
+        created.append(name)
+        return api.register_operator(name, **kw)
+
+    yield _register
+    for name in created:
+        _REGISTRY.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# The walker
+# ---------------------------------------------------------------------------
+
+
+class TestWalker:
+    def test_recurses_into_scan_and_pjit(self):
+        @jax.jit
+        def f(x):
+            def body(c, _):
+                return (c.T @ c.T.T, None)
+
+            out, _ = jax.lax.scan(body, x, None, length=2)
+            return out
+
+        prims = an.all_primitives(jax.make_jaxpr(f)(jnp.eye(4)))
+        assert "scan" in prims
+        assert "transpose" in prims
+
+    def test_paths_name_enclosing_primitives(self):
+        def f(x):
+            def body(c, _):
+                return (c.T, None)
+
+            out, _ = jax.lax.scan(body, x, None, length=2)
+            return out
+
+        paths = [
+            path
+            for path, e in an.iter_eqns(jax.make_jaxpr(f)(jnp.eye(4)))
+            if str(e.primitive) == "transpose"
+        ]
+        assert paths and all("scan" in p for p in paths)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr rules
+# ---------------------------------------------------------------------------
+
+
+class TestJaxprRules:
+    def test_no_transpose_clean(self):
+        jx = jax.make_jaxpr(lambda x: x + 1.0)(jnp.zeros((4, 4)))
+        assert an.check_jaxpr(jx, ("no_transpose",)) == []
+
+    def test_no_transpose_reports_primitive(self):
+        jx = jax.make_jaxpr(lambda x: x.T + 1.0)(jnp.zeros((4, 8)))
+        (f,) = an.check_jaxpr(jx, ("no_transpose",))
+        assert f.rule == "no_transpose"
+        assert f.severity == an.ERROR
+        assert f.primitive == "transpose"
+
+    def test_upcast_flagged(self):
+        jx = jax.make_jaxpr(
+            lambda x: x.astype(jnp.float64) * 2.0
+        )(jnp.zeros((4,), jnp.float32))
+        (f,) = an.check_jaxpr(jx, ("no_dtype_upcast",))
+        assert f.primitive == "convert_element_type"
+        assert "float32" in f.message and "float64" in f.message
+
+    def test_downcast_and_weak_scalars_ok(self):
+        jx = jax.make_jaxpr(
+            lambda x: (x.astype(jnp.float32) + 1.5)
+        )(jnp.zeros((4,), jnp.float64))
+        assert an.check_jaxpr(jx, ("no_dtype_upcast",)) == []
+
+    def test_host_callback_flagged(self):
+        def f(x):
+            return jax.pure_callback(
+                lambda v: np.asarray(v), jax.ShapeDtypeStruct(x.shape, x.dtype), x
+            )
+
+        jx = jax.make_jaxpr(f)(jnp.zeros((4,)))
+        findings = an.check_jaxpr(jx, ("no_host_callback",))
+        assert findings and findings[0].primitive == "pure_callback"
+
+    def test_unknown_rule_and_kind_mismatch_raise(self):
+        jx = jax.make_jaxpr(lambda x: x)(jnp.zeros((2,)))
+        with pytest.raises(ValueError, match="unknown rule"):
+            an.check_jaxpr(jx, ("no_such_rule",))
+        with pytest.raises(ValueError, match="kind"):
+            an.check_jaxpr(jx, ("donation_applied",))
+
+
+# ---------------------------------------------------------------------------
+# HLO rule: donation
+# ---------------------------------------------------------------------------
+
+
+class TestDonationRule:
+    def test_donated_module_passes(self):
+        f = jax.jit(lambda a, b: (a + b, a - b), donate_argnums=(0, 1))
+        x = jnp.zeros((8, 8))
+        hlo = f.lower(x, x).compile().as_text()
+        assert an.check_hlo(hlo, ("donation_applied",)) == []
+
+    def test_undonated_module_fails(self):
+        f = jax.jit(lambda a, b: (a + b, a - b))
+        x = jnp.zeros((8, 8))
+        hlo = f.lower(x, x).compile().as_text()
+        (finding,) = an.check_hlo(hlo, ("donation_applied",))
+        assert finding.rule == "donation_applied"
+        assert finding.primitive == "input_output_alias"
+
+
+# ---------------------------------------------------------------------------
+# retrace budget
+# ---------------------------------------------------------------------------
+
+
+class TestRetraceBudget:
+    def test_identical_plans_share_one_trace(self):
+        plans = [api.create("laplacian", (16, 16), lint="off") for _ in range(3)]
+        x = jnp.zeros((16, 16))
+        assert an.retrace_count(api.compute, [(p, x) for p in plans]) == 1
+
+    def test_structural_drift_trips_the_rule(self):
+        p1 = api.create("laplacian", (16, 16), lint="off")
+        p2 = api.create("laplacian", (16, 16), tile=(8, 8), lint="off")
+        x = jnp.zeros((16, 16))
+        findings = an.RULES["retrace_budget"].check(
+            api.compute, {"argsets": [(p1, x), (p2, x)], "budget": 1}
+        )
+        assert findings and findings[0].rule == "retrace_budget"
+
+
+# ---------------------------------------------------------------------------
+# stencil lint
+# ---------------------------------------------------------------------------
+
+
+class TestStencilLint:
+    def test_builtin_weights_pass_moments(self):
+        for name, ndim in (
+            ("laplacian", 1), ("laplacian", 2), ("laplacian", 3),
+            ("biharmonic", 1), ("biharmonic", 2),
+        ):
+            opdef = api.get_operator(name)
+            assert an.lint_operator(opdef, ndim=ndim) == [], (name, ndim)
+
+    def test_corrupted_weights_fail_moments(self):
+        w = np.array([1.0, -2.0, 1.0]) * 1.01  # wrong second moment
+        findings = an.check_moments(w, 2, name="broken")
+        assert findings and findings[0].rule == "stencil_moments"
+        assert all(f.severity == an.ERROR for f in findings)
+
+    def test_moment_check_respects_h_scaling(self):
+        h = 0.25
+        assert an.check_moments(np.array([1.0, -2.0, 1.0]) / h**2, 2, h=h) == []
+
+    def test_odd_derivative_in_2d_warns_and_skips(self):
+        (f,) = an.check_moments(np.zeros((3, 3)), 1, name="ddx")
+        assert f.severity == an.WARNING and "skipped" in f.message
+
+    def test_asymmetric_weights_fail_symmetry(self):
+        findings = an.check_symmetry(np.array([1.0, -2.0, 1.5]))
+        assert findings and findings[0].rule == "stencil_symmetry"
+
+    def test_nonzero_sum_fails_zero_sum(self):
+        findings = an.check_zero_sum(np.array([1.0, -1.9, 1.0]))
+        assert findings and findings[0].rule == "stencil_zero_sum"
+
+    def test_adi_topology_mismatches(self):
+        opdef = api.get_operator("hyperdiffusion")
+        warn = an.lint_adi(opdef, 32, 0.2, bc="periodic", cyclic=False)
+        assert any(f.rule == "adi_topology" and f.severity == an.WARNING
+                   for f in warn)
+        err = an.lint_adi(opdef, 32, 0.2, bc="np", cyclic=True)
+        assert any(f.rule == "adi_topology" and f.severity == an.ERROR
+                   for f in err)
+        clean = an.lint_adi(opdef, 32, 0.2, bc="periodic", cyclic=True)
+        assert an.errors(clean) == []
+
+    def test_adi_negative_alpha_warns(self):
+        opdef = api.get_operator("hyperdiffusion")
+        findings = an.lint_adi(opdef, 32, -0.1, bc="periodic", cyclic=True)
+        assert any(f.rule == "adi_alpha_sign" for f in findings)
+
+    def test_adi_singular_bands_error(self, scratch_op):
+        def null_bands(n, alpha, dtype=np.float64):
+            z = np.zeros(n, dtype)
+            return z, z, z.copy(), z, z
+
+        opdef = scratch_op("_lint_null_band", diagonals=null_bands)
+        findings = an.lint_adi(opdef, 32, 0.2, bc="periodic", cyclic=True)
+        assert any(f.rule == "adi_band_singular" and f.severity == an.ERROR
+                   for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# the lint= knobs
+# ---------------------------------------------------------------------------
+
+
+class TestLintKnobs:
+    BAD = staticmethod(lambda ndim=1, h=1.0: np.array([1.0, -2.0, 1.5]))
+
+    def test_register_error_raises_with_findings(self, scratch_op):
+        with pytest.raises(an.LintError) as exc:
+            scratch_op(
+                "_lint_bad_err", weights=self.BAD, symmetric=True,
+                zero_sum=True, lint="error",
+            )
+        assert any(f.rule == "stencil_symmetry" for f in exc.value.findings)
+        assert "_lint_bad_err" not in _REGISTRY
+
+    def test_register_warn_and_off(self, scratch_op):
+        with pytest.warns(an.StencilLintWarning):
+            scratch_op(
+                "_lint_bad_warn", weights=self.BAD, symmetric=True,
+                lint="warn",
+            )
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            scratch_op(
+                "_lint_bad_off", weights=self.BAD, symmetric=True,
+                lint="off",
+            )
+
+    def test_create_flags_infeasible_tile(self):
+        with pytest.warns(an.StencilLintWarning, match="tile"):
+            api.create("laplacian", (32, 32), tile=(5, 7), backend="pallas")
+        with pytest.raises(an.LintError):
+            api.create(
+                "laplacian", (32, 32), tile=(5, 7), backend="pallas",
+                lint="error",
+            )
+        api.create(
+            "laplacian", (32, 32), tile=(5, 7), backend="pallas", lint="off"
+        )
+
+    def test_create_adi_topology_lint(self):
+        with pytest.warns(an.StencilLintWarning, match="topology|wrap"):
+            api.create(
+                "hyperdiffusion", (32, 32), mode="adi", alpha=0.2,
+                bc="periodic", cyclic=False,
+            )
+
+    def test_invalid_lint_mode_rejected(self):
+        with pytest.raises(ValueError, match="lint"):
+            api.create("laplacian", (16, 16), lint="loud")
+
+
+# ---------------------------------------------------------------------------
+# findings plumbing
+# ---------------------------------------------------------------------------
+
+
+class TestFindings:
+    def test_severity_validated(self):
+        with pytest.raises(ValueError):
+            an.Finding(rule="r", severity="fatal", message="m")
+
+    def test_str_and_dict(self):
+        f = an.Finding(
+            rule="no_transpose", severity=an.ERROR, message="m",
+            primitive="transpose", computation="scan",
+        )
+        assert "transpose" in str(f) and "scan" in str(f)
+        assert f.to_dict()["primitive"] == "transpose"
+
+    def test_surface_modes(self):
+        f = an.Finding(rule="r", severity=an.ERROR, message="m")
+        an.surface([f], "off")
+        with pytest.warns(an.StencilLintWarning):
+            an.surface([f], "warn")
+        with pytest.raises(an.LintError):
+            an.surface([f], "error")
+
+
+# ---------------------------------------------------------------------------
+# grid probes
+# ---------------------------------------------------------------------------
+
+
+class TestGridProblems:
+    def test_halo_wider_than_domain(self):
+        plan = api.create("biharmonic", (32, 32), lint="off")
+        assert plan.grid_problems((1, 1))
+
+    def test_adi_shape_mismatch(self):
+        op = api.create(
+            "hyperdiffusion", (32, 48), mode="adi", alpha=0.2, lint="off"
+        )
+        assert op.grid_problems((32, 48)) == []
+        assert op.grid_problems((48, 32))
+
+
+# ---------------------------------------------------------------------------
+# the audit matrix + CLI (the fail-closed acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+class TestAudit:
+    def test_subset_audit_is_clean(self):
+        report = an.run_audit(
+            operators=("laplacian",), families=("stencil2d",),
+            backends=("jnp",), retrace=False,
+        )
+        audited = [r for r in report.results if r.skipped is None]
+        assert audited and report.ok
+
+    def test_cli_clean_subset_exits_zero(self, tmp_path):
+        out = tmp_path / "report.json"
+        rc = analysis_main([
+            "-q", "--families", "stencil2d", "--operators", "laplacian",
+            "--backends", "jnp", "--no-retrace", "--out", str(out),
+        ])
+        assert rc == 0
+        rep = json.loads(out.read_text())
+        assert rep["ok"] and rep["violations"] == 0
+
+    @pytest.mark.parametrize(
+        "seed,primitive",
+        [("transpose", "transpose"), ("upcast", "convert_element_type")],
+    )
+    def test_cli_seeded_violation_fails_closed(self, tmp_path, seed, primitive):
+        # the acceptance property: reintroduce the regression, the gate
+        # must exit nonzero and name the offending primitive in its report
+        out = tmp_path / f"seed_{seed}.json"
+        rc = analysis_main([
+            "-q", "--families", "adi2d", "--operators", "hyperdiffusion",
+            "--backends", "jnp", "--no-retrace",
+            "--seed-violation", seed, "--out", str(out),
+        ])
+        assert rc == 1
+        rep = json.loads(out.read_text())
+        assert not rep["ok"]
+        named = [
+            f["primitive"]
+            for r in rep["results"] if not r["ok"]
+            for f in r["findings"]
+        ]
+        assert primitive in named
+
+    def test_cli_list_rules(self, capsys):
+        assert analysis_main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        assert "no_transpose" in out and "donation_applied" in out
+
+
+# ---------------------------------------------------------------------------
+# tune-cache atomicity (satellite: a killed writer must not corrupt reads)
+# ---------------------------------------------------------------------------
+
+
+class TestCacheAtomicity:
+    def test_roundtrip(self, tmp_path):
+        cache = TuneCache(tmp_path)
+        cache.put("k", {"backend": "jnp"}, us=1.5)
+        assert cache.get("k") == {"backend": "jnp"}
+
+    def test_unserialisable_payload_leaves_no_tmp(self, tmp_path):
+        cache = TuneCache(tmp_path)
+        cache.put("k", {"bad": {1, 2, 3}})  # a set is not JSON
+        assert cache.get("k") is None
+        assert list(tmp_path.glob("*.tmp")) == []
+
+    def test_truncated_entry_is_a_miss(self, tmp_path):
+        cache = TuneCache(tmp_path)
+        cache.put("k", {"backend": "jnp"})
+        path = cache.path_for("k")
+        path.write_text(path.read_text()[: 10])  # simulate a torn write
+        assert cache.get("k") is None
+
+    def test_replace_is_all_or_nothing(self, tmp_path):
+        cache = TuneCache(tmp_path)
+        cache.put("k", {"backend": "jnp"})
+        cache.put("k", {"bad": object()})  # failed rewrite
+        assert cache.get("k") == {"backend": "jnp"}  # old entry intact
+        assert not any(
+            name.endswith(".tmp") for name in os.listdir(tmp_path)
+        )

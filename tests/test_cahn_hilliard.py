@@ -133,7 +133,8 @@ class TestConservationAndStability:
             c0, 300, save_every=100, metrics_fn=coarsening_metrics(cfg)
         )
         Fs = [float(h[1][2]) for h in hist]
-        assert all(f2 < f1 + 1e-9 for f1, f2 in zip(Fs, Fs[1:])), Fs
+        # pairwise-adjacent comparison: the second iterable is one shorter
+        assert all(f2 < f1 + 1e-9 for f1, f2 in zip(Fs, Fs[1:], strict=False)), Fs
         assert float(jnp.abs(c_final).max()) < 1.2  # phase-bound sanity
         s_vals = [float(h[1][0]) for h in hist]
         assert s_vals[-1] > s_vals[0]  # demixing proceeds

@@ -31,7 +31,7 @@ class TestSaveRestore:
         t = tree()
         save_pytree(t, str(tmp_path), 7, metadata={"loss": 1.5})
         restored, manifest = restore_pytree(t, str(tmp_path))
-        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored), strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
             assert a.dtype == b.dtype
         assert manifest["step"] == 7
@@ -146,5 +146,5 @@ class TestExactResume:
         for i in range(2, 4):
             q, t, _ = step(q, t, batches(i))
 
-        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(q)):
+        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(q), strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -83,7 +83,7 @@ class TestStencil2D:
         coeffs = _rand(rng, (9,), dtype)
 
         def fn(windows, coe):  # nonlinear: laplacian-of-cube style
-            return sum(c * (w * w * w - w) for c, w in zip(coe, windows))
+            return sum(c * (w * w * w - w) for c, w in zip(coe, windows, strict=True))
 
         kern = stencil2d_pallas(
             data, coeffs, jnp.zeros_like(data) if bc == "np" else None,

@@ -68,7 +68,7 @@ class TestKernelMatchesOracle:
         coeffs = _rand(rng, (3,), jnp.float64)
 
         def fn(windows, coe):  # nonlinear: laplacian-of-cube style
-            return sum(c * (w * w * w - w) for c, w in zip(coe, windows))
+            return sum(c * (w * w * w - w) for c, w in zip(coe, windows, strict=True))
 
         init = jnp.zeros_like(data) if bc == "np" else None
         kern = stencil1d_batch_pallas(

@@ -75,7 +75,7 @@ class TestStencil3D:
         data = jnp.asarray(rng.standard_normal((8, 8, 16)))
 
         def fn(windows, coe):
-            return sum(c * w * w for c, w in zip(coe, windows))
+            return sum(c * w * w for c, w in zip(coe, windows, strict=True))
 
         coe = jnp.asarray(rng.standard_normal(27))
         kern = stencil3d_pallas(

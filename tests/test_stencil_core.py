@@ -175,6 +175,7 @@ class TestPlanCore:
             self._plans(),
             (stencil_destroy_2d, stencil_destroy_1d_batch,
              stencil_destroy_3d),
+            strict=True,
         ):
             shim(plan)  # all families accepted, all mark-and-return
             assert plan.destroyed

@@ -71,7 +71,7 @@ class TestStreamedMatchesMonolithic:
         # the paper's Fun variant streams too: nonlinearity inside the sweep
         def cube_fn(windows, coeffs):
             out = None
-            for w, c in zip(windows, coeffs):
+            for w, c in zip(windows, coeffs, strict=True):
                 term = c * (w * w * w - w)
                 out = term if out is None else out + term
             return out
