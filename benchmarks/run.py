@@ -411,6 +411,107 @@ def bench_coarsening_fig1(smoke: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# serving engine — batched vs sequential request dispatch (repro.serve)
+# ---------------------------------------------------------------------------
+
+
+def bench_serve(smoke: bool = False):
+    """Mixed solve stream through :class:`repro.serve.ServeEngine` (bucketed
+    stacked launches over a warm plan LRU) vs the strongest honest
+    sequential baseline: warm per-class *jitted* per-request dispatch.
+
+    Both sides solve the identical request list on identical warm plans,
+    within one run — CI guards the within-run ratio
+    ``serve_batched_mixed / serve_sequential_mixed``.  Latency-percentile
+    rows (p50/p99 submit-to-result) ride along for trajectory."""
+    import functools
+
+    import repro
+    from repro.serve import ServeEngine
+    from repro.serve.cli import build_requests
+
+    # the three stacked-family classes (ADI buckets dispatch per-request
+    # by design — bit-identity — so they'd only dilute the comparison)
+    classes = [
+        ("laplacian", (64, 64), None, None),
+        ("biharmonic", (48, 48), None, None),
+        ("laplacian", (96,), None, None),
+    ]
+    n_requests = 48 if smoke else 96
+    repeat = 3 if smoke else 5
+    requests = build_requests(n_requests, 0, 1, classes=classes)
+
+    # -- sequential baseline: warm jitted per-request dispatch ------------
+    plans = {}
+    steps = {}
+    for op, shape, _, _ in classes:
+        if len(shape) == 1:
+            plan = repro.create(op, (1,) + shape, mode="batch", backend="jnp")
+        else:
+            plan = repro.create(op, shape, backend="jnp")
+        plans[(op, shape)] = plan
+        steps[(op, shape)] = jax.jit(functools.partial(repro.compute, plan))
+
+    def solve_sequential(reqs):
+        outs = []
+        for req in reqs:
+            fn = steps[(req.operator, req.shape)]
+            if len(req.shape) == 1:
+                out = fn(req.field[None, :])[0]
+            else:
+                out = fn(req.field)
+            outs.append(out)
+        jax.block_until_ready(outs)
+        return outs
+
+    solve_sequential(requests)  # warm the compile caches
+    seq_wall = min(
+        _walltime(lambda: solve_sequential(requests)) for _ in range(repeat)
+    )
+
+    # -- batched engine, steady state -------------------------------------
+    engine = ServeEngine(backend="jnp", max_batch=n_requests).start()
+    refs = solve_sequential(requests)
+    results = engine.solve_many(requests)  # warm plans + stacked compiles
+    err = max(
+        float(jnp.abs(res.out - ref).max())
+        for res, ref in zip(results, refs)
+    )
+    engine.metrics.reset()
+    bat_wall = min(
+        _walltime(lambda: engine.solve_many(requests)) for _ in range(repeat)
+    )
+    lat = engine.stats()["latency"]
+    engine.close()
+    for plan in plans.values():
+        repro.destroy(plan)
+
+    us_seq = seq_wall * 1e6 / n_requests
+    us_bat = bat_wall * 1e6 / n_requests
+    return [
+        (
+            "serve_sequential_mixed",
+            us_seq,
+            f"{n_requests / seq_wall:.0f}req/s;n={n_requests}",
+        ),
+        (
+            "serve_batched_mixed",
+            us_bat,
+            f"{n_requests / bat_wall:.0f}req/s;speedup={us_seq / us_bat:.2f}x;"
+            f"err={err:.1e}",
+        ),
+        ("serve_batched_p50", lat["p50_s"] * 1e6, "submit-to-result"),
+        ("serve_batched_p99", lat["p99_s"] * 1e6, "submit-to-result"),
+    ]
+
+
+def _walltime(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
 # §Roofline — table from the dry-run artifacts
 # ---------------------------------------------------------------------------
 
@@ -453,6 +554,7 @@ BENCHMARKS = [
     ("stream", bench_stream, False, ("stream_",)),
     ("weno_step", bench_weno_step, False, ("weno_",)),
     ("cahn_hilliard_step", bench_cahn_hilliard_step, False, ("ch_step_",)),
+    ("serve", bench_serve, False, ("serve_",)),
     ("coarsening_fig1", bench_coarsening_fig1, True, ("fig1_",)),  # --full
     ("roofline_table", bench_roofline_table, False, ("roofline_",)),
 ]

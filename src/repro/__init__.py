@@ -54,6 +54,7 @@ from repro.api import (  # noqa: E402
     destroy,
     get_operator,
     operator_names,
+    plan_key,
     register_operator,
     swap,
 )
@@ -94,6 +95,7 @@ __all__ = [
     "register_operator",
     "get_operator",
     "operator_names",
+    "plan_key",
     "OperatorDef",
     # plan classes (pytree-native)
     "PlanCore",

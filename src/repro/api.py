@@ -35,16 +35,24 @@ user-registered operators participate in :func:`create` (both stencil and
 baked into autotune cache keys, so two operators sharing a geometry never
 alias one tuning entry.
 
+>>> import jax.numpy as jnp
 >>> import repro
->>> plan = repro.create("laplacian", (256, 256), bc="periodic")
->>> out = repro.compute(plan, field)                    # Compute
->>> field, out = repro.swap((out, field))               # Swap
->>> repro.destroy(plan)                                 # Destroy
+>>> field = jnp.zeros((256, 256))
+>>> plan = repro.create("laplacian", (256, 256), bc="periodic")  # Create
+>>> out = repro.compute(plan, field)                             # Compute
+>>> field, out = repro.swap((out, field))                        # Swap
+>>> repro.destroy(plan)                                          # Destroy
+
+:func:`plan_key` gives every such plan request a canonical string
+identity — the key of the serving engine's warm-plan LRU
+(:mod:`repro.serve`), a sibling of the autotuner's
+:func:`repro.tune.cache.tune_key`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 from collections.abc import Callable
 
 import jax.numpy as jnp
@@ -64,6 +72,7 @@ __all__ = [
     "destroy",
     "get_operator",
     "operator_names",
+    "plan_key",
     "register_operator",
     "swap",
 ]
@@ -127,7 +136,20 @@ def register_operator(
     Create time (moment/Taylor conditions, central symmetry, zero row
     sum); ``lint='off'|'warn'|'error'`` picks how register-time findings
     surface (:class:`repro.analysis.StencilLintWarning` /
-    :class:`repro.analysis.LintError`)."""
+    :class:`repro.analysis.LintError`).
+
+    >>> import numpy as np
+    >>> opdef = register_operator(
+    ...     "doc_identity3",
+    ...     weights=lambda ndim=1, h=1.0: np.array([0.0, 1.0, 0.0]),
+    ...     doc="3-point identity (doctest example)",
+    ...     overwrite=True,
+    ... )
+    >>> opdef.name
+    'doc_identity3'
+    >>> "doc_identity3" in operator_names()
+    True
+    """
     if not name or not isinstance(name, str):
         raise ValueError("operator name must be a non-empty string")
     if weights is None and diagonals is None:
@@ -158,7 +180,15 @@ def register_operator(
 
 def get_operator(name: str) -> OperatorDef:
     """Look up a registered operator; unknown names raise with the list
-    of known ones."""
+    of known ones.
+
+    >>> get_operator("laplacian").derivative
+    2
+    >>> get_operator("no_such_op")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown operator 'no_such_op'; registered: ...
+    """
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -170,8 +200,63 @@ def get_operator(name: str) -> OperatorDef:
 
 
 def operator_names() -> tuple:
-    """The registered operator names, sorted."""
+    """The registered operator names, sorted.
+
+    >>> "laplacian" in operator_names() and "diffusion" in operator_names()
+    True
+    """
     return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Plan identity
+# ---------------------------------------------------------------------------
+
+
+def plan_key(
+    operator: str,
+    shape,
+    *,
+    dtype,
+    bc: str = "periodic",
+    mode: str | None = None,
+    alpha: float | None = None,
+    extra=None,
+) -> str:
+    """Canonical string identity of one plan request.
+
+    The deterministic, order-independent key under which a *plan* (not a
+    tuning result) is cached — the serving engine's warm-plan LRU
+    (:class:`repro.serve.PlanLRU`) keys on exactly this, the same way the
+    Create-time autotuner keys its persistent cache on
+    :func:`repro.tune.cache.tune_key`.  Everything that changes the plan a
+    :func:`create` call would return is part of the key: operator name,
+    logical field shape, dtype, boundary condition, the ``mode`` hint, the
+    ADI ``alpha``, plus an ``extra`` dict for caller-specific
+    discriminators (backend request, batch quantisation, ...).  Host
+    identity is deliberately *not* part of the key — unlike a tuning
+    winner, a plan is portable.
+
+    >>> import json
+    >>> key = plan_key("laplacian", (64, 64), dtype="float32")
+    >>> json.loads(key)["operator"]
+    'laplacian'
+    >>> key == plan_key("laplacian", [64, 64], dtype=jnp.float32)
+    True
+    >>> key == plan_key("laplacian", (64, 64), dtype="float32", bc="np")
+    False
+    """
+    doc = {
+        "schema": 1,
+        "operator": str(operator),
+        "shape": [int(s) for s in shape],
+        "dtype": str(jnp.dtype(dtype)),
+        "bc": bc,
+        "mode": mode,
+        "alpha": None if alpha is None else float(alpha),
+        "extra": extra,
+    }
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"))
 
 
 # -- built-in operators ------------------------------------------------------
@@ -343,6 +428,15 @@ def create(
     conditions, ADI band topology/conditioning, Pallas grid feasibility)
     and surfaces findings as :class:`repro.analysis.StencilLintWarning`
     or :class:`repro.analysis.LintError`.
+
+    >>> plan = create("laplacian", (32, 32), bc="periodic")
+    >>> type(plan).__name__
+    'Stencil2D'
+    >>> op = create("diffusion", (16, 16), mode="adi", alpha=0.1,
+    ...             dtype="float32")
+    >>> type(op).__name__
+    'ADIOperator'
+    >>> destroy(plan); destroy(op)
     """
     from repro.analysis import check_lint_mode
 
@@ -530,7 +624,14 @@ def compute(plan, field, *extra):
 
     Plans are pytrees, so ``jax.jit(compute)(plan, field)`` traces the
     plan's arrays as arguments: swapping in new weight values reuses the
-    compiled trace."""
+    compiled trace.
+
+    >>> plan = create("laplacian", (8, 8), bc="periodic")
+    >>> out = compute(plan, jnp.ones((8, 8)))   # laplacian of a constant
+    >>> bool(jnp.all(out == 0.0))
+    True
+    >>> destroy(plan)
+    """
     if getattr(plan, "_destroyed", False):
         raise ValueError(
             "plan has been destroyed (repro.destroy); create a new one"
@@ -558,7 +659,11 @@ def swap(buf):
     :class:`~repro.core.stencil.DoubleBuffer` (flipped in place and
     returned).  Inside a jitted, donation-enabled step this is the
     zero-copy pointer swap; :func:`repro.core.cahn_hilliard.ch_evolve`
-    is the same idiom at whole-chunk granularity."""
+    is the same idiom at whole-chunk granularity.
+
+    >>> swap(("old", "new"))
+    ('new', 'old')
+    """
     if isinstance(buf, _stencil.DoubleBuffer):
         return buf.swap()
     try:
@@ -577,5 +682,11 @@ def destroy(plan) -> None:
     JAX buffers are reference counted, so nothing is freed eagerly; the
     plan is marked destroyed and :func:`compute` refuses it afterwards.
     Destroying ``None``, an already-destroyed plan, or a
-    :class:`DoubleBuffer` is a no-op — double-Destroy never raises."""
+    :class:`DoubleBuffer` is a no-op — double-Destroy never raises.
+
+    >>> plan = create("laplacian", (8, 8))
+    >>> destroy(plan); destroy(plan)    # idempotent
+    >>> plan.destroyed
+    True
+    """
     _stencil.plan_destroy(plan)

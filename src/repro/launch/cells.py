@@ -261,6 +261,60 @@ def make_serve_step(model: Model, *, sh: Shardings) -> Callable:
     return serve_step
 
 
+def greedy_generate(
+    *,
+    arch: str,
+    prompt_tokens,
+    max_new_tokens: int = 16,
+    reduced: bool = False,
+    seed: int = 0,
+    params=None,
+) -> list[int]:
+    """Prefill + greedy decode with KV caches — the LM decode driver.
+
+    The decode step is the same function the decode_32k / long_500k
+    dry-run cells lower (:func:`make_serve_step`); state-exact chunked
+    prefill runs through the decode path for every model family.  (This
+    lived in ``repro.launch.serve`` until that name became the
+    solve-serving shim; the LM substrate's decode-correctness tests pin
+    it here.)"""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    sh = Shardings.none()
+
+    toks = [int(t) for t in prompt_tokens]
+    max_seq = len(toks) + max_new_tokens + 1
+    cache = model.init_cache(1, max_seq)
+
+    if cfg.family == "encdec":
+        from repro.models import encdec as em
+
+        frames = jnp.zeros((1, cfg.enc_seq, cfg.d_model), jnp.float32)
+        enc = em.encode(params, cfg, frames, sh)
+        xk, xv = em.prefill_cross(params, cfg, enc)
+        cache = dict(cache, xk=xk, xv=xv)
+
+    step = jax.jit(lambda p, t, i, c: model.decode(p, t, i, c, sh))
+
+    # chunked prefill through the decode path (state-exact for all families)
+    logits = None
+    for i, t in enumerate(toks):
+        logits, cache = step(params, jnp.asarray([t], jnp.int32), i, cache)
+
+    out = list(toks)
+    for j in range(max_new_tokens):
+        nxt = int(jnp.argmax(logits, axis=-1)[0])
+        out.append(nxt)
+        logits, cache = step(
+            params, jnp.asarray([nxt], jnp.int32), len(toks) + j, cache
+        )
+    return out
+
+
 # ---------------------------------------------------------------------------
 # cell assembly for the dry-run
 # ---------------------------------------------------------------------------

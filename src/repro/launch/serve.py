@@ -1,95 +1,21 @@
-"""Serving entry point: prefill + greedy decode with KV caches.
+"""Deprecated location of the serving CLI — use ``python -m repro.serve``.
 
-CLI:
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
-        --prompt 5,6,7 --max-new-tokens 16
+This module once held an LM prefill/decode driver; serving in this
+library now means *solve serving*: the batched solve-request engine with
+plan-LRU multiplexing in :mod:`repro.serve`.  The module name keeps
+working as a thin shim —
 
-The decode step is the same function the decode_32k / long_500k dry-run
-cells lower (launch/cells.make_serve_step); on a mesh the cache is
-sequence-sharded and attention uses the flash-decode shard_map.
+    PYTHONPATH=src python -m repro.launch.serve --requests 48
+
+is exactly ``python -m repro.serve``.  The LM decode driver moved to
+:func:`repro.launch.cells.greedy_generate`, next to the serve-step
+lowering the dry-run cells use.
 """
 
 from __future__ import annotations
 
-import argparse
-from collections.abc import Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
-from repro.models.api import build_model
-from repro.runtime.sharding import Shardings
-
-
-def generate(
-    *,
-    arch: str,
-    prompt_tokens: Sequence[int],
-    max_new_tokens: int = 16,
-    reduced: bool = False,
-    seed: int = 0,
-    params=None,
-) -> list[int]:
-    cfg = get_config(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    model = build_model(cfg)
-    if params is None:
-        params = model.init(jax.random.PRNGKey(seed))
-    sh = Shardings.none()
-
-    toks = list(int(t) for t in prompt_tokens)
-    max_seq = len(toks) + max_new_tokens + 1
-    cache = model.init_cache(1, max_seq)
-
-    if cfg.family == "encdec":
-        from repro.models import encdec as em
-
-        frames = jnp.zeros((1, cfg.enc_seq, cfg.d_model), jnp.float32)
-        enc = em.encode(params, cfg, frames, sh)
-        xk, xv = em.prefill_cross(params, cfg, enc)
-        cache = dict(cache, xk=xk, xv=xv)
-
-    step = jax.jit(
-        lambda p, t, i, c: model.decode(p, t, i, c, sh)
-    )
-
-    # chunked prefill through the decode path (state-exact for all families)
-    logits = None
-    for i, t in enumerate(toks):
-        logits, cache = step(
-            params, jnp.asarray([t], jnp.int32), i, cache
-        )
-
-    out = list(toks)
-    for j in range(max_new_tokens):
-        nxt = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
-        out.append(nxt)
-        logits, cache = step(
-            params, jnp.asarray([nxt], jnp.int32), len(toks) + j, cache
-        )
-    return out
-
-
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--prompt", default="1,2,3")
-    ap.add_argument("--max-new-tokens", type=int, default=16)
-    ap.add_argument("--reduced", action="store_true")
-    args = ap.parse_args(argv)
-    prompt = [int(x) for x in args.prompt.split(",") if x]
-    out = generate(
-        arch=args.arch,
-        prompt_tokens=prompt,
-        max_new_tokens=args.max_new_tokens,
-        reduced=args.reduced,
-    )
-    print("tokens:", out)
-    return 0
-
+from repro.launch.cells import greedy_generate as generate  # noqa: F401
+from repro.serve.cli import main
 
 if __name__ == "__main__":
     raise SystemExit(main())

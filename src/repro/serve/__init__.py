@@ -1,0 +1,40 @@
+"""Solver-as-a-service: batched solve requests over warm plans.
+
+The serving layer the ROADMAP's top open item asks for — the library's
+plan caches, batched kernels, and pytree plans, packaged as an engine
+that accepts many independent solve requests and serves them at batch
+throughput:
+
+- :class:`SolveRequest` / :class:`SolveResult` — the request model
+  (:mod:`repro.serve.request`).
+- :class:`PlanLRU` — warm-plan cache with destroy-on-evict, keyed by
+  :func:`repro.api.plan_key` (:mod:`repro.serve.lru`).
+- :mod:`repro.serve.batching` — the bucketing policy: rank-1 requests
+  stack into batched-1D plans, 2D/3D stencils ``vmap``-stack, ADI
+  multiplexes warm plans.
+- :class:`ServeEngine` — bounded ingestion queue + background compute
+  thread (:mod:`repro.serve.engine`).
+- ``python -m repro.serve`` — the CLI (:mod:`repro.serve.cli`).
+
+See ``docs/serving.md`` for the request model, batching semantics, and
+tuning knobs; ``docs/architecture.md`` for where serving sits in the
+plan lifecycle.
+"""
+
+from repro.serve.batching import bucket_key, classify, execute_bucket
+from repro.serve.engine import ServeEngine
+from repro.serve.lru import PlanLRU
+from repro.serve.metrics import ServeMetrics
+from repro.serve.request import SolveRequest, SolveResult, validate_request
+
+__all__ = [
+    "PlanLRU",
+    "ServeEngine",
+    "ServeMetrics",
+    "SolveRequest",
+    "SolveResult",
+    "bucket_key",
+    "classify",
+    "execute_bucket",
+    "validate_request",
+]

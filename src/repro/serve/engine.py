@@ -1,0 +1,232 @@
+"""The solve-serving engine: bounded queue + background compute thread.
+
+The shape is the ``OfflineInference`` pattern from MaxText's MLPerf
+harness: callers enqueue work onto a *bounded* queue from their own
+threads (ingestion), while one background worker drains the queue in
+batches and drives the device (compute) — so host-side request handling
+overlaps device execution instead of serialising with it.  Here the unit
+of device work is a *bucket* (requests sharing shape/dtype/operator/
+bc/mode/alpha/steps — see :mod:`repro.serve.batching`) and the expensive
+per-class state is a plan held warm in a destroy-on-evict LRU
+(:class:`repro.serve.PlanLRU`).
+
+Lifecycle::
+
+    engine = ServeEngine(plan_capacity=8, max_batch=32, backend="jnp")
+    futs = [engine.submit(req) for req in requests]   # caller thread(s)
+    results = [f.result() for f in futs]              # SolveResult each
+    engine.close()                                    # drain, join, destroy
+
+or, as a context manager / one call::
+
+    with ServeEngine(backend="jnp") as engine:
+        results = engine.solve_many(requests)
+
+>>> import jax.numpy as jnp
+>>> from repro.serve import ServeEngine, SolveRequest
+>>> with ServeEngine(backend="jnp") as engine:
+...     reqs = [SolveRequest(field=jnp.ones((8, 8)), operator="laplacian")
+...             for _ in range(4)]
+...     results = engine.solve_many(reqs)
+...     stats = engine.stats()
+>>> [r.out.shape for r in results] == [(8, 8)] * 4
+True
+>>> stats["completed"], stats["plan_lru"]["misses"]
+(4, 1)
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+from repro.serve import batching as _batching
+from repro.serve.lru import PlanLRU
+from repro.serve.metrics import ServeMetrics
+from repro.serve.request import SolveRequest, SolveResult, validate_request
+
+_SENTINEL = None  # queue poison pill; FIFO order guarantees full drain first
+
+
+class ServeEngine:
+    """Batched solve-request engine with plan-LRU multiplexing.
+
+    ``plan_capacity`` bounds the warm-plan LRU; ``max_batch`` bounds how
+    many queued requests one drain may fuse; ``queue_depth`` bounds the
+    ingestion queue (a full queue applies backpressure to submitters —
+    ``submit`` blocks — instead of growing without bound);
+    ``batch_window_s`` optionally lingers after the first request of a
+    drain to let a sparse stream accumulate into fuller batches;
+    ``backend``/``tune`` pass through to the Create of every plan the
+    LRU misses on.
+    """
+
+    def __init__(
+        self,
+        *,
+        plan_capacity: int = 8,
+        max_batch: int = 32,
+        queue_depth: int = 256,
+        batch_window_s: float = 0.0,
+        backend: str = "auto",
+        tune: str = "off",
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = max_batch
+        self.batch_window_s = float(batch_window_s)
+        self.backend = backend
+        self.tune = tune
+        self.plans = PlanLRU(plan_capacity)
+        self.metrics = ServeMetrics()
+        self._queue: queue.Queue = queue.Queue(maxsize=queue_depth)
+        self._worker: threading.Thread | None = None
+        self._closed = False
+        self._lock = threading.Lock()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "ServeEngine":
+        """Start the background compute thread (idempotent; ``submit``
+        auto-starts)."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed; create a new one")
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._run, name="repro-serve-worker", daemon=True
+                )
+                self._worker.start()
+        return self
+
+    def close(self) -> None:
+        """Drain every queued request, join the worker, destroy the warm
+        plans.  Idempotent; the engine is unusable afterwards."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            worker = self._worker
+        if worker is not None:
+            self._queue.put(_SENTINEL)
+            worker.join()
+        self.plans.clear(destroy=True)
+
+    def __enter__(self) -> "ServeEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- ingestion (caller threads) ---------------------------------------
+
+    def submit(self, request: SolveRequest) -> Future:
+        """Validate and enqueue one request; returns a Future resolving
+        to a :class:`SolveResult`.
+
+        Malformed requests raise ``ValueError`` here, on the caller's
+        thread — they never occupy queue space.  A full queue blocks
+        (bounded-queue backpressure, the MaxText idiom)."""
+        if self._closed:
+            raise RuntimeError("engine is closed; create a new one")
+        validate_request(request)
+        self.start()
+        fut: Future = Future()
+        self.metrics.on_submit()
+        self._queue.put((request, fut, time.perf_counter()))
+        return fut
+
+    def solve(self, request: SolveRequest) -> SolveResult:
+        """Submit one request and wait for its result."""
+        return self.submit(request).result()
+
+    def solve_many(self, requests) -> list[SolveResult]:
+        """Submit a whole stream and wait; results in request order.
+
+        Submission overlaps compute: the worker starts batching as soon
+        as the first request lands, while this thread is still feeding
+        the queue."""
+        futures = [self.submit(r) for r in requests]
+        return [f.result() for f in futures]
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Engine counters + latency percentiles + plan-LRU stats."""
+        snap = self.metrics.snapshot()
+        snap["plan_lru"] = self.plans.stats()
+        return snap
+
+    # -- the worker (background thread) ------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _SENTINEL:
+                return
+            batch = [item]
+            deadline = time.perf_counter() + self.batch_window_s
+            stop = False
+            while len(batch) < self.max_batch:
+                try:
+                    if self.batch_window_s > 0.0:
+                        remaining = deadline - time.perf_counter()
+                        nxt = self._queue.get(timeout=max(remaining, 0.0))
+                    else:
+                        nxt = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _SENTINEL:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self._process(batch)
+            if stop:
+                return
+
+    def _process(self, batch) -> None:
+        for key, items in _batching.bucketize(batch).items():
+            del key
+            reqs = [req for req, _, _ in items]
+            futs = [fut for _, fut, _ in items]
+            try:
+                kind, plan_key, _ = _batching.plan_spec(
+                    reqs[0], backend=self.backend
+                )
+                plan, hit = self.plans.get_or_create(
+                    plan_key,
+                    lambda r=reqs[0]: _batching.create_plan(
+                        r, backend=self.backend, tune=self.tune
+                    ),
+                )
+                outs = _batching.execute_bucket(
+                    plan,
+                    kind,
+                    [r.field for r in reqs],
+                    reqs[0].steps,
+                    max_batch=self.max_batch,
+                )
+            except Exception as exc:  # noqa: BLE001 — fault isolation:
+                # one poisoned bucket fails its own futures, never the
+                # engine thread (subsequent buckets keep serving)
+                for fut in futs:
+                    fut.set_exception(exc)
+                self.metrics.on_fail(len(futs))
+                continue
+            self.metrics.on_batch(len(items))
+            now = time.perf_counter()
+            for (req, fut, t0), out in zip(items, outs, strict=True):
+                latency = now - t0
+                self.metrics.record_latency(latency)
+                fut.set_result(
+                    SolveResult(
+                        out=out,
+                        request=req,
+                        latency_s=latency,
+                        batch_size=len(items),
+                        plan_hit=hit,
+                    )
+                )
+            self.metrics.on_complete(len(items))

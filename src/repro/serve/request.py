@@ -1,0 +1,145 @@
+"""Solve request / result types of the serving engine.
+
+A :class:`SolveRequest` is one independent solve: a field, a registered
+operator name, boundary condition, an optional implicit-``'adi'`` mode
+with its ``alpha``, a step count, and a dtype.  Requests carry everything
+the engine needs to (a) key the warm-plan LRU (:func:`repro.api.plan_key`)
+and (b) decide which batching family the request rides
+(:mod:`repro.serve.batching`): rank-1 fields stack into the batched-1D
+plans (the cuPentBatch model), rank-2/3 stencil requests ``vmap``-stack,
+ADI requests multiplex a warm plan.
+
+>>> import jax.numpy as jnp
+>>> req = SolveRequest(field=jnp.ones((16, 16)), operator="laplacian")
+>>> req.shape
+(16, 16)
+>>> req.steps
+1
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro import api as _api
+
+_BCS = ("periodic", "np")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One independent solve: ``(field, operator, bc, alpha, steps, dtype)``.
+
+    ``field`` is the input array — rank 1 (a line, ridden on the
+    batched-1D family), rank 2, or rank 3.  ``operator`` is a registered
+    operator name (:func:`repro.get_operator`).  ``mode=None`` requests
+    the explicit stencil apply; ``mode='adi'`` the implicit ADI solve
+    (``alpha`` required).  ``steps`` repeats the Compute that many times,
+    feeding each output back in (the double-buffer time loop).  ``dtype``
+    defaults to the field's own dtype.  ``tag`` is an opaque caller
+    correlation id, returned untouched on the result.
+    """
+
+    field: Any
+    operator: str
+    bc: str = "periodic"
+    mode: str | None = None
+    alpha: float | None = None
+    steps: int = 1
+    dtype: Any = None
+    tag: Any = None
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        """The logical per-request field shape."""
+        return tuple(int(s) for s in jnp.shape(self.field))
+
+    def resolved_dtype(self):
+        """The request dtype: explicit ``dtype=`` or the field's own."""
+        if self.dtype is not None:
+            return jnp.dtype(self.dtype)
+        dtype = getattr(self.field, "dtype", None)  # fast path: arrays
+        if dtype is not None:
+            return jnp.dtype(dtype)
+        return jnp.dtype(jnp.result_type(self.field))
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """The engine's answer to one :class:`SolveRequest`.
+
+    ``out`` is the solved field (same shape as the request's), delivered
+    as a **host** array — results cross the serving boundary, and one
+    batched download beats per-row device slicing (see
+    :func:`repro.serve.batching.execute_bucket`);
+    ``latency_s`` is submit-to-result wall time, ``batch_size`` the
+    number of requests that shared the kernel dispatch, ``plan_hit``
+    whether the plan came warm out of the LRU.
+    """
+
+    out: Any
+    request: SolveRequest
+    latency_s: float = 0.0
+    batch_size: int = 1
+    plan_hit: bool = False
+
+    @property
+    def tag(self):
+        return self.request.tag
+
+
+def validate_request(req: SolveRequest) -> None:
+    """Reject malformed requests *at submit time*, on the caller's thread.
+
+    A bad request must never poison a batch: unknown operators, bad
+    ranks, mode/operator mismatches, and missing ``alpha`` all raise
+    ``ValueError`` here, before the request reaches the queue.
+
+    >>> import jax.numpy as jnp
+    >>> validate_request(SolveRequest(field=jnp.ones((8, 8)), operator="laplacian"))
+    >>> validate_request(SolveRequest(field=jnp.ones((8, 8)), operator="laplacian", mode="adi"))
+    Traceback (most recent call last):
+        ...
+    ValueError: mode='adi' needs alpha= ...
+    """
+    opdef = _api.get_operator(req.operator)  # raises on unknown names
+    if req.bc not in _BCS:
+        raise ValueError(f"bc must be one of {_BCS}, got {req.bc!r}")
+    rank = len(req.shape)
+    if rank not in (1, 2, 3):
+        raise ValueError(
+            f"request field must be rank 1, 2 or 3, got shape {req.shape}"
+        )
+    if not isinstance(req.steps, int) or req.steps < 1:
+        raise ValueError(f"steps must be a positive int, got {req.steps!r}")
+    if req.mode not in (None, "adi"):
+        raise ValueError(
+            f"request mode must be None (stencil) or 'adi', got {req.mode!r}"
+        )
+    if req.mode == "adi":
+        if req.alpha is None:
+            raise ValueError(
+                "mode='adi' needs alpha= (the implicit band coefficient)"
+            )
+        if rank == 1:
+            raise ValueError(
+                "mode='adi' needs a rank-2 or rank-3 field (the ADI solve "
+                "sweeps at least two directions)"
+            )
+        if opdef.diagonals is None:
+            raise ValueError(
+                f"operator {req.operator!r} defines no implicit bands; "
+                "registered band-building operators: "
+                f"{[n for n in _api.operator_names() if _api.get_operator(n).diagonals]}"
+            )
+    else:
+        if req.alpha is not None:
+            raise ValueError("alpha= only applies to mode='adi' requests")
+        if opdef.weights is None:
+            raise ValueError(
+                f"operator {req.operator!r} defines no stencil weights "
+                "(band-only); request mode='adi' with alpha="
+            )

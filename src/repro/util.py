@@ -39,7 +39,15 @@ def deprecated_shim(old: str, new: str, impl):
     shim.__doc__ = (
         f"Deprecated alias (one release): use ``repro.{new}`` — the unified "
         f"four-function facade in :mod:`repro.api`.  Behaviour is identical "
-        f"to the pre-facade ``{old}``."
+        f"to the pre-facade ``{old}``; every call emits a "
+        f"``DeprecationWarning``.  Example migration::\n\n"
+        f"    import warnings, repro\n"
+        f"    with warnings.catch_warnings():\n"
+        f"        warnings.simplefilter('ignore', DeprecationWarning)\n"
+        f"        result = repro.{old}(...)   # old spelling, still works\n"
+        f"    result = repro.{new}(...)       # the facade equivalent\n\n"
+        f"See the migration table in README.md ('Migrating from the "
+        f"per-dimension API') for the exact argument mapping."
     )
     return shim
 

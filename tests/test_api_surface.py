@@ -18,6 +18,7 @@ EXPECTED_SURFACE = sorted(
         "register_operator",
         "get_operator",
         "operator_names",
+        "plan_key",
         "OperatorDef",
         # plan classes (pytree-native)
         "PlanCore",
@@ -69,3 +70,15 @@ def test_star_import_matches_all():
     exec("from repro import *", ns)  # noqa: S102 — the point of the test
     exported = {k for k in ns if not k.startswith("_")}
     assert exported == set(repro.__all__)
+
+
+def test_every_public_name_documented():
+    """Every name on the public surface carries a real docstring — the
+    facade's documentation contract (the CI docs lane additionally
+    executes the doctest examples in repro.api and repro.serve)."""
+    for name in repro.__all__:
+        doc = getattr(repro, name).__doc__
+        assert doc and doc.strip(), f"repro.{name} has no docstring"
+        assert len(doc.strip()) > 40, (
+            f"repro.{name} docstring is a stub: {doc!r}"
+        )

@@ -33,7 +33,7 @@ class TestCellRegistry:
 
 class TestServeLoop:
     def test_greedy_generation_deterministic(self):
-        from repro.launch.serve import generate
+        from repro.launch.cells import greedy_generate as generate
 
         a = generate(arch="smollm-135m", reduced=True,
                      prompt_tokens=[3, 9, 27], max_new_tokens=5, seed=1)
@@ -47,7 +47,7 @@ class TestServeLoop:
     def test_generation_matches_full_forward_greedy(self):
         """Greedy decode through the cache == argmax over the full forward
         at each step (the serving-correctness contract)."""
-        from repro.launch.serve import generate
+        from repro.launch.cells import greedy_generate as generate
         from repro.models.api import build_model
 
         cfg = get_config("yi-9b").reduced()

@@ -1,0 +1,374 @@
+"""Serving engine: plan-LRU semantics, batching correctness, engine behaviour.
+
+The engine's contract is *bit-identity* with sequential
+``repro.create``/``repro.compute`` — every batching family (stacked
+batched-1D, vmap-stacked stencil, plan-multiplexed ADI) is held to
+``==``, not ``allclose``, against the eager per-request reference."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro
+from repro.serve import (
+    PlanLRU,
+    ServeEngine,
+    SolveRequest,
+    bucket_key,
+    classify,
+    execute_bucket,
+    validate_request,
+)
+from repro.serve import batching as _batching
+from repro.serve.metrics import ServeMetrics, percentile
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _sequential(plan, field, steps):
+    """The eager per-request oracle: plain repro.compute, step by step."""
+    out = field
+    for _ in range(steps):
+        out = repro.compute(plan, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PlanLRU
+# ---------------------------------------------------------------------------
+
+
+class TestPlanLRU:
+    def test_hit_miss_counters(self):
+        lru = PlanLRU(capacity=4)
+        plan, hit = lru.get_or_create("a", lambda: object())
+        assert not hit
+        again, hit = lru.get_or_create("a", lambda: pytest.fail("factory ran on hit"))
+        assert hit and again is plan
+        stats = lru.stats()
+        assert (stats["hits"], stats["misses"], stats["evictions"]) == (1, 1, 0)
+
+    def test_eviction_is_least_recently_used(self):
+        lru = PlanLRU(capacity=2, destroy_on_evict=False)
+        lru.put("a", "A")
+        lru.put("b", "B")
+        assert lru.get("a") == "A"  # refresh "a" -> "b" is now LRU
+        lru.put("c", "C")
+        assert "b" not in lru
+        assert "a" in lru and "c" in lru
+        assert lru.stats()["evictions"] == 1
+
+    def test_destroy_on_evict_frees_plan_state(self):
+        lru = PlanLRU(capacity=1)
+        plan = repro.create("laplacian", (8, 8))
+        lru.put("old", plan)
+        lru.put("new", repro.create("laplacian", (16, 16)))
+        # the evicted plan is destroyed: compute refuses it afterwards
+        assert plan.destroyed
+        with pytest.raises(ValueError, match="destroyed"):
+            repro.compute(plan, jnp.ones((8, 8)))
+        lru.clear()
+
+    def test_destroy_on_evict_false_keeps_plan_usable(self):
+        lru = PlanLRU(capacity=1, destroy_on_evict=False)
+        plan = repro.create("laplacian", (8, 8))
+        lru.put("old", plan)
+        lru.put("new", "whatever")
+        assert not plan.destroyed
+        out = repro.compute(plan, jnp.ones((8, 8)))
+        assert bool(jnp.all(out == 0.0))
+        repro.destroy(plan)
+
+    def test_capacity_one_thrash(self):
+        """Two alternating classes through a capacity-1 cache: every access
+        after the first pair misses, and each miss evicts the other plan."""
+        lru = PlanLRU(capacity=1)
+        makes = {"a": 0, "b": 0}
+
+        def factory(key):
+            makes[key] += 1
+            return repro.create("laplacian", (8, 8))
+
+        for _ in range(3):
+            for key in ("a", "b"):
+                plan, hit = lru.get_or_create(key, lambda k=key: factory(k))
+                assert not hit
+                assert not plan.destroyed  # the *resident* plan is live
+        stats = lru.stats()
+        assert stats["misses"] == 6 and stats["hits"] == 0
+        assert stats["evictions"] == 5  # every insert but the last evicts
+        assert makes == {"a": 3, "b": 3}
+        lru.clear()
+
+    def test_clear_destroys(self):
+        lru = PlanLRU(capacity=4)
+        plan = repro.create("laplacian", (8, 8))
+        lru.put("a", plan)
+        lru.clear()
+        assert len(lru) == 0 and plan.destroyed
+
+    def test_bad_capacity_rejected(self):
+        with pytest.raises(ValueError):
+            PlanLRU(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Batching correctness — bit-identity with sequential solves
+# ---------------------------------------------------------------------------
+
+
+class TestBatchingBitIdentity:
+    @pytest.mark.parametrize("steps", [1, 3])
+    def test_stencil_bucket_matches_sequential(self, steps):
+        fields = [jnp.asarray(_rng(i).standard_normal((24, 24))) for i in range(5)]
+        plan = repro.create("laplacian", (24, 24), backend="jnp")
+        outs = execute_bucket(plan, _batching.STENCIL, fields, steps, max_batch=8)
+        for field, out in zip(fields, outs):
+            assert bool(jnp.all(out == _sequential(plan, field, steps)))
+        repro.destroy(plan)
+
+    @pytest.mark.parametrize("steps", [1, 2])
+    def test_batch1d_bucket_matches_sequential(self, steps):
+        fields = [jnp.asarray(_rng(i).standard_normal(96)) for i in range(6)]
+        plan = repro.create("laplacian", (1, 96), mode="batch", backend="jnp")
+        outs = execute_bucket(plan, _batching.BATCH1D, fields, steps, max_batch=8)
+        for field, out in zip(fields, outs):
+            ref = _sequential(plan, field[None, :], steps)[0]
+            assert out.shape == field.shape
+            assert bool(jnp.all(out == ref))
+        repro.destroy(plan)
+
+    def test_adi_bucket_matches_sequential(self):
+        """ADI buckets multiplex one warm plan but keep the exact sequential
+        arithmetic (no re-vectorisation — see batching.py docstring)."""
+        fields = [jnp.asarray(_rng(i).standard_normal((16, 16))) for i in range(4)]
+        plan = repro.create("hyperdiffusion", (16, 16), mode="adi", alpha=0.1)
+        outs = execute_bucket(plan, _batching.ADI, fields, 2, max_batch=8)
+        for field, out in zip(fields, outs):
+            assert bool(jnp.all(out == _sequential(plan, field, 2)))
+        repro.destroy(plan)
+
+    def test_non_power_of_two_batch_padding_is_inert(self):
+        """5 requests quantise to a padded batch of 8; the zero-padding rows
+        must not perturb the real rows (bit-identity still holds)."""
+        fields = [jnp.asarray(_rng(i).standard_normal((16, 16))) for i in range(5)]
+        plan = repro.create("biharmonic", (16, 16), backend="jnp")
+        outs = execute_bucket(plan, _batching.STENCIL, fields, 1, max_batch=16)
+        assert len(outs) == 5
+        for field, out in zip(fields, outs):
+            assert bool(jnp.all(out == repro.compute(plan, field)))
+        repro.destroy(plan)
+
+    def test_quantize_batch(self):
+        assert [_batching.quantize_batch(b, 16) for b in (1, 2, 3, 5, 9, 16, 20)] == [
+            1, 2, 4, 8, 16, 16, 20,
+        ]
+
+    def test_classify_and_bucket_key(self):
+        line = SolveRequest(field=jnp.ones(32), operator="laplacian")
+        grid = SolveRequest(field=jnp.ones((8, 8)), operator="laplacian")
+        adi = SolveRequest(
+            field=jnp.ones((8, 8)), operator="hyperdiffusion", mode="adi", alpha=0.1
+        )
+        assert classify(line) == _batching.BATCH1D
+        assert classify(grid) == _batching.STENCIL
+        assert classify(adi) == _batching.ADI
+        # same class -> same bucket; different steps/shape/operator -> split
+        assert bucket_key(grid) == bucket_key(
+            SolveRequest(field=jnp.zeros((8, 8)), operator="laplacian")
+        )
+        assert bucket_key(grid) != bucket_key(
+            SolveRequest(field=jnp.ones((8, 8)), operator="laplacian", steps=2)
+        )
+        assert bucket_key(grid) != bucket_key(
+            SolveRequest(field=jnp.ones((16, 8)), operator="laplacian")
+        )
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine
+# ---------------------------------------------------------------------------
+
+
+def _mixed_requests(n, seed=0, steps=1):
+    classes = [
+        ("laplacian", (16, 16), None, None),
+        ("biharmonic", (12, 12), None, None),
+        ("laplacian", (48,), None, None),
+        ("hyperdiffusion", (12, 12), "adi", 0.1),
+    ]
+    rng = _rng(seed)
+    return [
+        SolveRequest(
+            field=jnp.asarray(rng.standard_normal(shape)),
+            operator=op,
+            mode=mode,
+            alpha=alpha,
+            steps=steps,
+            tag=i,
+        )
+        for i, (op, shape, mode, alpha) in (
+            (i, classes[i % len(classes)]) for i in range(n)
+        )
+    ]
+
+
+class TestServeEngine:
+    def test_mixed_stream_bit_identical_and_ordered(self):
+        """The acceptance criterion: a mixed stream over >= 3 distinct
+        (shape, operator) classes, bit-identical to sequential facade
+        calls, results in request order (tags preserved)."""
+        from repro.serve.cli import sequential_reference
+
+        requests = _mixed_requests(12, steps=2)
+        with ServeEngine(backend="jnp", max_batch=8) as engine:
+            results = engine.solve_many(requests)
+        refs = sequential_reference(requests)
+        assert [r.tag for r in results] == list(range(12))
+        for res, ref in zip(results, refs):
+            assert res.out.shape == res.request.shape
+            assert bool(jnp.all(res.out == ref)), f"tag {res.tag} diverged"
+
+    def test_stats_and_plan_reuse(self):
+        requests = _mixed_requests(8)  # 4 classes x 2
+        with ServeEngine(backend="jnp") as engine:
+            first = engine.solve_many(requests)
+            second = engine.solve_many(_mixed_requests(4, seed=1))
+            stats = engine.stats()
+        assert stats["completed"] == 12 and stats["failed"] == 0
+        assert stats["plan_lru"]["misses"] == 4  # one Create per class
+        assert stats["plan_lru"]["hits"] >= 4
+        assert stats["latency"]["count"] == 12
+        del first
+        # the second pass rides entirely warm plans
+        assert all(r.plan_hit for r in second)
+
+    def test_capacity_one_eviction_still_correct(self):
+        """Two classes through a single-plan LRU: constant thrash, correct
+        answers — eviction must never corrupt in-flight buckets."""
+        requests = _mixed_requests(8)[:2] * 3  # alternate two classes
+        with ServeEngine(backend="jnp", plan_capacity=1) as engine:
+            # solve one at a time to force alternating single-bucket drains
+            results = [engine.solve(r) for r in requests]
+            stats = engine.stats()
+        assert stats["plan_lru"]["evictions"] >= 4
+        plan_a = repro.create("laplacian", (16, 16), backend="jnp")
+        plan_b = repro.create("biharmonic", (12, 12), backend="jnp")
+        for res in results:
+            plan = plan_a if res.request.operator == "laplacian" else plan_b
+            assert bool(jnp.all(res.out == repro.compute(plan, res.request.field)))
+        repro.destroy(plan_a)
+        repro.destroy(plan_b)
+
+    def test_submit_rejects_malformed_requests(self):
+        from repro.kernels.penta import diffusion_diagonals
+
+        repro.register_operator(  # band-only: no stencil weights
+            "serve_test_band_only", diagonals=diffusion_diagonals,
+            overwrite=True,
+        )
+        with ServeEngine(backend="jnp") as engine:
+            ones = jnp.ones((8, 8))
+            for bad in [
+                SolveRequest(field=ones, operator="no_such_op"),
+                SolveRequest(field=ones, operator="laplacian", mode="adi"),
+                SolveRequest(field=ones, operator="laplacian", alpha=0.1),
+                SolveRequest(field=jnp.ones((2, 2, 2, 2)), operator="laplacian"),
+                SolveRequest(field=ones, operator="laplacian", steps=0),
+                SolveRequest(field=ones, operator="laplacian", bc="reflecting"),
+                SolveRequest(field=jnp.ones(8), operator="laplacian",
+                             mode="adi", alpha=0.1),
+                SolveRequest(field=ones, operator="serve_test_band_only"),
+            ]:
+                with pytest.raises(ValueError):
+                    engine.submit(bad)
+            assert engine.stats()["submitted"] == 0  # none reached the queue
+
+    def test_bucket_failure_isolated(self, monkeypatch):
+        """A bucket that explodes fails its own futures; the worker thread
+        survives and subsequent requests keep serving."""
+        req = _mixed_requests(1)[0]
+        with ServeEngine(backend="jnp") as engine:
+            engine.solve(req)  # warm path works
+            with monkeypatch.context() as mp:
+                mp.setattr(
+                    _batching, "execute_bucket",
+                    lambda *a, **k: (_ for _ in ()).throw(RuntimeError("boom")),
+                )
+                fut = engine.submit(_mixed_requests(1, seed=1)[0])
+                with pytest.raises(RuntimeError, match="boom"):
+                    fut.result(timeout=30)
+            # the engine is still alive after the failure
+            res = engine.solve(_mixed_requests(1, seed=2)[0])
+            stats = engine.stats()
+        assert stats["failed"] == 1 and stats["completed"] == 2
+        assert res.out.shape == req.shape
+
+    def test_close_idempotent_and_destroys_plans(self):
+        engine = ServeEngine(backend="jnp")
+        engine.solve(_mixed_requests(1)[0])
+        resident = list(engine.plans._plans.values())
+        engine.close()
+        engine.close()  # idempotent
+        assert all(p.destroyed for p in resident)
+        with pytest.raises(RuntimeError, match="closed"):
+            engine.submit(_mixed_requests(1)[0])
+        with pytest.raises(RuntimeError, match="closed"):
+            engine.start()
+
+    def test_validate_request_standalone(self):
+        validate_request(SolveRequest(field=jnp.ones((8, 8)), operator="laplacian"))
+        with pytest.raises(ValueError, match="alpha"):
+            validate_request(
+                SolveRequest(field=jnp.ones((8, 8)), operator="hyperdiffusion",
+                             mode="adi")
+            )
+
+
+# ---------------------------------------------------------------------------
+# Metrics + CLI
+# ---------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_percentile_nearest_rank(self):
+        xs = [float(i) for i in range(1, 101)]
+        assert percentile(xs, 50) == 50.0
+        assert percentile(xs, 99) == 99.0
+        assert percentile(xs, 100) == 100.0
+        assert np.isnan(percentile([], 50))
+
+    def test_reset(self):
+        m = ServeMetrics()
+        m.on_submit(3)
+        m.on_batch(3)
+        m.record_latency(0.5)
+        m.reset()
+        snap = m.snapshot()
+        assert snap["submitted"] == 0 and snap["batches"] == 0
+        assert snap["latency"] == {"count": 0}
+
+
+class TestServeCLI:
+    def test_main_verified_run(self, capsys):
+        from repro.serve.cli import main
+
+        rc = main(["--requests", "12", "--backend", "jnp", "--max-batch", "8"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "bit-identical to sequential" in out
+        assert "plan LRU" in out
+
+    def test_main_json_stats(self, tmp_path):
+        import json
+
+        from repro.serve.cli import main
+
+        path = tmp_path / "stats.json"
+        rc = main(["--requests", "8", "--backend", "jnp", "--json", str(path)])
+        assert rc == 0
+        payload = json.loads(path.read_text())
+        assert payload["requests"] == 8 and payload["verified"] is True
+        assert payload["stats"]["plan_lru"]["capacity"] == 8

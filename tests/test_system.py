@@ -59,7 +59,7 @@ class TestTrainLoop:
         assert all(np.isfinite(m["loss"]) for m in metrics)
 
     def test_serve_driver_smoke(self):
-        from repro.launch.serve import generate
+        from repro.launch.cells import greedy_generate as generate
 
         out = generate(
             arch="smollm-135m", reduced=True,
