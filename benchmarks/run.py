@@ -505,6 +505,118 @@ def bench_serve(smoke: bool = False):
     ]
 
 
+def bench_serve_chaos(smoke: bool = False):
+    """Serve latency under deterministic injected faults (repro.runtime.chaos).
+
+    The same mixed stream as ``bench_serve`` runs twice through one
+    engine: a clean pass, then a pass with two scheduled stalls (each
+    0.25 x this machine's clean-p50 — bounded injected delay, so the
+    guard below cannot flap on a slow runner) and one injected backend
+    failure forcing pallas→jnp degradation.  CI
+    guards the within-run ratio ``serve_chaos_p50_stalled /
+    serve_chaos_p50_clean`` — the hardened engine must keep the median
+    bounded while faults land — and the p99 row records the tail for
+    trajectory.
+
+    Fail-closed correctness: every non-degraded result must be
+    **bit-identical** to the warm sequential reference (degraded results
+    merely allclose — they ran on the fallback backend); any violation
+    raises, the rows go unmeasured, and the ratio guard fails the run."""
+    import functools
+
+    import repro
+    from repro.runtime import chaos
+    from repro.serve import ServeEngine
+    from repro.serve.cli import build_requests
+
+    classes = [
+        ("laplacian", (64, 64), None, None),
+        ("biharmonic", (48, 48), None, None),
+        ("laplacian", (96,), None, None),
+    ]
+    n_requests = 48 if smoke else 96
+    requests = build_requests(n_requests, 0, 1, classes=classes)
+
+    plans = {}
+    steps = {}
+    for op, shape, _, _ in classes:
+        if len(shape) == 1:
+            plan = repro.create(op, (1,) + shape, mode="batch", backend="jnp")
+        else:
+            plan = repro.create(op, shape, backend="jnp")
+        plans[(op, shape)] = plan
+        steps[(op, shape)] = jax.jit(functools.partial(repro.compute, plan))
+
+    def reference(req):
+        fn = steps[(req.operator, req.shape)]
+        if len(req.shape) == 1:
+            return fn(req.field[None, :])[0]
+        return fn(req.field)
+
+    refs = [reference(r) for r in requests]
+    jax.block_until_ready(refs)
+
+    engine = ServeEngine(backend="jnp", max_batch=n_requests).start()
+    engine.solve_many(requests)  # warm plans + stacked compiles
+
+    # -- clean pass --------------------------------------------------------
+    engine.metrics.reset()
+    engine.solve_many(requests)
+    lat_clean = engine.stats()["latency"]
+    p50_clean = lat_clean["p50_s"]
+
+    # -- injected pass: stalls sized off this machine's clean median ------
+    plan = (
+        chaos.FaultPlan(seed=7)
+        .add("serve.bucket_compute", "backend_error", at=1)
+        .add(
+            "serve.bucket_compute", "stall",
+            at=(2, 3), duration=0.25 * p50_clean,
+        )
+    )
+    engine.metrics.reset()
+    with chaos.injected(plan):
+        results = engine.solve_many(requests)
+    stats = engine.stats()
+    lat = stats["latency"]
+    n_stalls = sum(1 for _, kind, _ in plan.fired() if kind == "stall")
+    engine.close()
+
+    failures = 0
+    for res, ref in zip(results, refs):
+        if res.degraded:
+            if not np.allclose(np.asarray(res.out), np.asarray(ref)):
+                failures += 1
+        elif not np.array_equal(np.asarray(res.out), np.asarray(ref)):
+            failures += 1
+    for plan_obj in plans.values():
+        repro.destroy(plan_obj)
+    if failures:
+        raise RuntimeError(
+            f"{failures} result(s) diverged from the sequential reference "
+            "under injected faults (bit-identity contract violated)"
+        )
+
+    return [
+        (
+            "serve_chaos_p50_clean",
+            p50_clean * 1e6,
+            f"submit-to-result;n={n_requests}",
+        ),
+        (
+            "serve_chaos_p50_stalled",
+            lat["p50_s"] * 1e6,
+            f"stalls={n_stalls};degraded={stats['degraded']};"
+            f"retries={stats['retries']}",
+        ),
+        (
+            "serve_chaos_p99_stalled",
+            lat["p99_s"] * 1e6,
+            "tail under injected stalls",
+        ),
+    ]
+
+
 def _walltime(fn):
     t0 = time.perf_counter()
     fn()
@@ -555,6 +667,7 @@ BENCHMARKS = [
     ("weno_step", bench_weno_step, False, ("weno_",)),
     ("cahn_hilliard_step", bench_cahn_hilliard_step, False, ("ch_step_",)),
     ("serve", bench_serve, False, ("serve_",)),
+    ("serve_chaos", bench_serve_chaos, False, ("serve_chaos_",)),
     ("coarsening_fig1", bench_coarsening_fig1, True, ("fig1_",)),  # --full
     ("roofline_table", bench_roofline_table, False, ("roofline_",)),
 ]

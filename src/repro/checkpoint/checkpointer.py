@@ -31,6 +31,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.runtime import chaos as _chaos
+
 _MANIFEST = "manifest.json"
 _LATEST = "LATEST"
 
@@ -82,6 +84,11 @@ def save_pytree(
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
         }
+    # chaos points name every commit transition, so the crash-consistency
+    # sweep can kill the writer at each one and assert readers still see
+    # a fully committed checkpoint (the previous one, or — after the
+    # 'latest' point's rename — the new one).
+    _chaos.fire("checkpoint.write", step=step, point="leaves")
     manifest = {
         "step": step,
         "time": time.time(),
@@ -93,10 +100,12 @@ def save_pytree(
         f.flush()
         os.fsync(f.fileno())
     _fsync_dir(tmp)
+    _chaos.fire("checkpoint.write", step=step, point="rename")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
     _fsync_dir(directory)
+    _chaos.fire("checkpoint.write", step=step, point="latest")
     # atomic LATEST update
     lat_tmp = os.path.join(directory, _LATEST + ".tmp")
     with open(lat_tmp, "w") as f:
@@ -231,15 +240,15 @@ class Checkpointer:
                 os.path.join(self.directory, f"step_{step:08d}", _MANIFEST)
             ) as f:
                 return json.load(f)["metadata"].get(self.best_metric)
-        except FileNotFoundError:
-            return None
+        except (OSError, ValueError, KeyError):
+            return None  # unreadable/corrupt manifest: unscored, not fatal
 
     def _gc(self):
         steps = self._all_steps()
         keep = set(steps[-self.keep_last :]) if self.keep_last else set()
         if self.keep_best:
             scored = [
-                (s, self._metric_of(s)) for s in steps if self._metric_of(s) is not None
+                (s, m) for s in steps if (m := self._metric_of(s)) is not None
             ]
             rev = self.best_mode == "max"
             scored.sort(key=lambda t: t[1], reverse=rev)

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro import api as _api
 from repro.core import metrics as _metrics
+from repro.runtime import chaos as _chaos
 from repro.core.adi import (
     apply_along_x,
     apply_along_y,
@@ -540,6 +541,12 @@ def ch_evolve(
     done = 1  # initial step counts as step 1
     while done < n_steps + 1:
         todo = min(chunk, n_steps + 1 - done)
+        # chaos hook at the chunk boundary: 'crash' kills the driver here
+        # (checkpoint/restart territory), 'nan' poisons the carry so the
+        # chunk blows up — both consumed by runtime/resilient.py's guard
+        fault = _chaos.fire("evolve.step", step=done)
+        if fault is not None and fault.kind == "nan":
+            carry = (carry[0].at[(0,) * carry[0].ndim].set(fault.value), carry[1])
         carry = solver.make_evolve(todo)(*carry)
         done += todo
         if metrics_fn is not None:

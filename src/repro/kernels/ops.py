@@ -25,11 +25,22 @@ from repro.kernels import ref as _ref
 from repro.kernels.stencil1d_batch import stencil1d_batch_pallas
 from repro.kernels.stencil2d import stencil2d_pallas
 from repro.kernels.stencil3d import stencil3d_pallas
+from repro.runtime import chaos as _chaos
 from repro.util import pick_tile, pick_tile_any, pick_tile_padded
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pallas_dispatch(kernel: str) -> None:
+    """Chaos hook at the moment a Pallas path is chosen.
+
+    Fires at *trace* time (these dispatchers run inside ``jit``), which
+    is exactly when a real kernel failure (compile error, infeasible
+    grid on this host) would surface — an injected ``backend_error``
+    here exercises the serve engine's pallas→jnp degradation path."""
+    _chaos.fire("pallas.dispatch", kernel=kernel)
 
 
 def _should_interpret(interpret: bool | None) -> bool:
@@ -184,6 +195,7 @@ def stencil_apply(
             else "jnp"
         )
     if backend == "pallas":
+        _pallas_dispatch("stencil2d")
         if not clean:
             if tile is not None:
                 raise ValueError(
@@ -311,6 +323,7 @@ def stencil_apply_batch1d(
             else "jnp"
         )
     if backend == "pallas":
+        _pallas_dispatch("stencil1d_batch")
         if not clean:
             if tile is not None:
                 raise ValueError(
@@ -474,6 +487,7 @@ def stencil_apply_3d(
             else "jnp"
         )
     if backend == "pallas":
+        _pallas_dispatch("stencil3d")
         if not clean:
             if tile is not None:
                 raise ValueError(
@@ -571,6 +585,7 @@ def weno_advect(
     if backend == "auto":
         backend = "pallas" if on_tpu() and _pallas_ok(ny, nx, ty, tx, 3, 3) else "jnp"
     if backend == "pallas":
+        _pallas_dispatch("weno5_advect")
         return weno5_advect_pallas(
             q, u, v, dx=dx, dy=dy, ty=ty, tx=tx,
             interpret=_should_interpret(interpret),
@@ -601,6 +616,7 @@ def ch_rhs(
     if backend == "auto":
         backend = "pallas" if on_tpu() and _pallas_ok(ny, nx, ty, tx, 2, 2) else "jnp"
     if backend == "pallas":
+        _pallas_dispatch("ch_rhs")
         return ch_rhs_pallas(
             c_n, c_nm1, dt=dt, D=D, gamma=gamma, inv_h2=inv_h2, inv_h4=inv_h4,
             ty=ty, tx=tx, interpret=_should_interpret(interpret),
@@ -636,6 +652,7 @@ def ch_rhs_xsweep(
             "pallas" if on_tpu() and ny % ty == 0 and ty >= 2 else "jnp"
         )
     if backend == "pallas":
+        _pallas_dispatch("ch_rhs_xsweep")
         return ch_rhs_xsweep_pallas(
             c_n, c_nm1, fac_x,
             dt=float(dt), D=float(D), gamma=float(gamma),

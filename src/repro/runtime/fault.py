@@ -9,6 +9,7 @@ compose with the step-keyed data pipeline for bit-exact resume.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import os
 import time
@@ -18,7 +19,11 @@ from collections.abc import Callable
 class StragglerMonitor:
     """EWMA step-time monitor.  On TPU pods the slowest participant sets the
     step time, so a persistent multiplier over the EWMA indicates a
-    straggling host/chip; the policy hook decides (log, re-shard, evict)."""
+    straggling host/chip; the policy hook decides (log, re-shard, evict).
+
+    ``max_events`` bounds the retained event records — a week-long run on
+    a flaky host must not grow an unbounded list; the newest events win
+    (``on_straggler`` still sees every flagged step as it happens)."""
 
     def __init__(
         self,
@@ -26,6 +31,7 @@ class StragglerMonitor:
         alpha: float = 0.1,
         threshold: float = 2.0,
         warmup_steps: int = 5,
+        max_events: int = 256,
         on_straggler: Callable[[int, float, float], None] | None = None,
     ):
         self.alpha = alpha
@@ -34,7 +40,9 @@ class StragglerMonitor:
         self.on_straggler = on_straggler
         self.ewma: float | None = None
         self.count = 0
-        self.events: list[dict] = []
+        self.events: collections.deque[dict] = collections.deque(
+            maxlen=max_events
+        )
 
     def record(self, step: int, dt: float) -> bool:
         """Returns True if this step is flagged as a straggler event."""
@@ -56,7 +64,12 @@ class StragglerMonitor:
 
 
 class Heartbeat:
-    """Liveness file for an external watchdog (touch every ``interval`` s)."""
+    """Liveness file for an external watchdog (touch every ``interval`` s).
+
+    Writes are fsync'd before the atomic replace, so a watchdog on the
+    other side of a crash reads either the previous beat or the new one
+    — never a truncated line (which would look like a *fresh* corrupt
+    beat and mask a real hang)."""
 
     def __init__(self, path: str, interval: float = 30.0):
         self.path = path
@@ -69,8 +82,38 @@ class Heartbeat:
             tmp = self.path + ".tmp"
             with open(tmp, "w") as f:
                 f.write(f"{step} {now}\n")
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, self.path)
             self._last = now
+
+
+@dataclasses.dataclass(frozen=True)
+class HeartbeatStatus:
+    """What a watchdog learns from one read: the last beaten step, how
+    old the beat is, and whether that age exceeds the staleness bound."""
+
+    step: int | None
+    age_s: float
+    stale: bool
+
+
+def read_heartbeat(path: str, stale_after: float) -> HeartbeatStatus:
+    """Watchdog-side read of a :class:`Heartbeat` file.
+
+    Returns ``(step, age_s, stale)``; a missing or unparsable file reads
+    as ``step=None, age_s=inf, stale=True`` — fail-stale, so a watchdog
+    that races file creation or meets corruption escalates rather than
+    assuming liveness.
+    """
+    try:
+        with open(path) as f:
+            step_s, ts_s = f.read().split()
+        step, ts = int(step_s), float(ts_s)
+    except (OSError, ValueError):
+        return HeartbeatStatus(step=None, age_s=float("inf"), stale=True)
+    age = time.time() - ts
+    return HeartbeatStatus(step=step, age_s=age, stale=age > stale_after)
 
 
 @dataclasses.dataclass

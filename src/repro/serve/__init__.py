@@ -23,16 +23,30 @@ plan lifecycle.
 
 from repro.serve.batching import bucket_key, classify, execute_bucket
 from repro.serve.engine import ServeEngine
+from repro.serve.errors import (
+    TRANSIENT,
+    BackendError,
+    DeadlineExceeded,
+    QueueFull,
+    TransientError,
+    WorkerDeath,
+)
 from repro.serve.lru import PlanLRU
 from repro.serve.metrics import ServeMetrics
 from repro.serve.request import SolveRequest, SolveResult, validate_request
 
 __all__ = [
+    "TRANSIENT",
+    "BackendError",
+    "DeadlineExceeded",
     "PlanLRU",
+    "QueueFull",
     "ServeEngine",
     "ServeMetrics",
     "SolveRequest",
     "SolveResult",
+    "TransientError",
+    "WorkerDeath",
     "bucket_key",
     "classify",
     "execute_bucket",

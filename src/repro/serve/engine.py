@@ -1,4 +1,5 @@
-"""The solve-serving engine: bounded queue + background compute thread.
+"""The solve-serving engine: bounded queue + background compute thread,
+hardened against the failures a serving fleet actually meets.
 
 The shape is the ``OfflineInference`` pattern from MaxText's MLPerf
 harness: callers enqueue work onto a *bounded* queue from their own
@@ -9,6 +10,29 @@ of device work is a *bucket* (requests sharing shape/dtype/operator/
 bc/mode/alpha/steps — see :mod:`repro.serve.batching`) and the expensive
 per-class state is a plan held warm in a destroy-on-evict LRU
 (:class:`repro.serve.PlanLRU`).
+
+On top of the PR-7 fault isolation (a poisoned bucket fails its own
+futures, never the engine), the resilient serve path adds:
+
+- **per-request deadlines** — ``SolveRequest.deadline_s``; an expired
+  request fails fast with :class:`~repro.serve.errors.DeadlineExceeded`
+  and never occupies a batch slot, without touching its bucket-mates;
+- **bounded retry** — transient bucket failures (``OSError`` /
+  ``TimeoutError`` / :class:`~repro.runtime.chaos.TransientError`) are
+  retried up to ``max_retries`` times with exponential backoff;
+- **pallas→jnp graceful degradation** — a backend kernel failure
+  (:class:`~repro.runtime.chaos.BackendError`) recreates the bucket's
+  plan with ``backend='jnp'`` and re-executes; the downgrade is sticky
+  per plan class, recorded on every affected
+  :class:`~repro.serve.request.SolveResult` (``degraded=True``) and in
+  ``stats()['degraded']``;
+- **backpressure policy** — ``backpressure='block'`` (default: a full
+  queue blocks submitters, the MaxText idiom) or ``'reject'`` (a full
+  queue raises :class:`~repro.serve.errors.QueueFull` immediately —
+  shed load instead of propagating latency);
+- **supervised worker restart** — a dying worker thread requeues its
+  unfinished work and spawns its own replacement; nothing submitted is
+  lost, and ``stats()['worker_restarts']`` counts the deaths.
 
 Lifecycle::
 
@@ -33,6 +57,8 @@ or, as a context manager / one call::
 True
 >>> stats["completed"], stats["plan_lru"]["misses"]
 (4, 1)
+>>> stats["retries"], stats["degraded"], stats["worker_restarts"]
+(0, 0, 0)
 """
 
 from __future__ import annotations
@@ -42,12 +68,22 @@ import threading
 import time
 from concurrent.futures import Future
 
+from repro.runtime import chaos as _chaos
 from repro.serve import batching as _batching
+from repro.serve.errors import (
+    TRANSIENT,
+    BackendError,
+    DeadlineExceeded,
+    QueueFull,
+    WorkerDeath,
+)
 from repro.serve.lru import PlanLRU
 from repro.serve.metrics import ServeMetrics
 from repro.serve.request import SolveRequest, SolveResult, validate_request
 
 _SENTINEL = None  # queue poison pill; FIFO order guarantees full drain first
+
+_BACKPRESSURE = ("block", "reject")
 
 
 class ServeEngine:
@@ -55,12 +91,16 @@ class ServeEngine:
 
     ``plan_capacity`` bounds the warm-plan LRU; ``max_batch`` bounds how
     many queued requests one drain may fuse; ``queue_depth`` bounds the
-    ingestion queue (a full queue applies backpressure to submitters —
-    ``submit`` blocks — instead of growing without bound);
-    ``batch_window_s`` optionally lingers after the first request of a
-    drain to let a sparse stream accumulate into fuller batches;
-    ``backend``/``tune`` pass through to the Create of every plan the
-    LRU misses on.
+    ingestion queue; ``batch_window_s`` optionally lingers after the
+    first request of a drain to let a sparse stream accumulate into
+    fuller batches; ``backend``/``tune`` pass through to the Create of
+    every plan the LRU misses on.
+
+    Resilience knobs: ``backpressure`` picks what a full queue does to
+    submitters (``'block'`` or ``'reject'``); ``max_retries`` bounds the
+    transient-failure retries per bucket attempt sequence;
+    ``retry_backoff_s`` is the initial backoff (doubled per retry);
+    ``degrade=False`` disables the pallas→jnp fallback (fail instead).
     """
 
     def __init__(
@@ -72,19 +112,37 @@ class ServeEngine:
         batch_window_s: float = 0.0,
         backend: str = "auto",
         tune: str = "off",
+        backpressure: str = "block",
+        max_retries: int = 2,
+        retry_backoff_s: float = 0.01,
+        degrade: bool = True,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if backpressure not in _BACKPRESSURE:
+            raise ValueError(
+                f"backpressure must be one of {_BACKPRESSURE}, "
+                f"got {backpressure!r}"
+            )
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.max_batch = max_batch
         self.batch_window_s = float(batch_window_s)
         self.backend = backend
         self.tune = tune
+        self.backpressure = backpressure
+        self.max_retries = max_retries
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.degrade = degrade
         self.plans = PlanLRU(plan_capacity)
         self.metrics = ServeMetrics()
         self._queue: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._worker: threading.Thread | None = None
         self._closed = False
         self._lock = threading.Lock()
+        # plan classes (by non-degraded LRU key) that hit a backend
+        # failure: sticky — subsequent buckets go straight to jnp
+        self._degraded_keys: set[str] = set()
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -95,23 +153,38 @@ class ServeEngine:
             if self._closed:
                 raise RuntimeError("engine is closed; create a new one")
             if self._worker is None:
-                self._worker = threading.Thread(
-                    target=self._run, name="repro-serve-worker", daemon=True
-                )
-                self._worker.start()
+                self._worker = self._spawn_worker()
         return self
+
+    def _spawn_worker(self) -> threading.Thread:
+        t = threading.Thread(
+            target=self._run, name="repro-serve-worker", daemon=True
+        )
+        t.start()
+        return t
 
     def close(self) -> None:
         """Drain every queued request, join the worker, destroy the warm
-        plans.  Idempotent; the engine is unusable afterwards."""
+        plans.  Idempotent; the engine is unusable afterwards.  Robust
+        to worker deaths racing the close: each live worker generation
+        gets its own sentinel until none survives."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
-            worker = self._worker
-        if worker is not None:
-            self._queue.put(_SENTINEL)
-            worker.join()
+        while True:
+            with self._lock:
+                worker = self._worker
+            if worker is None:
+                break
+            if worker.is_alive():
+                self._queue.put(_SENTINEL)
+                worker.join()
+            with self._lock:
+                # a death during the join respawned a replacement; loop
+                # and drain that generation too
+                if self._worker is worker:
+                    self._worker = None
         self.plans.clear(destroy=True)
 
     def __enter__(self) -> "ServeEngine":
@@ -128,14 +201,27 @@ class ServeEngine:
 
         Malformed requests raise ``ValueError`` here, on the caller's
         thread — they never occupy queue space.  A full queue blocks
-        (bounded-queue backpressure, the MaxText idiom)."""
+        under ``backpressure='block'`` (the MaxText idiom) and raises
+        :class:`QueueFull` under ``'reject'`` (shed load at the edge
+        instead of growing caller latency)."""
         if self._closed:
             raise RuntimeError("engine is closed; create a new one")
         validate_request(request)
         self.start()
         fut: Future = Future()
+        item = (request, fut, time.perf_counter())
+        if self.backpressure == "reject":
+            try:
+                self._queue.put_nowait(item)
+            except queue.Full:
+                self.metrics.on_reject()
+                raise QueueFull(
+                    f"queue full ({self._queue.maxsize} pending) under "
+                    "backpressure='reject'"
+                ) from None
+        else:
+            self._queue.put(item)
         self.metrics.on_submit()
-        self._queue.put((request, fut, time.perf_counter()))
         return fut
 
     def solve(self, request: SolveRequest) -> SolveResult:
@@ -157,6 +243,7 @@ class ServeEngine:
         """Engine counters + latency percentiles + plan-LRU stats."""
         snap = self.metrics.snapshot()
         snap["plan_lru"] = self.plans.stats()
+        snap["degraded_classes"] = len(self._degraded_keys)
         return snap
 
     # -- the worker (background thread) ------------------------------------
@@ -182,23 +269,91 @@ class ServeEngine:
                     stop = True
                     break
                 batch.append(nxt)
-            self._process(batch)
+            try:
+                self._process(batch)
+            except WorkerDeath:
+                self._on_worker_death(batch, stop)
+                return
             if stop:
                 return
+
+    def _on_worker_death(self, batch, stop: bool) -> None:
+        """Supervised restart: the dying worker hands over.
+
+        Spawn the replacement *first* (so requeued work has a consumer
+        even if the queue is at capacity), then requeue every request of
+        the current batch whose future is still unresolved, preserving a
+        pending close()'s sentinel if this worker had consumed it."""
+        with self._lock:
+            self.metrics.on_worker_restart()
+            self._worker = self._spawn_worker()
+        for it in batch:
+            if not it[1].done():
+                self._queue.put(it)
+        if stop:
+            self._queue.put(_SENTINEL)
 
     def _process(self, batch) -> None:
         for key, items in _batching.bucketize(batch).items():
             del key
+            self._process_bucket(items)
+
+    def _expire(self, items, now: float) -> list:
+        """Fail the deadline-expired items fast; return the live rest."""
+        live = []
+        for it in items:
+            req, fut, t0 = it
+            if (
+                req.deadline_s is not None
+                and now - t0 > req.deadline_s
+                and not fut.done()
+            ):
+                fut.set_exception(
+                    DeadlineExceeded(
+                        f"deadline_s={req.deadline_s} elapsed after "
+                        f"{now - t0:.3f}s in queue (tag={req.tag!r})"
+                    )
+                )
+                self.metrics.on_deadline()
+            else:
+                live.append(it)
+        return live
+
+    def _process_bucket(self, items) -> None:
+        attempts = 0
+        retries = 0
+        degraded = False
+        while True:
+            # deadline cull per attempt: backoff sleeps must not let an
+            # expired request consume a batch slot on the retry
+            items = self._expire(items, time.perf_counter())
+            if not items:
+                return
             reqs = [req for req, _, _ in items]
             futs = [fut for _, fut, _ in items]
+            attempts += 1
             try:
-                kind, plan_key, _ = _batching.plan_spec(
+                kind, base_key, _ = _batching.plan_spec(
                     reqs[0], backend=self.backend
+                )
+                degraded = degraded or base_key in self._degraded_keys
+                backend = "jnp" if degraded else self.backend
+                _, plan_key, _ = _batching.plan_spec(reqs[0], backend=backend)
+                # the chaos hook: injected transient/io faults exercise
+                # the retry path, backend_error the degradation path,
+                # worker_death the supervised-restart path, stall the
+                # latency/deadline path
+                _chaos.fire(
+                    "serve.bucket_compute",
+                    operator=reqs[0].operator,
+                    kind=kind,
+                    attempt=attempts,
+                    degraded=degraded,
                 )
                 plan, hit = self.plans.get_or_create(
                     plan_key,
-                    lambda r=reqs[0]: _batching.create_plan(
-                        r, backend=self.backend, tune=self.tune
+                    lambda r=reqs[0], b=backend: _batching.create_plan(
+                        r, backend=b, tune=self.tune
                     ),
                 )
                 outs = _batching.execute_bucket(
@@ -208,25 +363,58 @@ class ServeEngine:
                     reqs[0].steps,
                     max_batch=self.max_batch,
                 )
+                break
+            except WorkerDeath:
+                raise  # not a bucket failure: unwind the thread itself
+            except BackendError:
+                if degraded or not self.degrade:
+                    self._fail_bucket(futs, BackendError(
+                        "backend failure persisted after jnp degradation"
+                        if degraded else "backend failure (degrade=False)"
+                    ))
+                    return
+                # the plan that failed is suspect: drop it so nothing
+                # serves from it again, then go straight to jnp — and
+                # stay there for this plan class (sticky degradation)
+                self.plans.drop(plan_key)
+                self._degraded_keys.add(base_key)
+                degraded = True
+                continue
+            except TRANSIENT as exc:
+                if retries >= self.max_retries:
+                    self._fail_bucket(futs, exc)
+                    return
+                retries += 1
+                self.metrics.on_retry()
+                time.sleep(self.retry_backoff_s * (2 ** (retries - 1)))
+                continue
             except Exception as exc:  # noqa: BLE001 — fault isolation:
                 # one poisoned bucket fails its own futures, never the
                 # engine thread (subsequent buckets keep serving)
-                for fut in futs:
-                    fut.set_exception(exc)
-                self.metrics.on_fail(len(futs))
-                continue
-            self.metrics.on_batch(len(items))
-            now = time.perf_counter()
-            for (req, fut, t0), out in zip(items, outs, strict=True):
-                latency = now - t0
-                self.metrics.record_latency(latency)
-                fut.set_result(
-                    SolveResult(
-                        out=out,
-                        request=req,
-                        latency_s=latency,
-                        batch_size=len(items),
-                        plan_hit=hit,
-                    )
+                self._fail_bucket(futs, exc)
+                return
+
+        if degraded:
+            self.metrics.on_degrade(len(items))
+        self.metrics.on_batch(len(items))
+        now = time.perf_counter()
+        for (req, fut, t0), out in zip(items, outs, strict=True):
+            latency = now - t0
+            self.metrics.record_latency(latency)
+            fut.set_result(
+                SolveResult(
+                    out=out,
+                    request=req,
+                    latency_s=latency,
+                    batch_size=len(items),
+                    plan_hit=hit,
+                    attempts=attempts,
+                    degraded=degraded,
                 )
-            self.metrics.on_complete(len(items))
+            )
+        self.metrics.on_complete(len(items))
+
+    def _fail_bucket(self, futs, exc: BaseException) -> None:
+        for fut in futs:
+            fut.set_exception(exc)
+        self.metrics.on_fail(len(futs))

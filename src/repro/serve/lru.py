@@ -91,6 +91,20 @@ class PlanLRU:
         self.put(key, plan)
         return plan, False
 
+    def drop(self, key: str, *, destroy: bool = True) -> bool:
+        """Evict one entry by key (e.g. a plan known to be broken after a
+        backend failure), destroying it unless ``destroy=False``.
+        Returns whether the key was resident; absent keys are a no-op.
+        """
+        with self._lock:
+            plan = self._plans.pop(key, None)
+            if plan is None:
+                return False
+            self._evictions += 1
+        if destroy:
+            self._destroy(plan)
+        return True
+
     def clear(self, *, destroy: bool = True) -> None:
         """Drop every entry, destroying them unless ``destroy=False``."""
         with self._lock:

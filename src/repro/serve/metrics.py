@@ -45,6 +45,12 @@ class ServeMetrics:
         self.batches = 0
         self.batched_requests = 0
         self.largest_batch = 0
+        # resilience counters (the hardened-engine observability)
+        self.retries = 0
+        self.degraded = 0
+        self.deadline_exceeded = 0
+        self.rejected = 0
+        self.worker_restarts = 0
         self._latencies: list[float] = []
 
     def reset(self) -> None:
@@ -53,6 +59,8 @@ class ServeMetrics:
         with self._lock:
             self.submitted = self.completed = self.failed = 0
             self.batches = self.batched_requests = self.largest_batch = 0
+            self.retries = self.degraded = self.deadline_exceeded = 0
+            self.rejected = self.worker_restarts = 0
             self._latencies.clear()
 
     def on_submit(self, n: int = 1) -> None:
@@ -72,6 +80,28 @@ class ServeMetrics:
     def on_fail(self, n: int = 1) -> None:
         with self._lock:
             self.failed += n
+
+    def on_retry(self, n: int = 1) -> None:
+        with self._lock:
+            self.retries += n
+
+    def on_degrade(self, n: int = 1) -> None:
+        """``n`` requests served on the jnp-degraded plan."""
+        with self._lock:
+            self.degraded += n
+
+    def on_deadline(self, n: int = 1) -> None:
+        with self._lock:
+            self.deadline_exceeded += n
+            self.failed += n
+
+    def on_reject(self, n: int = 1) -> None:
+        with self._lock:
+            self.rejected += n
+
+    def on_worker_restart(self) -> None:
+        with self._lock:
+            self.worker_restarts += 1
 
     def record_latency(self, seconds: float) -> None:
         with self._lock:
@@ -103,6 +133,11 @@ class ServeMetrics:
                 "batches": self.batches,
                 "batched_requests": self.batched_requests,
                 "largest_batch": self.largest_batch,
+                "retries": self.retries,
+                "degraded": self.degraded,
+                "deadline_exceeded": self.deadline_exceeded,
+                "rejected": self.rejected,
+                "worker_restarts": self.worker_restarts,
             }
         counters["latency"] = self.latency_summary()
         return counters

@@ -40,7 +40,11 @@ class SolveRequest:
     (``alpha`` required).  ``steps`` repeats the Compute that many times,
     feeding each output back in (the double-buffer time loop).  ``dtype``
     defaults to the field's own dtype.  ``tag`` is an opaque caller
-    correlation id, returned untouched on the result.
+    correlation id, returned untouched on the result.  ``deadline_s``
+    (optional) bounds submit-to-compute wall time: a request still
+    queued when its deadline elapses fails fast with
+    :class:`repro.serve.errors.DeadlineExceeded` instead of occupying a
+    batch slot — without affecting the rest of its bucket.
     """
 
     field: Any
@@ -51,6 +55,7 @@ class SolveRequest:
     steps: int = 1
     dtype: Any = None
     tag: Any = None
+    deadline_s: float | None = None
 
     @property
     def shape(self) -> tuple[int, ...]:
@@ -78,6 +83,13 @@ class SolveResult:
     ``latency_s`` is submit-to-result wall time, ``batch_size`` the
     number of requests that shared the kernel dispatch, ``plan_hit``
     whether the plan came warm out of the LRU.
+
+    Resilience metadata: ``attempts`` counts compute attempts for the
+    request's bucket (>1 means the transient-retry path fired);
+    ``degraded`` is True when a backend (Pallas) failure forced the
+    bucket onto a freshly created ``backend='jnp'`` plan — the answer is
+    still correct, it just didn't run on the requested backend, and the
+    engine's ``stats()['degraded']`` counts how often that happened.
     """
 
     out: Any
@@ -85,6 +97,8 @@ class SolveResult:
     latency_s: float = 0.0
     batch_size: int = 1
     plan_hit: bool = False
+    attempts: int = 1
+    degraded: bool = False
 
     @property
     def tag(self):
@@ -115,6 +129,10 @@ def validate_request(req: SolveRequest) -> None:
         )
     if not isinstance(req.steps, int) or req.steps < 1:
         raise ValueError(f"steps must be a positive int, got {req.steps!r}")
+    if req.deadline_s is not None and not req.deadline_s > 0:
+        raise ValueError(
+            f"deadline_s must be positive (seconds), got {req.deadline_s!r}"
+        )
     if req.mode not in (None, "adi"):
         raise ValueError(
             f"request mode must be None (stencil) or 'adi', got {req.mode!r}"

@@ -33,6 +33,8 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import chaos as _chaos
+
 ENV_VAR = "REPRO_TUNE_CACHE"
 SCHEMA_VERSION = 1
 
@@ -144,9 +146,14 @@ class TuneCache:
         ok = False
         try:
             with os.fdopen(fd, "w", encoding="utf-8") as f:
+                _chaos.fire("tune.cache_write", point="write")
                 json.dump(payload, f, indent=1)
                 f.flush()
                 os.fsync(f.fileno())
+            # injected io_error here rides the normal OSError degrade path
+            # (a miss, never a broken Create); injected 'crash' simulates a
+            # kill between fsync and publish for the consistency sweep
+            _chaos.fire("tune.cache_write", point="replace")
             os.replace(tmp, self.path_for(key))
             ok = True
         except (OSError, TypeError, ValueError):

@@ -1,0 +1,258 @@
+"""The chaos harness: deterministic fault plans + crash-consistency sweeps.
+
+The sweeps are the CI chaos lane's core: kill the writer at *every*
+fsync/rename transition of the checkpoint commit and the tune-cache
+publish, and assert readers still see a fully committed artifact — the
+old one or the new one, never a torn one.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import (
+    Checkpointer,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+from repro.runtime import chaos
+from repro.tune.cache import TuneCache
+
+
+class TestFaultPlan:
+    def test_at_fires_on_exact_hits(self):
+        plan = chaos.FaultPlan(seed=0).add("evolve.step", "crash", at=(2, 4))
+        with chaos.injected(plan):
+            assert chaos.fire("evolve.step") is None
+            with pytest.raises(chaos.InjectedCrash):
+                chaos.fire("evolve.step")
+            assert chaos.fire("evolve.step") is None
+            with pytest.raises(chaos.InjectedCrash):
+                chaos.fire("evolve.step")
+        assert plan.fired() == [
+            ("evolve.step", "crash", 2),
+            ("evolve.step", "crash", 4),
+        ]
+
+    def test_same_seed_same_sequence(self):
+        runs = []
+        for _ in range(2):
+            plan = chaos.FaultPlan(seed=42).add(
+                "serve.bucket_compute", "transient", rate=0.3
+            )
+            fired = []
+            for _hit in range(50):
+                try:
+                    plan.fire("serve.bucket_compute")
+                except chaos.TransientError:
+                    fired.append(_hit)
+            runs.append(fired)
+        assert runs[0] == runs[1]
+        assert 0 < len(runs[0]) < 50  # rate actually sampled both ways
+
+    def test_different_seed_different_sequence(self):
+        seqs = []
+        for seed in (1, 2):
+            plan = chaos.FaultPlan(seed=seed).add(
+                "evolve.step", "transient", rate=0.3
+            )
+            fired = []
+            for hit in range(60):
+                try:
+                    plan.fire("evolve.step")
+                except chaos.TransientError:
+                    fired.append(hit)
+            seqs.append(fired)
+        assert seqs[0] != seqs[1]
+
+    def test_reset_replays_identically(self):
+        plan = chaos.FaultPlan(seed=5).add("evolve.step", "crash", rate=0.4)
+
+        def run():
+            fired = []
+            for hit in range(30):
+                try:
+                    plan.fire("evolve.step")
+                except chaos.InjectedCrash:
+                    fired.append(hit)
+            return fired
+
+        first = run()
+        plan.reset()
+        assert run() == first
+
+    def test_rate_stream_position_independent_of_other_faults(self):
+        # another fault acting on a hit must not advance or skip the
+        # rate fault's stream: position depends only on the hit sequence
+        def run(stall_at):
+            plan = (
+                chaos.FaultPlan(seed=9)
+                .add("evolve.step", "stall", at=stall_at, duration=0.0)
+                .add("evolve.step", "transient", rate=0.3)
+            )
+            fired = []
+            for hit in range(40):
+                try:
+                    plan.fire("evolve.step")
+                except chaos.TransientError:
+                    fired.append(hit)
+            return fired
+
+        a = run(1)    # the stall masks whatever hit 0 would have done
+        b = run(999)  # the stall never acts
+        assert [h for h in a if h != 0] == [h for h in b if h != 0]
+
+    def test_match_filters_on_context(self):
+        plan = chaos.FaultPlan().add(
+            "checkpoint.write", "crash", rate=1.0, match={"point": "rename"}
+        )
+        assert plan.fire("checkpoint.write", point="leaves") is None
+        with pytest.raises(chaos.InjectedCrash):
+            plan.fire("checkpoint.write", point="rename")
+
+    def test_max_fires_caps(self):
+        plan = chaos.FaultPlan().add(
+            "evolve.step", "crash", rate=1.0, max_fires=2
+        )
+        for _ in range(2):
+            with pytest.raises(chaos.InjectedCrash):
+                plan.fire("evolve.step")
+        assert plan.fire("evolve.step") is None
+
+    def test_stall_sleeps(self):
+        plan = chaos.FaultPlan().add(
+            "serve.bucket_compute", "stall", at=1, duration=0.05
+        )
+        t0 = time.perf_counter()
+        fault = plan.fire("serve.bucket_compute")
+        assert time.perf_counter() - t0 >= 0.05
+        assert fault.kind == "stall"
+
+    def test_nan_returns_fault_for_site_to_apply(self):
+        plan = chaos.FaultPlan().add("evolve.step", "nan", at=1, value=1e6)
+        fault = plan.fire("evolve.step")
+        assert fault.kind == "nan" and fault.value == 1e6
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="unknown site"):
+            chaos.Fault("no.such.site", "crash", at=1)
+        with pytest.raises(ValueError, match="unknown kind"):
+            chaos.Fault("evolve.step", "meteor", at=1)
+        with pytest.raises(ValueError, match="at= .*or rate="):
+            chaos.Fault("evolve.step", "crash")
+        with pytest.raises(ValueError, match="unknown site"):
+            chaos.FaultPlan().fire("no.such.site")
+
+    def test_no_plan_fire_is_inert(self):
+        assert chaos.active() is None
+        assert chaos.fire("evolve.step", step=1) is None
+
+    def test_install_is_exclusive_and_injected_cleans_up(self):
+        plan = chaos.FaultPlan()
+        with chaos.injected(plan):
+            assert chaos.active() is plan
+            with pytest.raises(RuntimeError, match="already installed"):
+                chaos.install(chaos.FaultPlan())
+        assert chaos.active() is None
+
+
+class TestCheckpointCrashConsistency:
+    """Kill-at-every-fsync-point sweep over the atomic commit sequence."""
+
+    @pytest.mark.parametrize("point", ["leaves", "rename", "latest"])
+    def test_kill_at_point_leaves_committed_view(self, tmp_path, point):
+        d = str(tmp_path)
+        old = {"w": jnp.arange(4.0)}
+        new = {"w": jnp.arange(4.0) * 2}
+        save_pytree(old, d, 1)
+        plan = chaos.FaultPlan().add(
+            "checkpoint.write", "crash",
+            rate=1.0, match={"point": point}, max_fires=1,
+        )
+        with chaos.injected(plan):
+            with pytest.raises(chaos.InjectedCrash):
+                save_pytree(new, d, 2)
+        # the reader's view is a fully committed checkpoint: before the
+        # final rename that is the old one; after it, the new one
+        step = latest_step(d)
+        assert step in (1, 2)
+        restored, manifest = restore_pytree({"w": jnp.zeros(4)}, d, step=step)
+        assert manifest["step"] == step
+        np.testing.assert_array_equal(
+            np.asarray(restored["w"]),
+            np.asarray((old if step == 1 else new)["w"]),
+        )
+        # recovery: a clean retry of the same step commits normally
+        save_pytree(new, d, 2)
+        assert latest_step(d) == 2
+        restored, _ = restore_pytree({"w": jnp.zeros(4)}, d)
+        np.testing.assert_array_equal(
+            np.asarray(restored["w"]), np.asarray(new["w"])
+        )
+
+    def test_injected_io_error_surfaces_on_wait(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path), keep_last=2)
+        plan = chaos.FaultPlan().add(
+            "checkpoint.write", "io_error", at=1
+        )
+        with chaos.injected(plan):
+            ckpt.save_async({"w": jnp.zeros(2)}, 1)
+            with pytest.raises(OSError, match="injected io_error"):
+                ckpt.wait()
+        # the checkpointer stays usable after a failed write
+        ckpt.save_async({"w": jnp.zeros(2)}, 2)
+        ckpt.close()
+        assert latest_step(str(tmp_path)) == 2
+
+
+class TestTuneCacheCrashConsistency:
+    @pytest.mark.parametrize("point", ["write", "replace"])
+    def test_kill_at_point_readers_see_old_entry(self, tmp_path, point):
+        cache = TuneCache(root=tmp_path)
+        cache.put("k", {"cfg": 1})
+        assert cache.get("k") == {"cfg": 1}
+        plan = chaos.FaultPlan().add(
+            "tune.cache_write", "crash",
+            rate=1.0, match={"point": point}, max_fires=1,
+        )
+        with chaos.injected(plan):
+            with pytest.raises(chaos.InjectedCrash):
+                cache.put("k", {"cfg": 2})
+        assert cache.get("k") == {"cfg": 1}  # old entry, never torn
+        cache.put("k", {"cfg": 2})  # recovery
+        assert cache.get("k") == {"cfg": 2}
+
+    def test_io_error_degrades_to_miss_not_failure(self, tmp_path):
+        cache = TuneCache(root=tmp_path)
+        cache.put("k", {"cfg": 1})
+        plan = chaos.FaultPlan().add("tune.cache_write", "io_error", at=1)
+        with chaos.injected(plan):
+            cache.put("k", {"cfg": 2})  # swallowed: degrade, don't break
+        assert cache.get("k") == {"cfg": 1}
+
+
+class TestPallasDispatchInjection:
+    def test_backend_error_at_dispatch(self):
+        plan = chaos.FaultPlan().add(
+            "pallas.dispatch", "backend_error",
+            rate=1.0, match={"kernel": "stencil2d"},
+        )
+        with chaos.injected(plan):
+            with pytest.raises(chaos.BackendError):
+                p = api.create("laplacian", (16, 16), backend="pallas")
+                api.compute(p, jnp.ones((16, 16))).block_until_ready()
+        assert any(site == "pallas.dispatch" for site, _, _ in plan.fired())
+
+    def test_jnp_backend_never_hits_the_site(self):
+        plan = chaos.FaultPlan().add(
+            "pallas.dispatch", "backend_error", rate=1.0
+        )
+        with chaos.injected(plan):
+            p = api.create("laplacian", (16, 16), backend="jnp")
+            out = api.compute(p, jnp.ones((16, 16)))
+        assert bool(jnp.all(jnp.isfinite(out)))
+        assert plan.fired() == []

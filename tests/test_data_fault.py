@@ -7,7 +7,12 @@ import pytest
 
 from repro.configs import get_config
 from repro.data import TokenBatchSource, make_source
-from repro.runtime.fault import Heartbeat, StragglerMonitor, supervise
+from repro.runtime.fault import (
+    Heartbeat,
+    StragglerMonitor,
+    read_heartbeat,
+    supervise,
+)
 
 
 class TestPipeline:
@@ -83,6 +88,25 @@ class TestStragglerMonitor:
         mon.record(1, 1.0)
         mon.record(2, 10.0)
         assert calls and calls[0][0] == 2
+
+    def test_first_record_seeds_ewma_without_flagging(self):
+        mon = StragglerMonitor(threshold=2.0, warmup_steps=0)
+        assert mon.record(0, 100.0) is False  # nothing to compare against
+        assert mon.ewma == 100.0
+
+    def test_warmup_suppresses_flags(self):
+        mon = StragglerMonitor(threshold=2.0, warmup_steps=5)
+        mon.record(0, 1.0)
+        # steps 2..5 are still warmup even with outlier-sized dt
+        assert not any(mon.record(i, 50.0) for i in range(1, 5))
+
+    def test_events_bounded(self):
+        mon = StragglerMonitor(threshold=2.0, warmup_steps=0, max_events=4)
+        mon.record(0, 1.0)
+        flags = [mon.record(i, 10.0) for i in range(1, 20)]
+        assert all(flags)
+        assert len(mon.events) == 4  # bounded: newest win
+        assert mon.events[-1]["step"] == 19
 
 
 class TestSupervisor:
@@ -170,3 +194,29 @@ class TestHeartbeat:
             step, ts = f.read().split()
         assert int(step) == 5
         assert abs(float(ts) - time.time()) < 5
+
+    def test_watchdog_reads_fresh_beat(self, tmp_path):
+        path = str(tmp_path / "hb")
+        Heartbeat(path, interval=0.0).beat(17)
+        status = read_heartbeat(path, stale_after=60.0)
+        assert status.step == 17
+        assert status.age_s < 60.0
+        assert not status.stale
+
+    def test_watchdog_flags_stale_beat(self, tmp_path):
+        path = str(tmp_path / "hb")
+        with open(path, "w") as f:
+            f.write(f"3 {time.time() - 100.0}\n")
+        status = read_heartbeat(path, stale_after=30.0)
+        assert status.step == 3
+        assert status.stale
+
+    def test_watchdog_fails_stale_on_missing_or_corrupt(self, tmp_path):
+        missing = read_heartbeat(str(tmp_path / "nope"), stale_after=30.0)
+        assert missing.step is None and missing.stale
+        assert missing.age_s == float("inf")
+        path = str(tmp_path / "hb")
+        with open(path, "w") as f:
+            f.write("garbage not a beat")
+        corrupt = read_heartbeat(path, stale_after=30.0)
+        assert corrupt.step is None and corrupt.stale

@@ -1,0 +1,232 @@
+"""The hardened serve path under injected faults.
+
+Covers the ISSUE's serve acceptance criteria: a transient bucket fault
+retries to success, a pallas kernel failure degrades to the jnp backend
+visibly (SolveResult + stats), a deadline-exceeded request fails fast
+without poisoning its bucket, backpressure='reject' sheds load, and a
+dead worker thread restarts without losing submitted work.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.runtime import chaos
+from repro.serve import (
+    DeadlineExceeded,
+    QueueFull,
+    ServeEngine,
+    SolveRequest,
+)
+
+
+def field(shape=(8, 8), seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape))
+
+
+def sequential_reference(f):
+    plan = api.create("laplacian", f.shape, backend="jnp")
+    out = np.asarray(api.compute(plan, f))
+    api.destroy(plan)
+    return out
+
+
+class TestTransientRetry:
+    def test_retries_to_success(self):
+        f = field()
+        plan = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "transient", at=(1, 2)
+        )
+        with chaos.injected(plan):
+            with ServeEngine(
+                backend="jnp", max_retries=3, retry_backoff_s=0.001
+            ) as eng:
+                res = eng.solve(SolveRequest(field=f, operator="laplacian"))
+                stats = eng.stats()
+        assert res.attempts == 3 and not res.degraded
+        assert stats["retries"] == 2 and stats["completed"] == 1
+        np.testing.assert_array_equal(
+            np.asarray(res.out), sequential_reference(f)
+        )
+
+    def test_exhausted_retries_fail_the_bucket(self):
+        plan = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "transient", rate=1.0
+        )
+        with chaos.injected(plan):
+            with ServeEngine(
+                backend="jnp", max_retries=1, retry_backoff_s=0.001
+            ) as eng:
+                fut = eng.submit(
+                    SolveRequest(field=field(), operator="laplacian")
+                )
+                with pytest.raises(chaos.TransientError):
+                    fut.result(timeout=30)
+                assert eng.stats()["failed"] == 1
+
+    def test_failed_bucket_never_kills_the_engine(self):
+        # crash (a permanent fault) poisons only its own bucket
+        plan = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "crash", at=1
+        )
+        with chaos.injected(plan):
+            with ServeEngine(backend="jnp") as eng:
+                bad = eng.submit(
+                    SolveRequest(field=field(), operator="laplacian")
+                )
+                with pytest.raises(chaos.InjectedCrash):
+                    bad.result(timeout=30)
+                ok = eng.solve(SolveRequest(field=field(), operator="laplacian"))
+        assert ok.out.shape == (8, 8)
+
+
+class TestDegradation:
+    def test_backend_error_degrades_to_jnp_visibly(self):
+        f = field()
+        plan = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "backend_error", at=1
+        )
+        with chaos.injected(plan):
+            with ServeEngine(backend="jnp") as eng:
+                first = eng.solve(SolveRequest(field=f, operator="laplacian"))
+                second = eng.solve(SolveRequest(field=f, operator="laplacian"))
+                stats = eng.stats()
+        assert first.degraded and first.attempts == 2
+        # sticky: the plan class stays on jnp, no second failure needed
+        assert second.degraded and second.attempts == 1
+        assert stats["degraded"] == 2
+        assert stats["degraded_classes"] == 1
+        # degraded answers are still correct answers
+        np.testing.assert_array_equal(
+            np.asarray(first.out), sequential_reference(f)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(second.out), sequential_reference(f)
+        )
+
+    def test_degradation_scoped_to_its_plan_class(self):
+        plan = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "backend_error", at=1
+        )
+        with chaos.injected(plan):
+            with ServeEngine(backend="jnp") as eng:
+                hit = eng.solve(
+                    SolveRequest(field=field((8, 8)), operator="laplacian")
+                )
+                other = eng.solve(
+                    SolveRequest(field=field((12, 12)), operator="laplacian")
+                )
+        assert hit.degraded and not other.degraded
+
+    def test_degrade_false_fails_instead(self):
+        plan = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "backend_error", at=1
+        )
+        with chaos.injected(plan):
+            with ServeEngine(backend="jnp", degrade=False) as eng:
+                fut = eng.submit(
+                    SolveRequest(field=field(), operator="laplacian")
+                )
+                with pytest.raises(chaos.BackendError):
+                    fut.result(timeout=30)
+
+
+class TestDeadlines:
+    def test_expired_request_fails_fast_without_poisoning_bucket(self):
+        # bucket A stalls the worker; in bucket B one member's deadline
+        # expires while queued — it must fail alone, its bucket-mate
+        # must still be served
+        stall = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "stall", at=1, duration=0.3
+        )
+        with chaos.injected(stall):
+            with ServeEngine(backend="jnp", max_retries=0) as eng:
+                slow = eng.submit(
+                    SolveRequest(field=field((8, 8)), operator="laplacian")
+                )
+                time.sleep(0.05)  # let the worker enter the stalled bucket
+                doomed = eng.submit(
+                    SolveRequest(
+                        field=field((12, 12)), operator="laplacian",
+                        deadline_s=0.05,
+                    )
+                )
+                mate = eng.submit(
+                    SolveRequest(field=field((12, 12)), operator="laplacian")
+                )
+                with pytest.raises(DeadlineExceeded):
+                    doomed.result(timeout=30)
+                assert mate.result(timeout=30).out.shape == (12, 12)
+                assert slow.result(timeout=30).out.shape == (8, 8)
+                stats = eng.stats()
+        assert stats["deadline_exceeded"] == 1
+        assert stats["completed"] == 2
+
+    def test_deadline_validated_at_submit(self):
+        with pytest.raises(ValueError, match="deadline_s"):
+            with ServeEngine(backend="jnp") as eng:
+                eng.submit(
+                    SolveRequest(
+                        field=field(), operator="laplacian", deadline_s=-1.0
+                    )
+                )
+
+
+class TestBackpressure:
+    def test_reject_raises_queue_full(self):
+        stall = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "stall", rate=1.0, duration=0.2
+        )
+        eng = ServeEngine(
+            backend="jnp", queue_depth=1, backpressure="reject"
+        )
+        with chaos.injected(stall):
+            eng.start()
+            with pytest.raises(QueueFull):
+                for _ in range(50):
+                    eng.submit(
+                        SolveRequest(field=field(), operator="laplacian")
+                    )
+        assert eng.stats()["rejected"] >= 1
+        eng.close()
+
+    def test_invalid_policy_rejected(self):
+        with pytest.raises(ValueError, match="backpressure"):
+            ServeEngine(backpressure="drop")
+
+
+class TestWorkerRestart:
+    def test_dead_worker_restarts_and_finishes_all_work(self):
+        f = field()
+        plan = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "worker_death", at=1
+        )
+        with chaos.injected(plan):
+            with ServeEngine(backend="jnp") as eng:
+                futs = [
+                    eng.submit(SolveRequest(field=f, operator="laplacian"))
+                    for _ in range(3)
+                ]
+                results = [fut.result(timeout=30) for fut in futs]
+                stats = eng.stats()
+        assert stats["worker_restarts"] == 1
+        assert stats["completed"] == 3
+        for r in results:
+            np.testing.assert_array_equal(
+                np.asarray(r.out), sequential_reference(f)
+            )
+
+    def test_close_after_death_is_clean(self):
+        plan = chaos.FaultPlan(seed=7).add(
+            "serve.bucket_compute", "worker_death", at=1
+        )
+        with chaos.injected(plan):
+            eng = ServeEngine(backend="jnp")
+            fut = eng.submit(SolveRequest(field=field(), operator="laplacian"))
+            assert fut.result(timeout=30).out.shape == (8, 8)
+            eng.close()  # must terminate the *respawned* worker too
+        assert eng.stats()["worker_restarts"] == 1
