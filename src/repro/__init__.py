@@ -64,6 +64,7 @@ from repro.core.adi import (  # noqa: E402
     make_adi_operator,
     make_adi_operator_3d,
 )
+from repro.kernels.spectral import SpectralBackendError  # noqa: E402
 from repro.core.stencil import (  # noqa: E402
     DoubleBuffer,
     PlanCore,
@@ -105,6 +106,8 @@ __all__ = [
     "ADIOperator",
     "ADIOperator3D",
     "DoubleBuffer",
+    # the spectral (fft) execution backend's named Create-time refusal
+    "SpectralBackendError",
     # engine-level destroy + weight helpers
     "plan_destroy",
     "central_difference_weights",

@@ -37,7 +37,7 @@ def main(argv=None) -> int:
     )
     p.add_argument(
         "--backends", default=None,
-        help="comma-separated backends (default: jnp,pallas)",
+        help="comma-separated backends (default: jnp,pallas,fft)",
     )
     p.add_argument(
         "--seed-violation", default=None, metavar="KIND",

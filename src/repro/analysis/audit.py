@@ -5,10 +5,13 @@ small plan, traces its Compute, and runs the invariant rules
 (:mod:`repro.analysis.rules`) plus the operator lint
 (:mod:`repro.analysis.stencil_lint`):
 
-- jaxpr rules (``no_dtype_upcast``, ``no_host_callback`` everywhere;
-  ``no_transpose`` on the families that promise it — the ADI sweeps and
-  the fused Cahn–Hilliard step, audited on the jnp backend where the
-  XLA-graph layout contract lives);
+- jaxpr rules (``no_dtype_upcast``, ``no_host_callback`` everywhere —
+  including the fft backend, whose dtype contract is that fp32 fields
+  ride complex64 through the transforms; ``no_transpose`` on the
+  families that promise it — the ADI sweeps and the fused Cahn–Hilliard
+  step, audited on the jnp backend where the XLA-graph layout contract
+  lives (the fft path transforms along every axis, so transpose-freedom
+  is deliberately *not* part of its contract));
 - the ``pallas_grid_feasible`` plan rule;
 - a per-family ``retrace_budget`` probe (three structurally identical
   plans through one jitted ``compute`` must produce one trace);
@@ -38,7 +41,7 @@ from repro.analysis.findings import Finding, errors
 FAMILIES = (
     "stencil2d", "batch1d", "stencil3d", "adi2d", "adi3d", "fused_ch",
 )
-BACKENDS = ("jnp", "pallas")
+BACKENDS = ("jnp", "pallas", "fft")
 SEED_VIOLATIONS = ("transpose", "upcast")
 
 # the families whose Compute promises a transpose-free trace (the ADI

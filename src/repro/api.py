@@ -415,6 +415,17 @@ def create(
     family unchanged; ``shape`` doubles as the autotuner's measurement
     shape, so ``tune='cached'`` needs no extra argument here.
 
+    ``backend`` picks the execution backend: ``'jnp'``/``'pallas'`` run
+    the direct stencil/banded kernels, ``'fft'`` the spectral path —
+    the operator's Fourier symbol is precomputed at Create and Compute
+    is a pointwise multiply (stencils) or divide (cyclic ADI sweeps) in
+    frequency space, asymptotically faster for large radii.  ``'fft'``
+    needs periodic boundaries, explicit weights and a Create-time shape,
+    and refuses anything else with
+    :class:`repro.SpectralBackendError`.  Under the default
+    ``backend='auto'`` with tuning on, the tuner *races* fft against the
+    direct backends and bakes the measured winner into the plan.
+
     Arguments that would otherwise be silently dropped are refused:
     ``h`` scales *registry* weights only (explicit arrays and point
     functions already encode the grid spacing), and ``alpha*``/``cyclic``

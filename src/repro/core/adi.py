@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.stencil import StencilBatch1D
+from repro.kernels import spectral
 from repro.util import deprecated_shim
 from repro.kernels.penta import (
     CyclicPentaFactors,
@@ -119,6 +120,11 @@ class ADIOperator:
     x_cfg: dict | None = None  # tuned x-sweep config
     y_cfg: dict | None = None  # tuned y-sweep config
     operator: str = "hyperdiffusion"  # registry name the bands came from
+    # band symbols (rfft eigenvalues of the cyclic penta circulants),
+    # computed at Create whenever cyclic — the fft sweep divides by these
+    # instead of running the recurrence + Woodbury closure.  Pytree leaves.
+    sym_x: jnp.ndarray | None = None
+    sym_y: jnp.ndarray | None = None
 
     @property
     def destroyed(self) -> bool:
@@ -135,6 +141,8 @@ class ADIOperator:
         from repro.launch import stream as _stream
 
         backend, unroll, cfg = self._cfg(self.x_cfg)
+        if backend == "fft":
+            return _fft_sweep(self.sym_x, rhs, axis=-1)
         if rhs.ndim == 2 and _stream.should_stream(
             rhs.shape,
             rhs.dtype.itemsize,
@@ -165,6 +173,8 @@ class ADIOperator:
         from repro.launch import stream as _stream
 
         backend, unroll, cfg = self._cfg(self.y_cfg)
+        if backend == "fft":
+            return _fft_sweep(self.sym_y, rhs, axis=0)
         if rhs.ndim == 2 and _stream.should_stream(
             rhs.shape,
             rhs.dtype.itemsize,
@@ -212,6 +222,18 @@ def _fac_len(fac) -> int:
     return int(band.sub.shape[0])
 
 
+def _fft_sweep(sym, rhs: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """The spectral implicit sweep: divide by the band symbol along one
+    axis (:func:`repro.kernels.spectral.solve_symbol_axis`) — the
+    circulant diagonalisation of the cyclic penta solve."""
+    if sym is None:
+        raise spectral.SpectralBackendError(
+            "this ADI operator carries no band symbol (Create attaches "
+            "one only for cyclic operators)"
+        )
+    return spectral.solve_symbol_axis(rhs, sym, axis)
+
+
 def _cfg_tile_problems(cfg, sweep: str, key: str, extent: int, what: str):
     """Tuned Pallas batch tiles must divide the batch they tile."""
     cfg = cfg or {}
@@ -228,18 +250,28 @@ def _cfg_tile_problems(cfg, sweep: str, key: str, extent: int, what: str):
     return []
 
 
-def _sweep_candidates(batch: int):
-    """The per-sweep solve candidate space: jnp rolled/unrolled loops plus
-    (on TPU) aligned Pallas batch tiles — shared by the 2D and 3D ADI
-    tuners."""
+def _sweep_candidates(batch: int, fft: bool = False):
+    """The per-sweep solve candidate space: jnp rolled/unrolled loops,
+    the spectral divide when the operator is cyclic under ``backend=
+    'auto'`` (``fft=True``), plus (on TPU) aligned Pallas batch tiles —
+    shared by the 2D and 3D ADI tuners."""
     from repro.kernels import ops as _ops
     from repro.util import tile_candidates
 
     cands = [{"backend": "jnp", "unroll": 1}, {"backend": "jnp", "unroll": 4}]
+    if fft:
+        cands.append({"backend": "fft"})
     if _ops.on_tpu():
         for t in tile_candidates(batch):
             cands.append({"backend": "pallas", "tile": t})
     return cands
+
+
+def _fft_arbitrage(op) -> bool:
+    """fft joins a sweep's tuner race only for cyclic ``backend='auto'``
+    operators: an explicit backend is an explicit choice, and the fp64
+    tuned-equals-untuned bit-match contract must survive tuning."""
+    return op.backend == "auto" and op.cyclic
 
 
 def _sweep_cfg(best: dict, tile_key: str) -> dict:
@@ -252,57 +284,70 @@ def _sweep_cfg(best: dict, tile_key: str) -> dict:
 
 
 def _autotune_adi(op: ADIOperator, ny: int, nx: int, dtype, mode: str, cache):
-    """Measure per-sweep solve configurations and attach the winners."""
+    """Measure per-sweep solve configurations and attach the winners.
+
+    Candidates run through the *operator's own* sweep dispatch (a
+    per-candidate :func:`dataclasses.replace` of the sweep cfg on a
+    streams-knocked-out copy), so every backend the dispatch knows —
+    including the spectral divide — is measured exactly as it will run.
+    """
     from repro.tune import autotune
 
     rhs = jnp.zeros((ny, nx), dtype)
-
-    def build_x(cfg):
-        solve = (
-            cyclic_penta_solve_factored_rows
-            if op.cyclic
-            else penta_solve_factored_rows
-        )
-
-        def f(r):
-            return solve(
-                op.fac_x, r, backend=cfg["backend"], tb=cfg.get("tile"),
-                unroll=cfg.get("unroll", 1),
-            )
-
-        return jax.jit(f)
-
-    def build_y(cfg):
-        solve = (
-            cyclic_penta_solve_factored
-            if op.cyclic
-            else penta_solve_factored
-        )
-
-        def f(r):
-            return solve(
-                op.fac_y, r, backend=cfg["backend"], tn=cfg.get("tile"),
-                unroll=cfg.get("unroll", 1),
-            )
-
-        return jax.jit(f)
-
     # the operator name is part of the cache key: registry operators with
     # coincidentally equal geometry must not alias one entry
     extra = {"cyclic": op.cyclic, "operator": op.operator}
-    best_x = autotune(
-        "adi_solve_x", _sweep_candidates(ny), build_x, (rhs,),
+    kw = dict(
         shape=(ny, nx), dtype=dtype, backend=op.backend, extra=extra,
         mode=mode, cache=cache,
     )
+    # measure the monolithic solves (streams knocked out) — the streamed
+    # executor ignores per-sweep tiles
+    mono = dataclasses.replace(op, streams=None, max_tile_bytes=None)
+    fft = _fft_arbitrage(op)
+
+    def build(sweep, tile_key):
+        def builder(cfg):
+            op2 = dataclasses.replace(
+                mono, **{sweep + "_cfg": _sweep_cfg(cfg, tile_key)}
+            )
+            return jax.jit(getattr(op2, "solve_" + sweep))
+
+        return builder
+
+    best_x = autotune(
+        "adi_solve_x", _sweep_candidates(ny, fft=fft), build("x", "tb"),
+        (rhs,), **kw
+    )
     best_y = autotune(
-        "adi_solve_y", _sweep_candidates(nx), build_y, (rhs,),
-        shape=(ny, nx), dtype=dtype, backend=op.backend, extra=extra,
-        mode=mode, cache=cache,
+        "adi_solve_y", _sweep_candidates(nx, fft=fft), build("y", "tn"),
+        (rhs,), **kw
     )
     return dataclasses.replace(
         op, x_cfg=_sweep_cfg(best_x, "tb"), y_cfg=_sweep_cfg(best_y, "tn")
     )
+
+
+_ADI_BACKENDS = ("auto", "jnp", "pallas", "fft")
+
+
+def _check_adi_backend(backend: str, cyclic: bool) -> None:
+    """Create-time backend validation shared by the 2D and 3D factories.
+
+    ``backend='fft'`` on a non-cyclic operator raises
+    :class:`repro.kernels.spectral.SpectralBackendError` — the spectral
+    sweep is the circulant diagonalisation, which only exists for
+    periodic (cyclic) bands."""
+    if backend not in _ADI_BACKENDS:
+        raise ValueError(
+            f"backend must be one of {_ADI_BACKENDS}, got {backend!r}"
+        )
+    if backend == "fft" and not cyclic:
+        raise spectral.SpectralBackendError(
+            "non-cyclic ADI bands are not circulants, so they do not "
+            "diagonalise under the DFT; use bc='periodic' (cyclic=True) "
+            "or a direct backend"
+        )
 
 
 def _make_adi_operator(
@@ -331,15 +376,23 @@ def _make_adi_operator(
     ``tune`` (``'off'|'cached'|'force'``) runs the Create-time autotuner
     over per-sweep backend / batch-tile / unroll candidates.
     """
+    _check_adi_backend(backend, cyclic)
     diagonals = _band_builder(operator)
     ax = alpha_over_h4
     ay = alpha_over_h4 if alpha_over_h4_y is None else alpha_over_h4_y
     factor = cyclic_penta_factor if cyclic else penta_factor
     fac_x = factor(*diagonals(nx, ax, dtype))
     fac_y = factor(*diagonals(ny, ay, dtype))
+    # cyclic bands are circulants: precompute their rfft eigenvalues so
+    # the fft sweep (explicit or tuner-arbitraged) is a pointwise divide
+    sym_x = sym_y = None
+    if cyclic:
+        sym_x = spectral.band_symbol(*diagonals(nx, ax, dtype), dtype=dtype)
+        sym_y = spectral.band_symbol(*diagonals(ny, ay, dtype), dtype=dtype)
     op = ADIOperator(
         fac_x=fac_x, fac_y=fac_y, cyclic=cyclic, backend=backend,
         streams=streams, max_tile_bytes=max_tile_bytes, operator=operator,
+        sym_x=sym_x, sym_y=sym_y,
     )
     if tune != "off":
         op = _autotune_adi(op, ny, nx, jnp.dtype(dtype), tune, tune_cache)
@@ -380,6 +433,11 @@ class ADIOperator3D:
     y_cfg: dict | None = None
     z_cfg: dict | None = None
     operator: str = "hyperdiffusion"  # registry name the bands came from
+    # band symbols of the cyclic circulants (see ADIOperator) — the fft
+    # sweep needs no reshape at all: every axis solves in place
+    sym_x: jnp.ndarray | None = None
+    sym_y: jnp.ndarray | None = None
+    sym_z: jnp.ndarray | None = None
 
     @property
     def destroyed(self) -> bool:
@@ -406,6 +464,8 @@ class ADIOperator3D:
         from repro.launch import stream as _stream
 
         backend, unroll, cfg = self._cfg(self.x_cfg)
+        if backend == "fft":
+            return _fft_sweep(self.sym_x, rhs, axis=-1)
         nz, ny, nx = rhs.shape
         flat = rhs.reshape(nz * ny, nx)
         if self._should_stream(rhs):
@@ -436,6 +496,8 @@ class ADIOperator3D:
         from repro.launch import stream as _stream
 
         backend, unroll, cfg = self._cfg(self.y_cfg)
+        if backend == "fft":
+            return _fft_sweep(self.sym_y, rhs, axis=-2)
         if self._should_stream(rhs):
             return _stream.stream_penta_solve_mid(
                 self.fac_y,
@@ -461,6 +523,8 @@ class ADIOperator3D:
         from repro.launch import stream as _stream
 
         backend, unroll, cfg = self._cfg(self.z_cfg)
+        if backend == "fft":
+            return _fft_sweep(self.sym_z, rhs, axis=-3)
         nz, ny, nx = rhs.shape
         flat = rhs.reshape(nz, ny * nx)
         if self._should_stream(rhs):
@@ -538,17 +602,18 @@ def _autotune_adi3d(
 
         return builder
 
+    fft = _fft_arbitrage(op)
     best_x = autotune(
-        "adi3d_solve_x", _sweep_candidates(nz * ny), build("x", "tb"),
-        (rhs,), **kw
+        "adi3d_solve_x", _sweep_candidates(nz * ny, fft=fft),
+        build("x", "tb"), (rhs,), **kw
     )
     best_y = autotune(
-        "adi3d_solve_y", _sweep_candidates(nx), build("y", "tn"),
+        "adi3d_solve_y", _sweep_candidates(nx, fft=fft), build("y", "tn"),
         (rhs,), **kw
     )
     best_z = autotune(
-        "adi3d_solve_z", _sweep_candidates(ny * nx), build("z", "tn"),
-        (rhs,), **kw
+        "adi3d_solve_z", _sweep_candidates(ny * nx, fft=fft),
+        build("z", "tn"), (rhs,), **kw
     )
     return dataclasses.replace(
         op,
@@ -588,11 +653,17 @@ def _make_adi_operator_3d(
     over per-sweep backend / batch-tile / unroll candidates, reusing the
     2D tuner's candidate space and cache keying.
     """
+    _check_adi_backend(backend, cyclic)
     diagonals = _band_builder(operator)
     ax = alpha
     ay = alpha if alpha_y is None else alpha_y
     az = alpha if alpha_z is None else alpha_z
     factor = cyclic_penta_factor if cyclic else penta_factor
+    sym_x = sym_y = sym_z = None
+    if cyclic:
+        sym_x = spectral.band_symbol(*diagonals(nx, ax, dtype), dtype=dtype)
+        sym_y = spectral.band_symbol(*diagonals(ny, ay, dtype), dtype=dtype)
+        sym_z = spectral.band_symbol(*diagonals(nz, az, dtype), dtype=dtype)
     op = ADIOperator3D(
         fac_x=factor(*diagonals(nx, ax, dtype)),
         fac_y=factor(*diagonals(ny, ay, dtype)),
@@ -602,6 +673,9 @@ def _make_adi_operator_3d(
         streams=streams,
         max_tile_bytes=max_tile_bytes,
         operator=operator,
+        sym_x=sym_x,
+        sym_y=sym_y,
+        sym_z=sym_z,
     )
     if tune != "off":
         op = _autotune_adi3d(
@@ -662,7 +736,7 @@ def _register_adi_pytree(cls, fac_fields, cfg_fields, static_fields):
 
 _register_adi_pytree(
     ADIOperator,
-    fac_fields=("fac_x", "fac_y"),
+    fac_fields=("fac_x", "fac_y", "sym_x", "sym_y"),
     cfg_fields=("x_cfg", "y_cfg"),
     static_fields=(
         "cyclic", "backend", "streams", "max_tile_bytes", "operator",
@@ -670,7 +744,7 @@ _register_adi_pytree(
 )
 _register_adi_pytree(
     ADIOperator3D,
-    fac_fields=("fac_x", "fac_y", "fac_z"),
+    fac_fields=("fac_x", "fac_y", "fac_z", "sym_x", "sym_y", "sym_z"),
     cfg_fields=("x_cfg", "y_cfg", "z_cfg"),
     static_fields=(
         "cyclic", "backend", "streams", "max_tile_bytes", "operator",

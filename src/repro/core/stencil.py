@@ -73,6 +73,7 @@ from repro.util import deprecated_shim
 _DIRECTIONS = ("x", "y", "xy")
 _DIRECTIONS_3D = ("x", "y", "z", "xyz")
 _BCS = ("periodic", "np")
+_BACKENDS = ("auto", "pallas", "jnp", "fft")
 
 
 def _split_extents(n_points: int, lo: int | None, hi: int | None):
@@ -133,6 +134,11 @@ class PlanCore:
     # (repro.api.get_operator) — part of the autotune cache key, so two
     # operators that happen to share a geometry cannot alias one entry
     op_name: str | None = None
+    # Fourier symbol of the wrapped stencil kernel (rfftn layout), the
+    # Create-time payload of the fft backend: attached when backend='fft'
+    # is requested, or speculatively under backend='auto' so the tuner can
+    # race fft against the direct paths.  Rides the plan as a pytree leaf.
+    symbol: jnp.ndarray | None = None
 
     kernel_name: ClassVar[str] = "plan"
 
@@ -163,6 +169,55 @@ class PlanCore:
             for t1 in tile_candidates(d1)
         ]
 
+    # -- the spectral (fft) backend ----------------------------------------
+    def _spectral_spec(self, shape):
+        """``(weights_box, los, transform_shape)`` feeding
+        :func:`repro.kernels.spectral.stencil_symbol` — per family."""
+        raise NotImplementedError
+
+    def _fft_ineligible(self, shape) -> str | None:
+        """Why the fft backend cannot serve this plan (None = it can)."""
+        if self.bc != "periodic":
+            return (
+                f"bc={self.bc!r} — the symbol multiply is a *circular* "
+                "convolution, so only periodic boundaries diagonalise"
+            )
+        if self.point_fn is not weighted_point_fn:
+            return (
+                "function-pointer stencils have no precomputable Fourier "
+                "symbol; register explicit weights instead"
+            )
+        if shape is None:
+            return (
+                "the symbol is precomputed for one field shape at Create; "
+                "pass shape=(...)"
+            )
+        return None
+
+    def _with_symbol(self, shape) -> "PlanCore":
+        """The plan carrying its Create-time Fourier symbol."""
+        from repro.kernels import spectral
+
+        box, los, tshape = self._spectral_spec(shape)
+        sym = spectral.stencil_symbol(
+            box, los, tshape, dtype=self.coeffs.dtype
+        )
+        return dataclasses.replace(self, symbol=sym)
+
+    def _fft_axes(self) -> tuple[int, ...]:
+        """The transformed (trailing) axes — rank read off the symbol."""
+        return tuple(range(-self.symbol.ndim, 0))
+
+    def _fft_apply(self, data: jnp.ndarray) -> jnp.ndarray:
+        from repro.kernels import spectral
+
+        if self.symbol is None:
+            raise spectral.SpectralBackendError(
+                "this plan carries no Fourier symbol (Create attaches one "
+                "for periodic weighted plans)"
+            )
+        return spectral.apply_symbol(data, self.symbol, self._fft_axes())
+
     # -- Compute ----------------------------------------------------------
     def apply(
         self, data: jnp.ndarray, out_init: jnp.ndarray | None = None
@@ -173,6 +228,10 @@ class PlanCore:
         copied from ``out_init`` (zeros if not given)."""
         from repro.launch import stream as _stream
 
+        if self.backend == "fft":
+            # spectral path: one symbol multiply, never streamed (the fft
+            # needs the whole periodic extent; Create validated bc)
+            return self._fft_apply(data)
         if _stream.should_stream(
             data.shape,
             jnp.dtype(data.dtype).itemsize,
@@ -229,6 +288,12 @@ class PlanCore:
         data = jnp.zeros(tuple(shape), self.coeffs.dtype)
         default = {"backend": self.backend, "tile": None}
         candidates = [default]
+        # backend arbitrage: only 'auto' plans race the fft path — an
+        # explicit backend= is an explicit choice, and the fp64
+        # result-invariance contract (tuned == untuned bit-for-bit) only
+        # holds when tuning cannot change the arithmetic
+        if self.backend == "auto" and self.symbol is not None:
+            candidates.append({"backend": "fft", "tile": None})
         if ops.on_tpu():
             for t in self._pallas_tile_grid(shape):
                 candidates.append({"backend": "pallas", "tile": list(t)})
@@ -236,6 +301,15 @@ class PlanCore:
         halo_kwargs = self._halo_kwargs()
 
         def build(cfg):
+            if cfg["backend"] == "fft":
+                from repro.kernels import spectral
+
+                sym, axes = self.symbol, self._fft_axes()
+
+                def g(d):
+                    return spectral.apply_symbol(d, sym, axes)
+
+                return jax.jit(g)
             tile = tuple(cfg["tile"]) if cfg.get("tile") else None
 
             def f(d):
@@ -297,15 +371,18 @@ def _hashable(value):
 def _register_plan_pytree(cls) -> None:
     """Register a :class:`PlanCore` subclass as a JAX pytree.
 
-    The array payload (``coeffs`` — stencil weights or function-pointer
-    coefficients) is the single leaf; every other field (geometry, halo
-    extents, boundary mode, backend/tile/stream knobs, the point function)
-    is static aux data.  A jitted ``compute(plan, x)`` therefore retraces
-    only when the aux changes — swapping in new weight *values* of the
-    same shape/dtype reuses the trace (asserted in tests/test_api.py).
+    The array payload — ``coeffs`` (stencil weights or function-pointer
+    coefficients) and the optional fft ``symbol`` — are the leaves; every
+    other field (geometry, halo extents, boundary mode, backend/tile/stream
+    knobs, the point function) is static aux data.  A jitted
+    ``compute(plan, x)`` therefore retraces only when the aux changes —
+    swapping in new weight *values* of the same shape/dtype reuses the
+    trace (asserted in tests/test_api.py).
     """
     static = tuple(
-        f.name for f in dataclasses.fields(cls) if f.name != "coeffs"
+        f.name
+        for f in dataclasses.fields(cls)
+        if f.name not in ("coeffs", "symbol")
     )
 
     def flatten(plan):
@@ -313,18 +390,46 @@ def _register_plan_pytree(cls) -> None:
         # compute(plan, x) sees it too: a destroyed plan has a different
         # treedef, forcing a retrace where compute's refusal fires
         aux = tuple(_hashable(getattr(plan, name)) for name in static)
-        return (plan.coeffs,), aux + (plan.destroyed,)
+        return (plan.coeffs, plan.symbol), aux + (plan.destroyed,)
 
     def unflatten(aux, leaves):
         # aux carries a trailing destroyed flag beyond the static fields
         kwargs = dict(zip(static, aux, strict=False))
-        kwargs["coeffs"] = leaves[0]
+        kwargs["coeffs"], kwargs["symbol"] = leaves
         plan = cls(**kwargs)
         if aux[-1]:
             object.__setattr__(plan, "_destroyed", True)
         return plan
 
     jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+
+
+def _finish_plan(plan: PlanCore, shape, tune: str, tune_cache) -> PlanCore:
+    """The shared Create tail: spectral validation / symbol attachment,
+    then the ``tune=`` hook.
+
+    ``backend='fft'`` is validated here *at Create* — non-periodic
+    boundaries, function-pointer stencils and a missing ``shape=`` raise
+    :class:`repro.kernels.spectral.SpectralBackendError` instead of
+    silently computing wrong answers.  Under ``backend='auto'`` with
+    tuning on, an eligible plan gets its symbol attached speculatively so
+    :meth:`PlanCore.tuned` can race fft against the direct backends.
+    """
+    from repro.kernels.spectral import SpectralBackendError
+
+    if plan.backend not in _BACKENDS:
+        raise ValueError(
+            f"backend must be one of {_BACKENDS}, got {plan.backend!r}"
+        )
+    wants_fft = plan.backend == "fft"
+    arbitrage = plan.backend == "auto" and tune != "off"
+    if wants_fft or arbitrage:
+        reason = plan._fft_ineligible(shape)
+        if reason is None:
+            plan = plan._with_symbol(shape)
+        elif wants_fft:
+            raise SpectralBackendError(reason)
+    return plan.tuned(shape, tune, tune_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -356,6 +461,13 @@ class Stencil2D(PlanCore):
         from repro.launch import stream as _stream
 
         return _stream.stream_stencil_apply(*args, **kwargs)
+
+    def _spectral_spec(self, shape):
+        box = jnp.reshape(
+            self.coeffs,
+            (self.top + self.bottom + 1, self.left + self.right + 1),
+        )
+        return box, (self.top, self.left), tuple(shape)
 
     @property
     def num_sten(self) -> int:
@@ -477,7 +589,7 @@ def _create_2d(
         max_tile_bytes=max_tile_bytes,
         op_name=op_name,
     )
-    return plan.tuned(shape, tune, tune_cache)
+    return _finish_plan(plan, shape, tune, tune_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -508,6 +620,11 @@ class StencilBatch1D(PlanCore):
         from repro.launch import stream as _stream
 
         return _stream.stream_batch1d_apply(*args, **kwargs)
+
+    def _spectral_spec(self, shape):
+        # each row of the (B, M) stack transforms independently; the 1D
+        # symbol broadcasts over the batch axis
+        return self.coeffs, (self.left,), (tuple(shape)[-1],)
 
     @property
     def num_sten(self) -> int:
@@ -598,7 +715,7 @@ def _create_1d_batch(
         max_tile_bytes=max_tile_bytes,
         op_name=op_name,
     )
-    return plan.tuned(shape, tune, tune_cache)
+    return _finish_plan(plan, shape, tune, tune_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -646,6 +763,17 @@ class Stencil3D(PlanCore):
         nz, ny = shape[0], shape[1]
         tzs = [t for t in (16, 8, 4) if nz % t == 0][:2] or [1]
         return [(tz, ty) for tz in tzs for ty in tile_candidates(ny)]
+
+    def _spectral_spec(self, shape):
+        box = jnp.reshape(
+            self.coeffs,
+            (
+                self.front + self.back + 1,
+                self.top + self.bottom + 1,
+                self.left + self.right + 1,
+            ),
+        )
+        return box, (self.front, self.top, self.left), tuple(shape)
 
     @property
     def num_sten(self) -> int:
@@ -793,7 +921,7 @@ def _create_3d(
         max_tile_bytes=max_tile_bytes,
         op_name=op_name,
     )
-    return plan.tuned(shape, tune, tune_cache)
+    return _finish_plan(plan, shape, tune, tune_cache)
 
 
 class DoubleBuffer:

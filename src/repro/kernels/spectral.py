@@ -1,0 +1,187 @@
+"""Spectral (FFT) execution backend — periodic stencils as symbol multiplies.
+
+Ahmad et al., "Fast Stencil Computations using FFTs" (arXiv 2105.06676):
+under periodic boundary conditions a stencil apply is a circular
+convolution, so it diagonalises in Fourier space — ``Compute`` becomes
+``irfftn(rfftn(field) * symbol)`` where the **symbol** (the DFT of the
+wrapped stencil kernel) is precomputed once at Create time from the
+registered weights.  The same diagonalisation collapses the implicit ADI
+sweep: the cyclic constant-band pentadiagonal operator is a circulant,
+so its solve is a *divide* by the band symbol (e.g. ``1 - alpha *
+sym(delta^2)`` for diffusion, ``1 + alpha * sym(delta^4)`` for
+hyperdiffusion) — no recurrence, no Woodbury closure.
+
+Asymptotics: a direct apply costs O(N * taps), the spectral apply
+O(N log N) independent of the stencil radius — the crossover favours
+fft for large radii and dense boxes (guarded in
+``benchmarks/run.py``).  The Create-time autotuner races
+``fft`` vs ``pallas`` vs ``jnp`` per (operator, shape, dtype, bc) and
+bakes the measured winner into the plan, so callers on
+``backend='auto'`` never choose.
+
+Everything here is **dtype-preserving**: symbols are applied at the
+complex counterpart of the field dtype (fp32 fields ride complex64 even
+under ``jax_enable_x64`` — the ``no_dtype_upcast`` audit rule would name
+an accidental complex128 promotion).
+
+Symbols are computed host-side with numpy at float64 precision (Create
+is not a hot path; truncating a double-precision symbol to complex64 is
+strictly more accurate than computing it in single) and committed at the
+plan dtype.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SpectralBackendError",
+    "apply_symbol",
+    "band_symbol",
+    "solve_symbol_axis",
+    "stencil_symbol",
+]
+
+# what a Create may ask for; SpectralBackendError lists these verbatim
+SUPPORTED_BACKENDS = ("auto", "jnp", "pallas", "fft")
+
+
+class SpectralBackendError(ValueError):
+    """A Create asked the fft backend for something it cannot do.
+
+    Raised at **Create time** — never from a Compute — when
+    ``backend='fft'`` is combined with a configuration the spectral path
+    does not support: non-periodic boundaries (``bc='np'``), a
+    non-cyclic ADI operator, function-pointer stencils, or a missing
+    ``shape=`` (the symbol is precomputed for one field shape).  The
+    message names the supported execution backends so the caller can
+    pick a direct one instead of silently computing wrong answers.
+    """
+
+    def __init__(self, reason: str):
+        super().__init__(
+            f"backend='fft' unsupported here: {reason} "
+            f"(supported backends: {', '.join(SUPPORTED_BACKENDS)}; the "
+            "fft path needs periodic/cyclic boundaries, explicit weights "
+            "and a Create-time shape)"
+        )
+
+
+def complex_dtype_for(real_dtype) -> np.dtype:
+    """The complex counterpart of a real floating dtype (f32 -> c64,
+    f64 -> c128) — the dtype a field of ``real_dtype`` transforms to."""
+    return np.result_type(np.dtype(real_dtype), np.complex64)
+
+
+def _wrapped_kernel(weights: np.ndarray, los, shape) -> np.ndarray:
+    """Scatter stencil weights onto a zero field as a circular-convolution
+    kernel.
+
+    The direct apply is ``out = sum_w w[idx] * roll(data, lo - offset)``
+    (:mod:`repro.kernels.ref` convention), i.e. a circular convolution
+    with the kernel ``k[(lo - offset) % n] += w`` per axis.  ``np.add.at``
+    accumulates wrap-around collisions (stencil wider than the domain)
+    instead of overwriting them.
+    """
+    kern = np.zeros(shape, np.float64)
+    idx = np.meshgrid(
+        *[
+            (lo - np.arange(s)) % n
+            for lo, s, n in zip(los, weights.shape, shape)
+        ],
+        indexing="ij",
+    )
+    np.add.at(kern, tuple(i.ravel() for i in idx), weights.ravel())
+    return kern
+
+
+def stencil_symbol(weights, los, shape, dtype=None) -> jnp.ndarray:
+    """Fourier symbol of a periodic stencil apply on a ``shape`` field.
+
+    ``weights`` is the (1D/2D/3D) stencil box, ``los`` the low halo
+    extent per axis (``(top, left)`` in 2D, ``(left,)`` for a line,
+    ``(front, top, left)`` in 3D), ``shape`` the transformed extents.
+    Returns the ``rfftn`` of the wrapped kernel — shape
+    ``(*shape[:-1], shape[-1]//2 + 1)`` — committed at the complex
+    counterpart of ``dtype`` (default: the weights dtype), so a
+    float32 plan carries a complex64 symbol.
+    """
+    w = np.asarray(weights, np.float64)
+    shape = tuple(int(s) for s in shape)
+    if w.ndim != len(shape) or w.ndim != len(los):
+        raise ValueError(
+            f"stencil_symbol: weights rank {w.ndim} vs axes "
+            f"{len(shape)}/{len(los)}"
+        )
+    sym = np.fft.rfftn(_wrapped_kernel(w, los, shape))
+    out_dtype = complex_dtype_for(
+        np.asarray(weights).dtype if dtype is None else dtype
+    )
+    return jnp.asarray(sym, out_dtype)
+
+
+def band_symbol(l2, l1, d, u1, u2, dtype=None) -> jnp.ndarray:
+    """Eigenvalues (on rfft frequencies) of the cyclic constant-band
+    pentadiagonal operator given by five length-``M`` diagonals.
+
+    The cyclic band with constant coefficients is a circulant, whose
+    eigenvalues are the DFT of its first column — so the entire
+    factor-and-substitute + Woodbury solve collapses to a pointwise
+    divide by this symbol (:func:`solve_symbol_axis`).  Bands are the
+    :mod:`repro.kernels.penta` convention (``l2, l1, d, u1, u2``);
+    wrap-around collisions on tiny systems accumulate.
+    """
+    bands = [np.asarray(b, np.float64) for b in (d, l1, l2, u1, u2)]
+    M = bands[0].shape[0]
+    col = np.zeros(M, np.float64)
+    for band, off in zip(bands, (0, 1, 2, -1, -2)):
+        col[off % M] += band[off % M]
+    sym = np.fft.rfft(col)
+    out_dtype = complex_dtype_for(
+        np.asarray(d).dtype if dtype is None else dtype
+    )
+    return jnp.asarray(sym, out_dtype)
+
+
+def _cast_symbol(symbol: jnp.ndarray, field_dtype) -> jnp.ndarray:
+    """The symbol at the complex counterpart of the field dtype.
+
+    fp32 fields transform to complex64; a complex128 symbol is *narrowed*
+    to match rather than letting promotion widen the whole fft pipeline
+    to complex128 (the upcast the ``no_dtype_upcast`` audit rule names).
+    """
+    return symbol.astype(jnp.dtype(complex_dtype_for(field_dtype)))
+
+
+def apply_symbol(data: jnp.ndarray, symbol: jnp.ndarray, axes) -> jnp.ndarray:
+    """The spectral Compute: ``irfftn(rfftn(data) * symbol)`` over ``axes``.
+
+    Exactly the periodic direct apply (to rounding), at a cost
+    independent of the stencil radius.  ``axes`` are the transformed
+    (trailing) axes; leading batch axes broadcast.  The inverse length
+    is pinned to ``data.shape`` so odd/prime extents round-trip.
+    """
+    axes = tuple(axes)
+    lengths = [data.shape[a] for a in axes]
+    f = jnp.fft.rfftn(data, axes=axes)
+    return jnp.fft.irfftn(f * _cast_symbol(symbol, data.dtype),
+                          s=lengths, axes=axes)
+
+
+def solve_symbol_axis(
+    rhs: jnp.ndarray, symbol: jnp.ndarray, axis: int
+) -> jnp.ndarray:
+    """The spectral ADI sweep: solve the cyclic banded system along one
+    axis as a pointwise divide by the band symbol.
+
+    Replaces the pentadiagonal recurrence + Woodbury closure on the
+    periodic path; every other axis is batch.
+    """
+    n = rhs.shape[axis]
+    sym = _cast_symbol(symbol, rhs.dtype)
+    # broadcast the 1D symbol along the solve axis
+    shape = [1] * rhs.ndim
+    shape[axis] = sym.shape[0]
+    f = jnp.fft.rfft(rhs, axis=axis)
+    return jnp.fft.irfft(f / sym.reshape(shape), n=n, axis=axis)

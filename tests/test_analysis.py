@@ -383,6 +383,66 @@ class TestAudit:
         assert "no_transpose" in out and "donation_applied" in out
 
 
+class TestSpectralAudit:
+    """The fft backend column of the audit matrix (PR-9 satellite)."""
+
+    def test_fft_backend_cells_are_clean(self):
+        report = an.run_audit(
+            operators=("laplacian", "hyperdiffusion"),
+            families=("stencil2d", "adi2d"),
+            backends=("fft",), retrace=False,
+        )
+        audited = [r for r in report.results if r.skipped is None]
+        assert audited and report.ok
+        # the fft dtype contract is audited on every cell
+        assert all("no_dtype_upcast" in r.rules for r in audited)
+
+    def test_fft_cells_do_not_claim_transpose_freedom(self):
+        """rfft along the leading axis lowers with transposes, so the
+        no_transpose rule applies only to the direct jnp ADI contract —
+        fft cells must not run (and spuriously fail) it."""
+        report = an.run_audit(
+            operators=("hyperdiffusion",), families=("adi2d",),
+            backends=("fft",), retrace=False,
+        )
+        (cell,) = [r for r in report.results if r.skipped is None]
+        assert "no_transpose" not in cell.rules and cell.ok
+
+    def test_seeded_complex128_promotion_is_caught_and_named(self):
+        """The fp32 rfft path rides complex64; a buggy symbol multiply
+        that lets a complex128 symbol promote the pipeline must trip
+        no_dtype_upcast with the widening named."""
+        from repro.kernels import spectral
+
+        x32 = jnp.zeros((16, 16), jnp.float32)
+        sym128 = jnp.asarray(
+            np.fft.rfftn(np.ones((16, 16))), jnp.complex128
+        )
+
+        def buggy(v):  # skips spectral._cast_symbol — the seeded defect
+            f = jnp.fft.rfftn(v, axes=(-2, -1))
+            return jnp.fft.irfftn(
+                f * sym128, s=(16, 16), axes=(-2, -1)
+            ).astype(v.dtype)
+
+        findings = an.check_jaxpr(
+            jax.make_jaxpr(buggy)(x32), ("no_dtype_upcast",)
+        )
+        assert findings, "the seeded complex128 promotion went unflagged"
+        assert findings[0].primitive == "convert_element_type"
+        assert "complex128" in findings[0].message
+
+        # and the shipped path is clean: apply_symbol narrows the symbol
+        # to the field's complex counterpart instead of promoting
+        clean = an.check_jaxpr(
+            jax.make_jaxpr(
+                lambda v: spectral.apply_symbol(v, sym128, (-2, -1))
+            )(x32),
+            ("no_dtype_upcast",),
+        )
+        assert clean == []
+
+
 # ---------------------------------------------------------------------------
 # tune-cache atomicity (satellite: a killed writer must not corrupt reads)
 # ---------------------------------------------------------------------------

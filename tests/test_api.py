@@ -541,3 +541,64 @@ class TestSwap:
             prev = repro.compute(plan, cur)
             cur, prev = repro.swap((prev, cur))
         assert cur.shape == (8, 8)
+
+
+class TestSpectralBackendValidation:
+    """backend='fft' is validated at Create: unsupported configurations
+    raise the named SpectralBackendError (listing the supported
+    backends) instead of silently computing wrong answers."""
+
+    def test_nonperiodic_bc_refused(self):
+        with pytest.raises(repro.SpectralBackendError, match="periodic"):
+            repro.create("laplacian", (16, 16), bc="np", backend="fft")
+
+    def test_error_names_supported_backends(self):
+        with pytest.raises(
+            repro.SpectralBackendError, match="auto, jnp, pallas, fft"
+        ):
+            repro.create("laplacian", (16, 16), bc="np", backend="fft")
+
+    def test_noncyclic_adi_refused(self):
+        with pytest.raises(repro.SpectralBackendError, match="circulant"):
+            repro.create(
+                "diffusion", (16, 16), mode="adi", alpha=0.1,
+                cyclic=False, backend="fft", lint="off",
+            )
+        with pytest.raises(repro.SpectralBackendError, match="circulant"):
+            repro.create(
+                "hyperdiffusion", (8, 16, 16), mode="adi", alpha=0.1,
+                bc="np", backend="fft", lint="off",
+            )
+
+    def test_function_pointer_mode_refused(self):
+        def point(windows, coeffs):
+            return coeffs[0] * windows[0]
+
+        with pytest.raises(
+            repro.SpectralBackendError, match="function-pointer"
+        ):
+            repro.create(
+                point, (16, 16), coeffs=jnp.ones((1,)),
+                extents=dict(left=1, right=1), mode="x", backend="fft",
+            )
+
+    def test_unknown_backend_refused_everywhere(self):
+        with pytest.raises(ValueError, match="backend must be one of"):
+            repro.create("laplacian", (16, 16), backend="warp")
+        with pytest.raises(ValueError, match="backend must be one of"):
+            repro.create(
+                "diffusion", (16, 16), mode="adi", alpha=0.1, backend="warp"
+            )
+
+    def test_error_is_a_value_error(self):
+        # callers catching the pre-fft ValueError contract keep working
+        assert issubclass(repro.SpectralBackendError, ValueError)
+
+    def test_periodic_fft_plan_works_and_batch_refusal(self):
+        plan = repro.create("laplacian", (16, 16), backend="fft")
+        out = repro.compute(plan, rand((16, 16)))
+        assert out.shape == (16, 16)
+        with pytest.raises(repro.SpectralBackendError, match="periodic"):
+            repro.create(
+                "laplacian", (4, 16), mode="batch", bc="np", backend="fft"
+            )

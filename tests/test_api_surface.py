@@ -28,6 +28,8 @@ EXPECTED_SURFACE = sorted(
         "ADIOperator",
         "ADIOperator3D",
         "DoubleBuffer",
+        # the spectral (fft) backend's named Create-time refusal (PR 9)
+        "SpectralBackendError",
         # engine-level destroy + weight helpers
         "plan_destroy",
         "central_difference_weights",
