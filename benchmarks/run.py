@@ -749,6 +749,50 @@ def bench_roofline_table(smoke: bool = False):
     return rows
 
 
+def bench_audit(smoke: bool = False):
+    """Wall time of the static-analysis gate itself: one invariant +
+    cost audit over a one-cell slice (what a pre-commit hook would pay),
+    with the shared CellArtifacts cache proving the second pass rides
+    the first pass's compiles."""
+    from repro.analysis import CellArtifacts, run_audit, run_cost_audit
+
+    kw = dict(
+        operators=("laplacian",), families=("stencil2d",),
+        backends=("jnp",),
+    )
+    rows = []
+
+    t0 = time.perf_counter()
+    cache = CellArtifacts()
+    rep = run_audit(retrace=False, cache=cache, **kw)
+    t_inv = time.perf_counter() - t0
+    rows.append(
+        ("audit_invariant_cell", t_inv * 1e6, f"ok={rep.ok}")
+    )
+
+    t0 = time.perf_counter()
+    crep = run_cost_audit(cache=cache, **kw)
+    t_cost = time.perf_counter() - t0
+    rows.append(
+        (
+            "audit_cost_cell_cached",
+            t_cost * 1e6,
+            f"ok={crep.ok};builds={cache.builds}",
+        )
+    )
+
+    t0 = time.perf_counter()
+    crep2 = run_cost_audit(cache=CellArtifacts(), **kw)
+    rows.append(
+        (
+            "audit_cost_cell_cold",
+            (time.perf_counter() - t0) * 1e6,
+            f"ok={crep2.ok}",
+        )
+    )
+    return rows
+
+
 # (name, fn, heavy, row-name prefixes) — the prefixes let --compare skip
 # whole benchmark functions whose rows cannot appear in the baseline
 BENCHMARKS = [
@@ -770,6 +814,7 @@ BENCHMARKS = [
     ("serve_chaos", bench_serve_chaos, False, ("serve_chaos_",)),
     ("coarsening_fig1", bench_coarsening_fig1, True, ("fig1_",)),  # --full
     ("roofline_table", bench_roofline_table, False, ("roofline_",)),
+    ("audit", bench_audit, False, ("audit_",)),
 ]
 
 

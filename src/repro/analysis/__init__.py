@@ -18,10 +18,28 @@ from __future__ import annotations
 
 from repro.analysis.audit import (
     BACKENDS,
+    COST_SEEDS,
     FAMILIES,
     AuditResult,
+    CellArtifacts,
+    CostReport,
+    CostResult,
     Report,
+    diff_baseline,
     run_audit,
+    run_cost_audit,
+)
+from repro.analysis.cost import (
+    CostVector,
+    Expected,
+    LoopCost,
+    analyze_hlo,
+    expected_ch_step,
+    expected_fft,
+    expected_penta,
+    expected_stencil,
+    measure_compiled,
+    memory_stats,
 )
 from repro.analysis.findings import (
     ERROR,
@@ -36,9 +54,11 @@ from repro.analysis.findings import (
     surface,
 )
 from repro.analysis.rules import (
+    BUDGET_FACTORS,
     RULES,
     Rule,
     all_primitives,
+    check_cost,
     check_hlo,
     check_jaxpr,
     check_plan,
@@ -56,6 +76,8 @@ from repro.analysis.stencil_lint import (
 
 __all__ = [
     "BACKENDS",
+    "BUDGET_FACTORS",
+    "COST_SEEDS",
     "ERROR",
     "FAMILIES",
     "LINT_MODES",
@@ -63,12 +85,20 @@ __all__ = [
     "SEVERITIES",
     "WARNING",
     "AuditResult",
+    "CellArtifacts",
+    "CostReport",
+    "CostResult",
+    "CostVector",
+    "Expected",
     "Finding",
     "LintError",
+    "LoopCost",
     "Report",
     "Rule",
     "StencilLintWarning",
     "all_primitives",
+    "analyze_hlo",
+    "check_cost",
     "check_hlo",
     "check_jaxpr",
     "check_lint_mode",
@@ -76,12 +106,20 @@ __all__ = [
     "check_plan",
     "check_symmetry",
     "check_zero_sum",
+    "diff_baseline",
     "errors",
+    "expected_ch_step",
+    "expected_fft",
+    "expected_penta",
+    "expected_stencil",
     "iter_eqns",
     "lint_adi",
     "lint_operator",
+    "measure_compiled",
+    "memory_stats",
     "retrace_count",
     "rule",
     "run_audit",
+    "run_cost_audit",
     "surface",
 ]

@@ -25,11 +25,23 @@ rule                   kind      violated when
                                  identical plan arguments
 ``pallas_grid_feasible`` plan    the plan's tile/grid cannot cover the
                                  (padded) extents given its halo
+``flops_budget``       cost      measured HLO flops exceed the family's
+                                 analytic floor × calibrated factor
+``bytes_budget``       cost      measured HLO bytes exceed the floor ×
+                                 factor (a transpose/copy round-trip)
+``peak_memory_budget`` cost      buffer-assignment peak exceeds budget
+                                 (a leaked double buffer)
+``no_remat``           cost      a ≥2-trip loop body's *per-trip*
+                                 traffic exceeds the per-step budget
+                                 (rematerialising scan)
 ====================== ========= ==========================================
 
-``check_jaxpr`` / ``check_hlo`` / ``check_plan`` run the rules of the
-matching kind; :func:`repro.analysis.audit.run_audit` drives all of them
-over the full operator × plan-family matrix.
+``check_jaxpr`` / ``check_hlo`` / ``check_plan`` / ``check_cost`` run
+the rules of the matching kind; :func:`repro.analysis.audit.run_audit`
+and :func:`repro.analysis.audit.run_cost_audit` drive all of them over
+the full operator × plan-family matrix.  The cost rules read the
+measured :class:`~repro.analysis.cost.CostVector` and the analytic
+:class:`~repro.analysis.cost.Expected` floor from their context.
 """
 
 from __future__ import annotations
@@ -40,9 +52,11 @@ from collections.abc import Callable
 import numpy as np
 
 __all__ = [
+    "BUDGET_FACTORS",
     "RULES",
     "Rule",
     "all_primitives",
+    "check_cost",
     "check_hlo",
     "check_jaxpr",
     "check_plan",
@@ -161,6 +175,20 @@ def check_hlo(hlo_text: str, rules=None, *, context=None) -> list[Finding]:
     findings = []
     for r in _resolve(rules, "hlo"):
         findings.extend(r.check(hlo_text, ctx))
+    return findings
+
+
+def check_cost(cost, rules=None, *, context=None) -> list[Finding]:
+    """Run cost-kind rules on a measured
+    :class:`~repro.analysis.cost.CostVector`.
+
+    ``context`` must carry ``expected`` (the family's analytical
+    :class:`~repro.analysis.cost.Expected` floor) and may override the
+    per-metric ``factors`` and name the audited ``cell``."""
+    ctx = dict(context or {})
+    findings = []
+    for r in _resolve(rules, "cost"):
+        findings.extend(r.check(cost, ctx))
     return findings
 
 
@@ -373,6 +401,117 @@ def _retrace_budget(fn, ctx) -> list[Finding]:
 # ---------------------------------------------------------------------------
 # plan rule: Pallas grid feasibility
 # ---------------------------------------------------------------------------
+
+
+# ---------------------------------------------------------------------------
+# cost rules: fail-closed perf budgets over measured CostVectors
+# ---------------------------------------------------------------------------
+
+# Budget = analytic floor x factor.  The factors encode how far the
+# *measured* program may legitimately sit above the closed-form model
+# (XLA materialises intermediates the model doesn't count: the fp64
+# audit cells observe bytes ~2-4x the two-field floor, peak memory a few
+# live temps above in+out).  They are deliberately generous enough that
+# a clean build clears every cell with >=1.5x headroom, while the
+# canonical regressions — a reintroduced transpose round-trip, a leaked
+# double buffer, a rematerialised scan history — overshoot them.  The
+# *tight* net is the committed ANALYSIS_costs.json baseline diff (>10%);
+# these absolute budgets are the backstop that works without a baseline.
+BUDGET_FACTORS = {
+    "flops": 12.0,
+    "bytes": 8.0,
+    "peak_memory": 6.0,
+    "step_bytes": 8.0,
+}
+_NO_REMAT_MIN_TRIPS = 2  # single-trip "loops" carry no growth signal
+
+
+def _budget(ctx, metric: str):
+    exp = ctx["expected"]
+    factors = {**BUDGET_FACTORS, **ctx.get("factors", {})}
+    return getattr(exp, metric) * factors[metric], factors[metric]
+
+
+def _over_budget(ctx, metric: str, measured: float, primitive: str):
+    exp = ctx["expected"]
+    budget, factor = _budget(ctx, metric)
+    if budget <= 0 or measured <= budget:
+        return []
+    floor = getattr(exp, metric)
+    return [
+        Finding(
+            rule=f"{metric}_budget",
+            severity=ERROR,
+            message=(
+                f"measured {metric} {measured:.4g} exceeds budget "
+                f"{budget:.4g} ({factor:g}x the analytic floor "
+                f"{floor:.4g}; bloat {measured / floor:.2f}x)"
+            ),
+            primitive=primitive,
+            computation=ctx.get("cell", "<cost>"),
+        )
+    ]
+
+
+@rule(
+    "flops_budget",
+    "cost",
+    "measured FLOPs must stay within a factor of the analytic floor",
+)
+def _flops_budget(cost, ctx) -> list[Finding]:
+    return _over_budget(ctx, "flops", cost.flops, "flops")
+
+
+@rule(
+    "bytes_budget",
+    "cost",
+    "bytes moved must stay within a factor of the ~2-fields-plus-halo floor",
+)
+def _bytes_budget(cost, ctx) -> list[Finding]:
+    return _over_budget(ctx, "bytes", cost.bytes, "bytes_accessed")
+
+
+@rule(
+    "peak_memory_budget",
+    "cost",
+    "peak live memory must stay within a factor of the live-field floor",
+)
+def _peak_memory_budget(cost, ctx) -> list[Finding]:
+    return _over_budget(ctx, "peak_memory", cost.peak_memory, "buffer_assignment")
+
+
+@rule(
+    "no_remat",
+    "cost",
+    "while-body traffic must stay trip-count-linear (no rematerialised "
+    "history: per-trip bytes bounded by the per-step floor)",
+)
+def _no_remat(cost, ctx) -> list[Finding]:
+    exp = ctx["expected"]
+    if exp.step_bytes <= 0:
+        return []
+    budget, factor = _budget(ctx, "step_bytes")
+    out = []
+    for lp in cost.loops:
+        if lp.trips < _NO_REMAT_MIN_TRIPS or lp.per_trip_bytes <= budget:
+            continue
+        out.append(
+            Finding(
+                rule="no_remat",
+                severity=ERROR,
+                message=(
+                    f"while body {lp.body!r} ({lp.trips} trips) moves "
+                    f"{lp.per_trip_bytes:.4g} bytes per trip, over the "
+                    f"per-step budget {budget:.4g} ({factor:g}x the "
+                    f"analytic step floor {exp.step_bytes:.4g}): total "
+                    "loop traffic grows super-linearly in the trip count "
+                    "(rematerialised history / stacked carry)"
+                ),
+                primitive="while",
+                computation=lp.body,
+            )
+        )
+    return out
 
 
 @rule(

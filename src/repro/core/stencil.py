@@ -326,10 +326,26 @@ class PlanCore:
             "fn": getattr(self.point_fn, "__name__", "fn"),
             "op": self.op_name,
         }
+        # the analytic cost prior (repro.tune.prior): rank candidates by
+        # the cost model before measuring, so a backend predicted far off
+        # the pace (e.g. fft for a radius-1 kernel) never races at all —
+        # winner invariance is preserved by the conservative prune band
+        prior = None
+        if len(candidates) > 1:
+            from repro.tune.prior import prior_enabled, stencil_prior
+
+            if prior_enabled():
+                import numpy as np
+
+                taps = int(np.count_nonzero(np.asarray(self.coeffs)))
+                prior = stencil_prior(
+                    tuple(shape), max(taps, 1), data.dtype.itemsize
+                )
         best = autotune(
             self.kernel_name, candidates, build, (data,),
             shape=shape, dtype=data.dtype, bc=self.bc, backend=self.backend,
             extra=extra, mode=mode, default=default, cache=cache,
+            prior=prior,
         )
         tile = tuple(best["tile"]) if best.get("tile") else None
         return dataclasses.replace(self, tile=tile, backend=best["backend"])

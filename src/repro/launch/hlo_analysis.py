@@ -184,16 +184,8 @@ def analyze_compiled(compiled, *, n_chips: int, model_flops=None):
         n_chips=n_chips,
         model_flops=model_flops,
     )
-    ma = compiled.memory_analysis()
-    mem = {
-        "argument_bytes": int(ma.argument_size_in_bytes),
-        "output_bytes": int(ma.output_size_in_bytes),
-        "temp_bytes": int(ma.temp_size_in_bytes),
-        "alias_bytes": int(ma.alias_size_in_bytes),
-        "code_bytes": int(ma.generated_code_size_in_bytes),
-    }
-    mem["peak_per_device"] = (
-        mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
-        - mem["alias_bytes"]
-    )
+    from repro.analysis.cost import memory_stats
+
+    mem = memory_stats(compiled)
+    mem["peak_per_device"] = mem["peak_bytes"]
     return terms, colls, mem

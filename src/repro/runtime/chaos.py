@@ -175,8 +175,9 @@ class FaultPlan:
         return self
 
     def _streams(self) -> list[random.Random]:
+        # lock-held helper: every caller (fire) already owns self._lock
         if self._rngs is None:
-            self._rngs = [
+            self._rngs = [  # concurrency: ok — caller holds self._lock
                 random.Random(f"{self.seed}:{i}:{f.site}:{f.kind}")
                 for i, f in enumerate(self.faults)
             ]

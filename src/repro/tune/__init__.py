@@ -23,6 +23,13 @@ from repro.tune.cache import (
     host_fingerprint,
     tune_key,
 )
+from repro.tune.prior import (
+    PRUNE_RATIO,
+    predicted_score,
+    prior_enabled,
+    prune_candidates,
+    stencil_prior,
+)
 
 __all__ = [
     "FORCE_ENV",
@@ -35,8 +42,13 @@ __all__ = [
     "reset_stats",
     "stats",
     "ENV_VAR",
+    "PRUNE_RATIO",
     "TuneCache",
     "cache_dir",
     "host_fingerprint",
+    "predicted_score",
+    "prior_enabled",
+    "prune_candidates",
+    "stencil_prior",
     "tune_key",
 ]

@@ -65,6 +65,7 @@ class TuneStats:
     cache_hits: int = 0
     cache_misses: int = 0
     tuned: int = 0  # autotune() calls that produced a winner
+    pruned: int = 0  # candidates skipped by the analytic cost prior
 
 
 stats = TuneStats()
@@ -76,6 +77,7 @@ def reset_stats() -> TuneStats:
     stats.cache_hits = 0
     stats.cache_misses = 0
     stats.tuned = 0
+    stats.pruned = 0
     return stats
 
 
@@ -116,6 +118,7 @@ def autotune(
     mode: str = "cached",
     default: dict | None = None,
     cache: TuneCache | None = None,
+    prior: Callable[[dict], float | None] | None = None,
 ) -> dict:
     """Pick the fastest candidate configuration for one kernel problem.
 
@@ -124,6 +127,15 @@ def autotune(
     candidate) without any measurement.  Infeasible candidates —
     ``build`` returning ``None`` or the timed call raising — are skipped;
     if every candidate is infeasible the default is returned.
+
+    ``prior`` is an optional analytic scorer ``config -> predicted time
+    proxy`` (see :mod:`repro.tune.prior`): candidates predicted far
+    slower than the best prediction are skipped without measurement
+    (counted in ``stats.pruned``).  The cache is still consulted against
+    the *full* candidate list, so a previously measured winner is
+    honoured even if the prior would have pruned it; a prune down to a
+    single survivor returns it unmeasured (and uncached — the next
+    Create re-derives it from the prior for free).
     """
     check_mode(mode)
     if mode == "cached" and _force_requested():
@@ -145,8 +157,17 @@ def autotune(
             return dict(best)
         stats.cache_misses += 1
 
+    to_measure = candidates
+    if prior is not None:
+        from repro.tune.prior import prune_candidates
+
+        to_measure, dropped = prune_candidates(candidates, prior)
+        stats.pruned += len(dropped)
+        if len(to_measure) == 1:
+            return dict(to_measure[0])
+
     best, best_us = None, float("inf")
-    for config in candidates:
+    for config in to_measure:
         try:
             fn = build(dict(config))
         except Exception:  # noqa: BLE001 — infeasible candidate

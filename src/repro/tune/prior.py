@@ -1,0 +1,119 @@
+"""Analytic cost prior for the Create-time autotuner.
+
+The static cost auditor (:mod:`repro.analysis.cost`) knows, in closed
+form, roughly what each backend's apply costs: a direct stencil moves
+about one field per tap (each shifted read materialises on the jnp path)
+and spends ``2*taps`` flops/point, while a spectral apply moves a fixed
+handful of field passes but spends ``~10 n log2 n`` flops.  That is
+enough to *rank* candidates before measuring them: a candidate whose
+predicted time is several times the best prediction cannot plausibly win
+a wall-clock race whose contenders differ by integer factors, so the
+autotuner skips measuring it (``stats.pruned`` counts the skips).
+
+Scores are a scalar roofline proxy — ``bytes + flops / BALANCE`` with
+``BALANCE`` in flops-per-byte — so only *ratios* matter and no absolute
+hardware numbers are needed.  The prune ratio is deliberately
+conservative (:data:`PRUNE_RATIO`): candidates within the band are still
+measured, so a mispredicted close call cannot flip a winner, and fp64
+winner invariance is asserted in tests (tests/test_tune.py).  Candidates
+the prior cannot score (``None``) are always measured.  Set
+``REPRO_TUNE_NOPRIOR=1`` to disable pruning entirely.
+"""
+
+from __future__ import annotations
+
+import os
+from collections.abc import Callable, Sequence
+
+# flops-per-byte balance of the scoring proxy: bandwidth-bound hosts
+# (every machine these kernels target) sit in the single digits, and the
+# ranking is insensitive to the exact value because both backends'
+# scores are bytes-dominated at these sizes
+BALANCE_FLOPS_PER_BYTE = 4.0
+
+# a candidate predicted slower than PRUNE_RATIO x the best prediction is
+# not measured; anything closer races for real
+PRUNE_RATIO = 1.5
+
+NOPRIOR_ENV = "REPRO_TUNE_NOPRIOR"
+
+
+def prior_enabled() -> bool:
+    return os.environ.get(NOPRIOR_ENV, "").strip().lower() in (
+        "", "0", "false",
+    )
+
+
+def predicted_score(expected) -> float:
+    """Scalar time proxy for an :class:`~repro.analysis.cost.Expected`."""
+    return expected.bytes + expected.flops / BALANCE_FLOPS_PER_BYTE
+
+
+def stencil_prior(
+    shape, taps: int, itemsize: int
+) -> Callable[[dict], float | None]:
+    """The candidate scorer for a stencil-apply tuning problem.
+
+    Direct backends (jnp / pallas / auto) are modelled *as implemented*:
+    ``taps + 1`` field passes (the audit measures the roll-based jnp
+    apply within ~10% of this) and ``2*taps`` flops/pt.  The fft backend
+    uses the spectral closed form.  Pallas tile variants all score the
+    same — tile choice stays a measured decision."""
+    from repro.analysis.cost import expected_fft, expected_stencil
+
+    n = 1
+    for d in shape:
+        n *= int(d)
+
+    def prior(config: dict) -> float | None:
+        backend = config.get("backend")
+        if backend == "fft":
+            return predicted_score(expected_fft(shape, itemsize))
+        if backend in ("jnp", "pallas", "auto", None):
+            e = expected_stencil(shape, taps, itemsize)
+            # as-implemented traffic: one materialised pass per tap + out
+            implemented_bytes = float((taps + 1) * n * itemsize)
+            return max(e.bytes, implemented_bytes) + (
+                e.flops / BALANCE_FLOPS_PER_BYTE
+            )
+        return None
+
+    return prior
+
+
+def prune_candidates(
+    candidates: Sequence[dict],
+    prior: Callable[[dict], float | None],
+    *,
+    ratio: float = PRUNE_RATIO,
+) -> tuple[list[dict], list[dict]]:
+    """Split ``candidates`` into (kept, dropped) by predicted score.
+
+    Unscorable candidates (prior returns ``None`` or raises) are kept;
+    with fewer than two scorable candidates nothing is dropped."""
+    scores: list[float | None] = []
+    for c in candidates:
+        try:
+            s = prior(dict(c))
+        except Exception:  # noqa: BLE001 — an unscorable candidate races
+            s = None
+        scores.append(s)
+    finite = [s for s in scores if s is not None]
+    if len(finite) < 2:
+        return list(candidates), []
+    best = min(finite)
+    kept, dropped = [], []
+    for c, s in zip(candidates, scores):
+        (kept if s is None or s <= ratio * best else dropped).append(c)
+    return kept, dropped
+
+
+__all__ = [
+    "BALANCE_FLOPS_PER_BYTE",
+    "NOPRIOR_ENV",
+    "PRUNE_RATIO",
+    "predicted_score",
+    "prior_enabled",
+    "prune_candidates",
+    "stencil_prior",
+]

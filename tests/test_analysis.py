@@ -475,3 +475,100 @@ class TestCacheAtomicity:
         assert not any(
             name.endswith(".tmp") for name in os.listdir(tmp_path)
         )
+
+
+# ---------------------------------------------------------------------------
+# The cost audit CLI (--cost / baselines) — PR-10 tentpole surface
+# ---------------------------------------------------------------------------
+
+
+_COST_CLI = [
+    "-q", "--families", "stencil2d", "--operators", "laplacian",
+    "--backends", "jnp", "--no-retrace", "--cost",
+]
+
+
+class TestCostCli:
+    def test_clean_cost_subset_exits_zero(self, tmp_path):
+        out = tmp_path / "cost.json"
+        rc = analysis_main(_COST_CLI + ["--cost-out", str(out)])
+        assert rc == 0
+        rep = json.loads(out.read_text())
+        assert rep["ok"] and rep["violations"] == 0
+        cell = rep["cells"]["stencil2d/laplacian/jnp"]
+        assert cell["measured"]["flops"] > 0
+        assert cell["measured"]["bytes"] > 0
+        assert cell["measured"]["peak_memory"] > 0
+        assert cell["flops_bloat"] >= 1.0
+
+    def test_report_meta_fingerprinted(self, tmp_path):
+        out = tmp_path / "cost.json"
+        assert analysis_main(_COST_CLI + ["--cost-out", str(out)]) == 0
+        meta = json.loads(out.read_text())["meta"]
+        assert meta["schema_version"] >= 2
+        assert meta["jax"] == jax.__version__
+        assert meta["host"]
+
+    @pytest.mark.parametrize(
+        "seed,rule",
+        [
+            ("transpose_copy", "bytes_budget"),
+            ("double_buffer", "peak_memory_budget"),
+        ],
+    )
+    def test_cost_seeded_violation_fails_closed(self, tmp_path, seed, rule):
+        out = tmp_path / f"cost_{seed}.json"
+        rc = analysis_main(
+            _COST_CLI + ["--seed-violation", seed, "--cost-out", str(out)]
+        )
+        assert rc == 1
+        rep = json.loads(out.read_text())
+        assert not rep["ok"]
+        named = [
+            f["rule"]
+            for c in rep["cells"].values() if not c["ok"]
+            for f in c["findings"]
+        ]
+        assert rule in named
+
+    def test_cost_seed_requires_cost_mode(self):
+        with pytest.raises(SystemExit):
+            analysis_main([
+                "-q", "--families", "stencil2d", "--operators", "laplacian",
+                "--backends", "jnp", "--seed-violation", "transpose_copy",
+            ])
+
+    def test_baseline_roundtrip_then_tamper_regresses(
+        self, tmp_path, monkeypatch
+    ):
+        monkeypatch.chdir(tmp_path)  # keep ANALYSIS_costs.json scratch
+        baseline = tmp_path / "ANALYSIS_costs.json"
+        assert analysis_main(_COST_CLI + ["--update-baseline"]) == 0
+        assert baseline.exists()
+        # unchanged code vs its own baseline: no regression, exit 0
+        assert analysis_main(_COST_CLI) == 0
+        # pretend history claimed half the bytes: >10% drift must fail
+        doc = json.loads(baseline.read_text())
+        cell = doc["cells"]["stencil2d/laplacian/jnp"]
+        cell["measured"]["bytes"] /= 2.0
+        baseline.write_text(json.dumps(doc))
+        assert analysis_main(_COST_CLI) == 1
+
+    def test_committed_baseline_matches_current_code(self, repo_baseline):
+        # the real fail-closed gate: the checked-in ANALYSIS_costs.json
+        # still describes this tree for the smoke cell
+        rep = an.run_cost_audit(
+            operators=("laplacian",), families=("stencil2d",),
+            backends=("jnp",),
+        )
+        regs, _ = an.diff_baseline(rep.to_dict(), repo_baseline)
+        assert regs == [], regs
+
+
+@pytest.fixture
+def repo_baseline():
+    import pathlib
+
+    path = pathlib.Path(__file__).resolve().parents[1] / "ANALYSIS_costs.json"
+    assert path.exists(), "committed cost baseline is part of the gate"
+    return json.loads(path.read_text())

@@ -1,0 +1,172 @@
+"""The stdlib-only concurrency lint (PR-10 satellite).
+
+The seeded-violation proofs: a class that owns ``self._lock`` but writes
+``self._*`` outside it, or blocks (``time.sleep`` / queue ``put``/``get``
+/ ``block_until_ready`` / worker ``join``) while holding it, must be
+flagged with the rule named — and the real serve/ + runtime/ trees must
+lint clean, which is what the CI lint lane enforces (the lane runs the
+module as a plain script, so this file also asserts it imports nothing
+beyond the stdlib).
+"""
+
+import ast
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.concurrency import (
+    ConcurrencyFinding,
+    lint_paths,
+    lint_source,
+    main as lint_main,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+LINT_PATH = REPO / "src" / "repro" / "analysis" / "concurrency.py"
+
+
+UNLOCKED_WRITE = '''
+import threading
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+
+    def bump(self):
+        self._count += 1          # line 10: unlocked shared write
+
+    def locked_bump(self):
+        with self._lock:
+            self._count += 1      # fine
+'''
+
+BLOCKING_UNDER_LOCK = '''
+import threading, time
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue = None
+        self._worker_thread = None
+
+    def drain(self, item):
+        with self._lock:
+            time.sleep(0.1)                 # line 12
+            got = self._queue.get()          # line 13
+            out = item.block_until_ready()   # line 14
+            self._worker_thread.join()       # line 15
+        return got, out
+'''
+
+
+class TestSeededViolations:
+    def test_unlocked_write_is_flagged_with_rule_named(self):
+        findings = lint_source(UNLOCKED_WRITE, "seeded.py")
+        assert [f.rule for f in findings] == ["unlocked_shared_write"]
+        f = findings[0]
+        assert "_count" in f.message and "bump" in f.message
+        assert f.path == "seeded.py"
+        assert "unlocked_shared_write" in str(f)
+
+    def test_every_blocking_call_under_lock_is_flagged(self):
+        findings = lint_source(BLOCKING_UNDER_LOCK, "seeded.py")
+        assert len(findings) == 4
+        assert {f.rule for f in findings} == {"blocking_call_under_lock"}
+        msgs = " ".join(f.message for f in findings)
+        assert "sleep" in msgs and ".get()" in msgs
+        assert "block_until_ready" in msgs and "join" in msgs
+
+    def test_init_writes_are_exempt(self):
+        # both seeded classes assign self._* in __init__ — only the
+        # post-construction write may be reported
+        findings = lint_source(UNLOCKED_WRITE)
+        assert all("__init__" not in f.message for f in findings)
+
+    def test_lock_free_class_is_exempt(self):
+        src = "class P:\n    def f(self):\n        self._x = 1\n"
+        assert lint_source(src) == []
+
+    def test_pragma_suppresses_with_reason(self):
+        src = (
+            "import threading\n"
+            "class E:\n"
+            "    def __init__(self):\n"
+            "        self._lock = threading.Lock()\n"
+            "    def f(self):\n"
+            "        self._n = 1  # concurrency: ok — pre-share setup\n"
+        )
+        assert lint_source(src) == []
+
+    def test_nested_def_does_not_inherit_the_lock(self):
+        # a closure handed to another thread runs without the lock even
+        # if it is *created* under it
+        src = (
+            "import threading, time\n"
+            "class E:\n"
+            "    def __init__(self):\n"
+            "        self._lock = threading.Lock()\n"
+            "    def f(self):\n"
+            "        with self._lock:\n"
+            "            def cb():\n"
+            "                self._x = 1\n"
+            "            return cb\n"
+        )
+        findings = lint_source(src)
+        assert [f.rule for f in findings] == ["unlocked_shared_write"]
+
+
+class TestRealTree:
+    def test_serve_and_runtime_lint_clean(self):
+        findings = lint_paths(
+            [REPO / "src" / "repro" / "serve",
+             REPO / "src" / "repro" / "runtime"]
+        )
+        assert findings == [], "\n".join(str(f) for f in findings)
+
+    def test_cli_exit_code_counts_findings(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(UNLOCKED_WRITE)
+        rc = lint_main([str(bad)])
+        assert rc == 1
+        out = capsys.readouterr().out
+        assert "unlocked_shared_write" in out and "bad.py" in out
+
+    def test_cli_clean_exits_zero(self, tmp_path, capsys):
+        good = tmp_path / "good.py"
+        good.write_text("x = 1\n")
+        assert lint_main([str(good)]) == 0
+
+
+class TestStdlibOnly:
+    def test_module_imports_nothing_beyond_stdlib(self):
+        """The CI lint lane runs this file without jax (or repro)
+        installed — it must never grow a third-party import."""
+        tree = ast.parse(LINT_PATH.read_text())
+        mods = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                mods.update(a.name.split(".")[0] for a in node.names)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mods.add(node.module.split(".")[0])
+        assert mods <= {"ast", "dataclasses", "sys", "pathlib",
+                        "__future__"}, mods
+
+    def test_runs_as_a_bare_script(self):
+        # exactly the CI invocation shape: script path + tree args, no
+        # PYTHONPATH, no package context
+        proc = subprocess.run(
+            [sys.executable, str(LINT_PATH),
+             str(REPO / "src" / "repro" / "serve"),
+             str(REPO / "src" / "repro" / "runtime")],
+            capture_output=True, text=True, env={"PATH": "/usr/bin:/bin:/usr/local/bin"},
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "0 finding(s)" in proc.stdout
+
+
+def test_finding_is_hashable_and_ordered():
+    f = ConcurrencyFinding("unlocked_shared_write", "a.py", 3, "m")
+    assert hash(f) == hash(
+        ConcurrencyFinding("unlocked_shared_write", "a.py", 3, "m")
+    )

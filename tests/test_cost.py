@@ -1,0 +1,343 @@
+"""The static cost auditor (PR-10 tentpole).
+
+Covers: the relocated loop-aware HLO parser validated against XLA's own
+``compiled.cost_analysis()`` on loop-free programs, trip-count-weighted
+FLOPs on a scanned evolve against a hand count, ``memory_stats`` on a
+really-compiled module, the closed-form expected models, the
+``*_budget`` / ``no_remat`` cost rules (clean and seeded directions —
+including the seeded-regression proofs that a reintroduced transpose
+round-trip or double-buffer leak is reported with its rule named), and
+the committed-baseline diff (`diff_baseline`) that turns >10% cost drift
+into a CI failure.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.analysis as an
+from repro.analysis import cost as C
+from repro.analysis import rules as R
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+# Parser vs XLA's own cost model (loop-free programs)
+# ---------------------------------------------------------------------------
+
+
+class TestParserVsXla:
+    @pytest.mark.parametrize(
+        "fn,args",
+        [
+            (lambda x: jnp.sin(x) * 2.0 + x, (jnp.ones((64, 64)),)),
+            (lambda a, b: a @ b, (jnp.ones((32, 16)), jnp.ones((16, 8)))),
+            (
+                lambda x: jnp.roll(x, 1, 0) + jnp.roll(x, -1, 0) - 2.0 * x,
+                (jnp.ones((48, 48)),),
+            ),
+        ],
+    )
+    def test_flops_match_cost_analysis(self, fn, args):
+        compiled = jax.jit(fn).lower(*args).compile()
+        xla = compiled.cost_analysis()
+        xla = xla[0] if isinstance(xla, (list, tuple)) else xla
+        ours = C.analyze_hlo(compiled.as_text())
+        # XLA books transcendentals separately; our model counts them
+        # as one flop per element like everything elementwise
+        want = float(xla.get("flops", 0.0)) + float(
+            xla.get("transcendentals", 0.0)
+        )
+        if want:  # CPU backend reports flops for these programs
+            assert ours.flops == pytest.approx(want, rel=0.25)
+        assert ours.bytes > 0
+
+    def test_matmul_flops_exact(self):
+        hlo = _hlo(lambda a, b: a @ b, jnp.ones((8, 16)), jnp.ones((16, 4)))
+        assert C.analyze_hlo(hlo).flops == 2 * 8 * 16 * 4
+
+
+# ---------------------------------------------------------------------------
+# Loop weighting
+# ---------------------------------------------------------------------------
+
+
+class TestLoopWeighting:
+    def test_scan_body_is_trip_weighted(self):
+        n, trips = 64, 10
+
+        def step(c, _):
+            return c * 2.0 + 1.0, None  # 2n flops per trip
+
+        def evolve(x):
+            out, _ = jax.lax.scan(step, x, None, length=trips)
+            return out
+
+        rep = C.analyze_hlo(_hlo(evolve, jnp.ones((n,))))
+        # hand count: trips * 2n fused flops (XLA may fold the +1 away
+        # or add loop bookkeeping — stay within a factor-ish tolerance)
+        assert rep.flops == pytest.approx(trips * 2 * n, rel=0.5)
+        assert rep.loops, "while loop must be detected"
+        (lp,) = rep.loops
+        assert lp.trips == trips
+        assert lp.per_trip_flops * lp.trips == pytest.approx(
+            rep.flops, rel=0.5
+        )
+
+    def test_doubling_trips_doubles_cost(self):
+        def make(trips):
+            def evolve(x):
+                out, _ = jax.lax.scan(
+                    lambda c, _: (jnp.roll(c, 1) + c, None),
+                    x, None, length=trips,
+                )
+                return out
+
+            return C.analyze_hlo(_hlo(evolve, jnp.ones((128,))))
+
+        r1, r2 = make(8), make(16)
+        assert r2.flops == pytest.approx(2 * r1.flops, rel=0.05)
+
+    def test_fused_ch_scan_scales_with_steps(self):
+        # the audited evolve cell: trip-weighting on the real CH scan
+        pytest.importorskip("repro.core.cahn_hilliard")
+        from repro.core.cahn_hilliard import CahnHilliardADI, CHConfig
+
+        def rep(steps):
+            solver = CahnHilliardADI(
+                CHConfig(nx=32, ny=32, dt=1e-3, tune="off")
+            )
+            a = jnp.zeros((32, 32), jnp.float64)
+            compiled = solver.make_evolve(steps).lower(a, a).compile()
+            return C.analyze_hlo(compiled.as_text())
+
+        r4, r8 = rep(4), rep(8)
+        assert r8.flops == pytest.approx(2 * r4.flops, rel=0.10)
+        assert any(lp.trips == 8 for lp in r8.loops)
+
+
+# ---------------------------------------------------------------------------
+# memory_stats + CostVector
+# ---------------------------------------------------------------------------
+
+
+class TestMemoryStats:
+    def test_peak_covers_args_and_output(self):
+        n = 256
+        compiled = jax.jit(lambda x: x * 2.0).lower(
+            jnp.ones((n,), jnp.float64)
+        ).compile()
+        mem = C.memory_stats(compiled)
+        assert mem["peak_bytes"] >= 2 * n * 8 - mem["alias_bytes"]
+        assert mem["argument_bytes"] == n * 8
+
+    def test_measure_compiled_vector(self):
+        compiled = jax.jit(lambda x: jnp.sin(x)).lower(
+            jnp.ones((64,), jnp.float64)
+        ).compile()
+        v = C.measure_compiled(compiled)
+        assert v.flops > 0 and v.bytes > 0 and v.peak_memory > 0
+        assert v.intensity == pytest.approx(v.flops / v.bytes)
+        d = v.to_dict()
+        assert set(d) >= {"flops", "bytes", "peak_memory", "intensity"}
+
+
+# ---------------------------------------------------------------------------
+# Closed-form expected models
+# ---------------------------------------------------------------------------
+
+
+class TestExpectedModels:
+    def test_stencil_floor(self):
+        e = C.expected_stencil((64, 64), taps=5, itemsize=8)
+        n = 64 * 64
+        assert e.flops == 2 * 5 * n
+        assert e.bytes == 2 * n * 8  # read + write one field each
+        assert e.peak_memory == 3 * n * 8
+
+    def test_fft_floor_scales_n_log_n(self):
+        e1 = C.expected_fft((64, 64), itemsize=8)
+        e2 = C.expected_fft((128, 128), itemsize=8)
+        # n quadruples, log2 n grows: superlinear in n but < n^2
+        assert 4 < e2.flops / e1.flops < 8
+
+    def test_penta_floor(self):
+        # 2 substitution FMAs each way + 4 Woodbury FMAs = 16 flops/pt
+        e = C.expected_penta((32, 32), itemsize=8, sweeps=2)
+        assert e.flops == 16 * 32 * 32 * 2
+
+    def test_ch_step_combines_terms(self):
+        e = C.expected_ch_step((32, 32), itemsize=8)
+        assert e.flops > C.expected_penta((32, 32), 8, sweeps=2).flops
+
+
+# ---------------------------------------------------------------------------
+# Cost rules (check_cost)
+# ---------------------------------------------------------------------------
+
+
+def _ctx(expected, factors=None):
+    return {"expected": expected, "factors": factors or {}, "cell": "t/t/t"}
+
+
+class TestCostRules:
+    def test_within_budget_is_clean(self):
+        e = C.Expected(flops=100.0, bytes=100.0, peak_memory=100.0)
+        v = C.CostVector(flops=150.0, bytes=150.0, peak_memory=150.0)
+        assert R.check_cost(v, context=_ctx(e)) == []
+
+    @pytest.mark.parametrize(
+        "field,rule",
+        [
+            ("flops", "flops_budget"),
+            ("bytes", "bytes_budget"),
+            ("peak_memory", "peak_memory_budget"),
+        ],
+    )
+    def test_budget_breach_names_its_rule(self, field, rule):
+        e = C.Expected(flops=100.0, bytes=100.0, peak_memory=100.0)
+        kw = {"flops": 100.0, "bytes": 100.0, "peak_memory": 100.0}
+        kw[field] = 1e6  # way over any factor
+        findings = R.check_cost(C.CostVector(**kw), context=_ctx(e))
+        assert [f.rule for f in findings] == [rule]
+        assert findings[0].severity == "error"
+
+    def test_no_remat_fires_on_fat_loop_body(self):
+        e = C.Expected(
+            flops=1e6, bytes=1e6, peak_memory=1e6, step_bytes=100.0
+        )
+        lp = C.LoopCost(
+            body="body", trips=16, per_trip_flops=10.0,
+            per_trip_bytes=1e5,  # >> step budget
+        )
+        v = C.CostVector(
+            flops=1e6, bytes=1e6, peak_memory=1e6, loops=[lp]
+        )
+        names = [f.rule for f in R.check_cost(v, context=_ctx(e))]
+        assert "no_remat" in names
+
+    def test_single_trip_loop_exempt_from_no_remat(self):
+        e = C.Expected(flops=1e6, bytes=1e6, peak_memory=1e6,
+                       step_bytes=100.0)
+        lp = C.LoopCost(body="b", trips=1, per_trip_flops=1.0,
+                        per_trip_bytes=1e5)
+        v = C.CostVector(flops=1e6, bytes=1e6, peak_memory=1e6, loops=[lp])
+        assert "no_remat" not in [
+            f.rule for f in R.check_cost(v, context=_ctx(e))
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Seeded cost regressions through the real audit
+# ---------------------------------------------------------------------------
+
+
+_SEED_KW = dict(
+    operators=("laplacian",), families=("stencil2d",), backends=("jnp",),
+    shapes={"stencil2d": (32, 32)},
+)
+
+
+class TestSeededCostAudit:
+    def test_clean_cell_passes(self):
+        rep = an.run_cost_audit(**_SEED_KW)
+        audited = [r for r in rep.results if r.skipped is None]
+        assert audited and rep.ok
+        (cell,) = audited
+        assert cell.measured.flops > 0
+
+    def test_transpose_copy_trips_bytes_budget(self):
+        rep = an.run_cost_audit(**_SEED_KW, seed_violation="transpose_copy")
+        bad = [r for r in rep.results if not r.ok]
+        assert bad, "seeded transpose round-trip must breach a budget"
+        assert any(
+            f.rule == "bytes_budget"
+            for r in bad for f in r.findings
+        )
+
+    def test_double_buffer_trips_peak_memory_budget(self):
+        rep = an.run_cost_audit(**_SEED_KW, seed_violation="double_buffer")
+        assert any(
+            f.rule == "peak_memory_budget"
+            for r in rep.results for f in r.findings
+        )
+
+    def test_flops_waste_trips_flops_budget(self):
+        rep = an.run_cost_audit(**_SEED_KW, seed_violation="flops_waste")
+        assert any(
+            f.rule == "flops_budget"
+            for r in rep.results for f in r.findings
+        )
+
+    def test_remat_seed_trips_no_remat(self):
+        rep = an.run_cost_audit(
+            operators=("hyperdiffusion",), families=("fused_ch",),
+            backends=("jnp",), shapes={"fused_ch": (32, 32)},
+            seed_violation="remat",
+        )
+        assert any(
+            f.rule == "no_remat"
+            for r in rep.results for f in r.findings
+        )
+
+    def test_report_meta_is_stamped(self):
+        rep = an.run_cost_audit(**_SEED_KW)
+        assert rep.meta["schema_version"] == C.SCHEMA_VERSION
+        assert rep.meta["jax"] == jax.__version__
+        assert rep.meta["host"]
+
+
+# ---------------------------------------------------------------------------
+# Baseline diff
+# ---------------------------------------------------------------------------
+
+
+def _fake_report(flops=100.0, nbytes=100.0, peak=100.0, *, jaxv="0.4.37"):
+    return {
+        "meta": {"jax": jaxv, "schema_version": C.SCHEMA_VERSION},
+        "cells": {
+            "stencil2d/laplacian/jnp": {
+                "skipped": None,
+                "measured": {
+                    "flops": flops, "bytes": nbytes, "peak_memory": peak,
+                },
+            },
+        },
+    }
+
+
+class TestBaselineDiff:
+    def test_identical_reports_have_no_regressions(self):
+        regs, _ = an.diff_baseline(_fake_report(), _fake_report())
+        assert regs == []
+
+    def test_cost_drift_over_threshold_regresses(self):
+        regs, _ = an.diff_baseline(
+            _fake_report(nbytes=150.0), _fake_report()
+        )
+        assert regs and "bytes" in regs[0] and "1.50x" in regs[0]
+
+    def test_drift_within_threshold_is_quiet(self):
+        regs, _ = an.diff_baseline(
+            _fake_report(nbytes=105.0), _fake_report()
+        )
+        assert regs == []
+
+    def test_missing_cell_regresses(self):
+        cur = _fake_report()
+        cur["cells"] = {}
+        regs, _ = an.diff_baseline(cur, _fake_report())
+        assert regs and "missing" in regs[0]
+
+    def test_improvement_and_jax_change_are_notes(self):
+        regs, notes = an.diff_baseline(
+            _fake_report(nbytes=50.0, jaxv="9.9.9"), _fake_report()
+        )
+        assert regs == []
+        assert any("improved" in n for n in notes)
+        assert any("jax" in n for n in notes)

@@ -412,3 +412,98 @@ class TestSpectralArbitrage:
             np.asarray(plan.apply(x)), np.asarray(ref.apply(x)),
             rtol=1e-10, atol=1e-10,
         )
+
+
+# ---------------------------------------------------------------------------
+# The analytic cost prior (PR-10): prune without measuring, never flip
+# a winner
+# ---------------------------------------------------------------------------
+
+
+class TestCostPrior:
+    def test_prune_keeps_the_band_and_drops_the_rest(self):
+        cands = [{"w": 1}, {"w": 2}, {"w": 3}]
+        scores = {1: 100.0, 2: 120.0, 3: 1000.0}
+        kept, dropped = T.prune_candidates(
+            cands, lambda c: scores[c["w"]]
+        )
+        assert kept == [{"w": 1}, {"w": 2}]  # 1.2x is inside the band
+        assert dropped == [{"w": 3}]
+
+    def test_unscorable_candidates_always_race(self):
+        kept, dropped = T.prune_candidates(
+            [{"w": 1}, {"w": 2}],
+            lambda c: 1.0 if c["w"] == 1 else None,
+        )
+        assert dropped == [] and len(kept) == 2
+
+    def test_scoring_exception_means_keep(self):
+        def prior(c):
+            if c["w"] == 2:
+                raise RuntimeError("cannot model")
+            return float(c["w"])
+
+        kept, dropped = T.prune_candidates(
+            [{"w": 1}, {"w": 2}, {"w": 30}], prior
+        )
+        assert {"w": 2} in kept and dropped == [{"w": 30}]
+
+    def test_autotune_skips_measuring_dominated_candidates(self, cache):
+        calls = []
+
+        def build(cfg):
+            calls.append(cfg["w"])
+            return _toy_build(cfg)
+
+        best = T.autotune(
+            "toy", _toy_candidates(), build, ARGS, **KEY_KW,
+            mode="force", prior=lambda c: {1: 1.0, 2: 100.0}[c["w"]],
+        )
+        # a prune to a single survivor returns it without any timing
+        assert best == {"w": 1}
+        assert calls == []
+        assert T.stats.measure_runs == 0
+        assert T.stats.pruned == 1
+
+    def test_stencil_prior_prefers_direct_for_sparse_small(self):
+        prior = T.stencil_prior((64, 64), taps=5, itemsize=8)
+        direct = prior({"backend": "auto"})
+        fft = prior({"backend": "fft"})
+        assert direct < fft  # 5-tap laplacian at 64^2: direct wins
+        assert prior({"backend": "mystery"}) is None
+
+    def test_noprior_env_disables_pruning(self, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_NOPRIOR", "1")
+        assert not T.prior_enabled()
+        monkeypatch.setenv("REPRO_TUNE_NOPRIOR", "0")
+        assert T.prior_enabled()
+
+    def test_plan_prior_measures_strictly_less_same_winner_fp64(
+        self, cache, monkeypatch
+    ):
+        # the acceptance case: laplacian 64^2 backend='auto' races
+        # direct vs fft.  With the prior the fft candidate is pruned
+        # (strictly fewer measurements); the winner and the fp64
+        # numbers must be identical either way.
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal((64, 64)))
+
+        monkeypatch.setenv("REPRO_TUNE_NOPRIOR", "1")
+        T.reset_stats()
+        from repro import api
+
+        p_off = api.create("laplacian", (64, 64), tune="force", lint="off")
+        runs_off = T.stats.measure_runs
+        y_off = np.asarray(p_off.apply(x))
+
+        monkeypatch.delenv("REPRO_TUNE_NOPRIOR")
+        T.reset_stats()
+        p_on = api.create("laplacian", (64, 64), tune="force", lint="off")
+        runs_on = T.stats.measure_runs
+        y_on = np.asarray(p_on.apply(x))
+
+        assert runs_off >= 2, "without the prior both candidates race"
+        assert runs_on < runs_off, "the prior must measure strictly less"
+        assert T.stats.pruned >= 1
+        assert p_on.backend == p_off.backend
+        np.testing.assert_array_equal(y_on, y_off)
